@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: wall time of the jitted wrappers on this host
+(interpret-mode Pallas on CPU — structural check + ref-path timing; TPU is
+the performance target) plus the analytic FLOP counts used in §Roofline."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, iters=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    from repro.kernels.qgemm.ops import qgemm_padded
+    from repro.kernels.qgemm.ref import qgemm_ref
+    m = k = n = 256
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    s = np.ones(n, np.float32)
+    b = np.zeros(n, np.float32)
+    us_ref = _time(qgemm_ref, x, w, s, b)
+    us_pal = _time(qgemm_padded, x, w, s, b)
+    flops = 2 * m * k * n
+    rows.append(("qgemm_ref_256", us_ref, f"{flops/us_ref/1e3:.2f}GFLOPs"))
+    rows.append(("qgemm_pallas_interp_256", us_pal, "interpret-mode"))
+
+    from repro.kernels.dwconv.ops import dwconv, dwconv_ref
+    c, hw = 96, 56
+    xd = rng.integers(-127, 128, (c, hw, hw)).astype(np.int8)
+    wd = rng.integers(-127, 128, (c, 3, 3)).astype(np.int8)
+    sd = np.ones(c, np.float32)
+    bd = np.zeros(c, np.float32)
+    rows.append(("dwconv_ref_96x56", _time(dwconv_ref, xd, wd, sd, bd), ""))
+    rows.append(("dwconv_pallas_interp_96x56", _time(dwconv, xd, wd, sd, bd),
+                 "interpret-mode"))
+
+    from repro.kernels.decode_attn.ops import flash_decode, flash_decode_ref
+    B, K, G, HD, S = 2, 8, 5, 128, 2048
+    q = rng.standard_normal((B, 1, K, G, HD)).astype(np.float32)
+    ck = rng.standard_normal((B, S, K, HD)).astype(np.float32)
+    cv = rng.standard_normal((B, S, K, HD)).astype(np.float32)
+    lens = np.full(B, S, np.int32)
+    rows.append(("decode_attn_ref_2k", _time(flash_decode_ref, q, ck, cv, lens),
+                 f"cache={ck.nbytes*2/2**20:.0f}MiB"))
+    rows.append(("decode_attn_pallas_interp_2k",
+                 _time(flash_decode, q, ck, cv, lens), "interpret-mode"))
+    return rows

@@ -1,0 +1,163 @@
+"""One benchmark per paper table/figure (§VII), driven by the simulator with
+constants calibrated against the paper's measurements.
+
+Calibration: CPM (cycles/MAC) and FLASH_NS are fitted so that (a) the
+single-MCU whole-model K1 at 600 MHz matches Table I's 0.133 KB/MCycle and
+(b) the K1(150)/K1(600) ratio matches 0.211/0.133 (the memory-bound growth).
+The effective per-KB delay D_EFF reproduces Fig. 9's 3-MCU communication
+time (TCP/ack handling on the MCUs dominates the wire time).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.allocation import (WorkerParams, ratings_evenly, ratings_for,
+                                   ratings_freq_only)
+from repro.core.memory import layerwise_peak, peak_ram_per_worker, single_device_peak
+from repro.core.simulator import SimConfig, measured_kc, simulate, simulated_k1
+from repro.core.splitting import split_model
+from repro.models import mobilenet_v2
+
+# ---------------------------------------------------------------------------
+# calibration (solved in closed form; see docstring)
+# ---------------------------------------------------------------------------
+_K1_600_TARGET = 0.133        # Table I (KB/MCycle at 600 MHz)
+_K1_RATIO_TARGET = 0.211 / 0.133
+_D_EFF = 0.0063               # s/KB effective coordinator TCP overhead (Fig 9)
+# Table II was evidently measured with a lighter I/O path than Fig 9 (the
+# paper's own 3-MCU totals disagree: 9.8 s in Table II case 1 vs 42.97 s in
+# Fig 9); we calibrate each against its own baseline and keep one knob per
+# experiment.
+_D_EFF_T2 = 0.0006
+
+
+def calibrated_simconfig(model) -> SimConfig:
+    macs = model.total_macs()
+    out_kb = sum(l.n_out for l in model.layers) / 1024.0
+    # K1(f) = out_kb / (macs * (cpm + ns * f/1000) / 1e6)
+    # ratio: (cpm + 0.6 ns) / (cpm + 0.15 ns) = K1_RATIO  ->  ns = a * cpm
+    r = _K1_RATIO_TARGET
+    a = (r - 1.0) / (0.6 - r * 0.15)
+    # level: cpm * (1 + 0.6 a) = out_kb * 1e6 / (macs * K1_600)
+    level = out_kb * 1e6 / (macs * _K1_600_TARGET)
+    cpm = level / (1 + 0.6 * a)
+    return SimConfig(cycles_per_mac=cpm, flash_ns_per_mac=a * cpm)
+
+
+def _model():
+    return mobilenet_v2(input_hw=(112, 112))
+
+
+def table1_k1() -> list[tuple]:
+    """Table I: K1 under different clock frequencies."""
+    m = _model()
+    cfg = calibrated_simconfig(m)
+    paper = {600: 0.133, 450: 0.150, 150: 0.211}
+    rows = []
+    for f, target in paper.items():
+        k1 = simulated_k1(m, f, cfg)
+        rows.append((f"table1_k1_{f}MHz", k1, f"paper={target}"))
+    return rows
+
+
+_TABLE2_CASES = [
+    # (freqs MHz, injected delays s/KB) — Table II's 8 cases
+    ((600, 600, 600), (0, 0, 0)),
+    ((600, 150, 450), (0, 0, 0)),
+    ((150, 396, 528), (0, 0, 0)),
+    ((450, 396, 528), (0, 0, 0)),
+    ((600, 150, 450), (0.010, 0, 0.005)),
+    ((450, 396, 528), (0.020, 0.007, 0.013)),
+    ((600, 396, 150), (0.020, 0.005, 0.010)),
+    ((600, 600, 600), (0.010, 0.020, 0.005)),
+]
+
+_TABLE2_PAPER = [(9.80, 9.80, 9.80), (20.10, 12.40, 12.52),
+                 (22.30, 13.43, 13.37), (11.44, 10.75, 10.61),
+                 (32.81, 33.01, 31.50), (54.73, 54.20, 47.41),
+                 (53.08, 54.83, 44.45), (49.18, 49.18, 41.95)]
+
+
+def table2_allocation() -> list[tuple]:
+    """Table II: Evenly vs Freq-only vs rating-Optimized on 3 MCUs."""
+    m = _model()
+    cfg = calibrated_simconfig(m)
+    k1 = simulated_k1(m, 600, cfg)
+    kc = measured_kc(m, 3, cfg)
+    rows = []
+    for i, ((freqs, delays), paper) in enumerate(zip(_TABLE2_CASES,
+                                                     _TABLE2_PAPER), 1):
+        workers = [WorkerParams(f_mhz=f, d_s_per_kb=d + _D_EFF_T2)
+                   for f, d in zip(freqs, delays)]
+        even = simulate(m, workers, ratings_evenly(workers), cfg).total_time
+        freq = simulate(m, workers, ratings_freq_only(workers), cfg).total_time
+        opt = simulate(m, workers, ratings_for(workers, k1, kc), cfg).total_time
+        rows.append((f"table2_case{i}",
+                     f"{even:.2f}/{freq:.2f}/{opt:.2f}",
+                     f"paper={paper[0]}/{paper[1]}/{paper[2]}"))
+    return rows
+
+
+def fig8_layer_peak_ram() -> list[tuple]:
+    """Fig. 8: layer-wise peak RAM with 3 MCUs stays under the budget."""
+    m = _model()
+    plan = split_model(m, np.ones(3))
+    lw = layerwise_peak(plan)          # (L, 3) bytes, int8
+    worst = lw.max(axis=1)
+    return [
+        ("fig8_max_layer_peak_kb", worst.max() / 1024, "budget=512KB"),
+        ("fig8_layers_over_512k", int((worst > 512 * 1024).sum()),
+         f"of {len(m.layers)}"),
+        ("fig8_single_mcu_peak_kb", single_device_peak(m) / 1024,
+         "infeasible>512KB"),
+    ]
+
+
+def fig9_latency_scaling() -> list[tuple]:
+    """Fig. 9: total/comm/comp on 3/5/8 MCUs (paper: 42.97/45.61/56.89 s)."""
+    m = _model()
+    cfg = calibrated_simconfig(m)
+    paper_total = {3: 42.97, 5: 45.61, 8: 56.89}
+    rows = []
+    for n in (3, 5, 8):
+        w = [WorkerParams(d_s_per_kb=_D_EFF)] * n
+        r = simulate(m, w, cfg=cfg)
+        rows.append((f"fig9_total_{n}mcu_s", r.total_time,
+                     f"paper={paper_total[n]} comp={r.comp_time:.2f} "
+                     f"comm={r.comm_time:.2f}"))
+    return rows
+
+
+def fig10_fig11_layerwise() -> list[tuple]:
+    """Figs. 10-11: layer-wise comm grows / comp falls with more MCUs."""
+    m = _model()
+    cfg = calibrated_simconfig(m)
+    rows = []
+    res = {n: simulate(m, [WorkerParams(d_s_per_kb=_D_EFF)] * n, cfg=cfg)
+           for n in (3, 5, 8)}
+    rows.append(("fig10_comm_monotone",
+                 int(res[3].comm_time < res[5].comm_time < res[8].comm_time),
+                 f"{res[3].comm_time:.1f}<{res[5].comm_time:.1f}<{res[8].comm_time:.1f}"))
+    rows.append(("fig11_comp_monotone",
+                 int(res[3].comp_time > res[5].comp_time > res[8].comp_time),
+                 f"{res[3].comp_time:.1f}>{res[5].comp_time:.1f}>{res[8].comp_time:.1f}"))
+    early = res[8].layer_comm[:10].sum()
+    late = res[8].layer_comm[-10:].sum()
+    rows.append(("fig10_comm_concentrates_early", int(early > late),
+                 f"first10={early:.1f}s last10={late:.1f}s"))
+    return rows
+
+
+def fig12_scalability() -> list[tuple]:
+    """Fig. 12: per-MCU peak memory vs N up to 120 — early gains, saturation."""
+    m = _model()
+    rows = []
+    peaks = {}
+    for n in (1, 2, 4, 8, 16, 32, 64, 120):
+        peaks[n] = peak_ram_per_worker(split_model(m, np.ones(n))).max() / 1024
+        rows.append((f"fig12_peak_kb_{n}mcu", peaks[n], ""))
+    gain_early = peaks[1] / peaks[8]
+    gain_late = peaks[32] / peaks[120]
+    rows.append(("fig12_saturation", f"{gain_early:.1f}x@8 vs {gain_late:.2f}x@120",
+                 "diminishing returns"))
+    return rows

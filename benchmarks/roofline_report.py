@@ -1,0 +1,93 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL results.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f]
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | compile s | mem/dev GiB (args+temp) | collectives/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skipped ({r['reason'][:40]}…) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAILED | — | — | {r.get('error','')[:60]} |")
+            continue
+        mem = r["mem"]
+        total = (mem["argument"] + mem["temp"] + mem["output"] - mem["alias"])
+        coll = ", ".join(f"{k.split('-')[-1][:3]}:{v/2**30:.1f}G"
+                         for k, v in sorted(r["coll_bytes"].items()) if v > 2**20)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['t_compile_s']:.0f} | {_fmt_bytes(total)} | {coll or '<1MiB'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+           "MODEL/HLO flops | roofline frac | one-line diagnosis |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        diag = _diagnose(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+            f"{r['bottleneck']} | {r['useful_flops_frac']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {diag} |")
+    return "\n".join(out)
+
+
+def _diagnose(r) -> str:
+    b = r["bottleneck"]
+    if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+        if b == "memory":
+            return "cache+weight streaming bound (expected for bs-limited decode)"
+        if b == "collective":
+            return "per-step FSDP weight gathers dominate; widen batch or cache weights"
+    if b == "memory":
+        return "fusion-boundary traffic; bigger fusions / bf16 end-to-end would cut it"
+    if b == "collective":
+        return "SP all-gathers + dk/dv all-reduce; ring-attention or 2D sharding"
+    return "compute-bound: good; push MXU utilization via kernel fusion"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.jsonl"
+    rows = load(path)
+    print("### Dry-run\n")
+    print(dryrun_table(rows))
+    print("\n### Roofline\n")
+    print(roofline_table(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        coll = max(ok, key=lambda r: r["t_collective"] /
+                   max(r["t_compute"] + r["t_memory"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline_frac']:.4f})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']} "
+              f"(t_coll/t_rest = "
+              f"{coll['t_collective']/max(coll['t_compute']+coll['t_memory'],1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark driver: one function per paper table/figure + kernel bench.
+Prints ``name,value,derived`` CSV (run: PYTHONPATH=src python -m benchmarks.run).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import kernel_bench, paper_benchmarks as pb
+    suites = [
+        ("Table I (K1 calibration)", pb.table1_k1),
+        ("Table II (allocation strategies)", pb.table2_allocation),
+        ("Fig 8 (layer-wise peak RAM)", pb.fig8_layer_peak_ram),
+        ("Fig 9 (latency scaling)", pb.fig9_latency_scaling),
+        ("Figs 10-11 (layer-wise comm/comp)", pb.fig10_fig11_layerwise),
+        ("Fig 12 (memory scalability)", pb.fig12_scalability),
+        ("Kernels", kernel_bench.bench_kernels),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for title, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{title},ERROR,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for name, value, derived in rows:
+            if isinstance(value, float):
+                value = f"{value:.4f}"
+            print(f"{name},{value},{derived}")
+        print(f"# {title}: {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Split inference execution (paper §IV.D, Algorithm 4).
+
+Layer-by-layer protocol:
+  1. the coordinator routes each worker the input activations its assigned
+     output neurons need (RouteM / worker_input_regions);
+  2. each worker computes its assigned flat output range from its *local*
+     weight fragments only;
+  3. partial outputs return to the coordinator, are concatenated in flat
+     order (shards are contiguous ascending ranges, so concat == aggregate),
+     and become the next layer's input.
+
+Numerics are JAX (jnp) so the same executor drives float32 and int8 (W8A8,
+int32 accumulation) paths.  Workers only ever touch (a) their weight
+fragments and (b) the activation slice the coordinator routed them — the
+per-worker bounding-box slice of the padded input.  No worker ever holds a
+full layer's weights or activations, which is the paper's memory claim; the
+analytic accounting lives in core/memory.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .fusion import apply_activation
+from .mapping import worker_input_regions
+from .quantize import QuantizedModel, dequantize, quantize_activation, requantize
+from .reinterpret import LayerSpec
+from .splitting import LayerSplit, SplitPlan, WorkerShard
+
+
+def _pad_chw(x, padding):
+    ph, pw = padding
+    if ph == 0 and pw == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw)))
+
+
+def _conv_chw(x, w, stride, int8: bool):
+    """x: (Cin, H, W) padded; w: (Cout, Cin_g, kh, kw); VALID conv."""
+    lhs = x[None].astype(jnp.int32 if int8 else jnp.float32)
+    rhs = w.astype(jnp.int32 if int8 else jnp.float32)
+    groups = 1 if w.shape[1] == x.shape[0] else x.shape[0]
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=stride, padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32 if int8 else jnp.float32)
+    return out[0]
+
+
+def _worker_compute(layer: LayerSpec, shard: WorkerShard, x_pad,
+                    weight, bias, int8: bool):
+    """Compute the shard's flat output range using only the fragment weights
+    and the routed input slice.  Returns a flat vector of len n_positions
+    (raw accumulator: float32 or int32; bias added; activation NOT applied)."""
+    if shard.n_positions == 0:
+        dt = jnp.int32 if int8 else jnp.float32
+        return jnp.zeros((0,), dt)
+    c_out, h_out, w_out = layer.out_shape
+    hw = h_out * w_out
+    s, e = shard.start, shard.stop
+
+    if layer.kind == "linear":
+        # columns [s, e): fragment = weight[:, s:e]
+        frag = weight[:, s:e]
+        xv = x_pad.reshape(-1)
+        acc = (xv.astype(jnp.int32) @ frag.astype(jnp.int32)) if int8 else (
+            xv.astype(jnp.float32) @ frag.astype(jnp.float32))
+        return acc + bias[s:e]
+
+    # conv / dwconv: channels [c_lo, c_hi], output rows [row_lo, row_hi].
+    # Single-channel shards cover a row interval; multi-channel shards use the
+    # full row range (the union bbox over partial first/last channels).
+    c_lo, c_hi = s // hw, (e - 1) // hw
+    if c_hi > c_lo:
+        row_lo, row_hi = 0, h_out - 1
+    else:
+        row_lo = (s - c_lo * hw) // w_out
+        row_hi = (e - 1 - c_lo * hw) // w_out
+    sh, sw = layer.stride
+    kh, kw = layer.kernel
+    in_r0 = row_lo * sh
+    in_r1 = row_hi * sh + kh
+    x_slice = x_pad[:, in_r0:in_r1, :]
+    if layer.kind == "dwconv":
+        x_slice = x_slice[c_lo:c_hi + 1]
+    frag_w = weight[c_lo:c_hi + 1]
+    out = _conv_chw(x_slice, frag_w, layer.stride, int8)  # (nch, rows, w_out)
+    out = out + bias[c_lo:c_hi + 1][:, None, None]
+    # flat-select [s, e) out of the bbox
+    flat = out.reshape(-1)
+    offset = c_lo * hw + row_lo * w_out  # flat index of bbox origin... per-channel!
+    # bbox layout: channel-major over (c_lo..c_hi, row_lo..row_hi, w). Build
+    # the index map from global flat [s,e) to bbox flat.
+    idx = jnp.arange(s, e)
+    c = idx // hw
+    rem = idx % hw
+    r = rem // w_out
+    col = rem % w_out
+    n_rows = row_hi - row_lo + 1
+    bbox_idx = (c - c_lo) * (n_rows * w_out) + (r - row_lo) * w_out + col
+    return flat[bbox_idx]
+
+
+class SplitExecutor:
+    """Runs Algorithm 4 over a SplitPlan.
+
+    ``mode``: "float" (fp32) or "int8" (W8A8, requires a QuantizedModel).
+    """
+
+    def __init__(self, plan: SplitPlan, qmodel: QuantizedModel | None = None):
+        self.plan = plan
+        self.qmodel = qmodel
+
+    # -- single-layer worker pass -----------------------------------------
+    def _run_layer_float(self, layer: LayerSpec, split: LayerSplit, x):
+        if layer.kind == "avgpool":   # coordinator-side (§IV.D aggregation)
+            return jnp.mean(x, axis=(1, 2), keepdims=True)
+        x_pad = _pad_chw(x, layer.padding) if layer.kind != "linear" else x
+        w = jnp.asarray(layer.weight)
+        b = jnp.asarray(layer.bias if layer.bias is not None
+                        else np.zeros(layer.out_shape[0], np.float32))
+        parts = [
+            _worker_compute(layer, sh, x_pad, w, b, int8=False)
+            for sh in split.shards
+        ]
+        y = jnp.concatenate(parts).reshape(layer.out_shape)
+        return apply_activation(y, layer.activation)
+
+    def _run_layer_int8(self, i: int, layer: LayerSpec, split: LayerSplit, x_q):
+        ql = self.qmodel.layers[i]
+        if layer.kind == "avgpool":
+            # coordinator-side in real domain, then requantize
+            xf = dequantize(np.asarray(x_q), ql.in_scale)
+            y = xf.mean(axis=(1, 2), keepdims=True)
+            return jnp.asarray(quantize_activation(y, ql.out_scale))
+        x_pad = _pad_chw(x_q, layer.padding) if layer.kind != "linear" else x_q
+        w = jnp.asarray(ql.w_q)
+        b = jnp.asarray(ql.b_q.astype(np.int32))
+        parts = [
+            _worker_compute(layer, sh, x_pad, w, b, int8=True)
+            for sh in split.shards
+        ]
+        acc = np.asarray(jnp.concatenate(parts))  # int32 flat
+        c_of = (np.arange(layer.n_out) // (layer.out_shape[1] * layer.out_shape[2])
+                if layer.kind != "linear" else np.arange(layer.n_out))
+        y_q = requantize(acc, ql.in_scale, ql.w_scale, ql.out_scale,
+                         layer.activation, channel_of=c_of)
+        return jnp.asarray(y_q.reshape(layer.out_shape))
+
+    # -- full-model execution ----------------------------------------------
+    def run(self, x: np.ndarray, mode: str = "float",
+            collect_activations: bool = False):
+        """x: (C, H, W) input sample.  Returns final output (and per-layer
+        activations if requested — used for calibration)."""
+        model = self.plan.model
+        stash: dict[str, jnp.ndarray] = {}
+        acts = []
+        if mode == "int8":
+            if self.qmodel is None:
+                raise ValueError("int8 mode requires a QuantizedModel")
+            cur = jnp.asarray(quantize_activation(np.asarray(x), self.qmodel.input_scale))
+        else:
+            cur = jnp.asarray(x, dtype=jnp.float32)
+        for i, (layer, split) in enumerate(zip(model.layers, self.plan.splits)):
+            cur = cur.reshape(layer.in_shape)
+            if mode == "int8":
+                cur = self._run_layer_int8(i, layer, split, cur)
+            else:
+                cur = self._run_layer_float(layer, split, cur)
+            # coordinator-side residual bookkeeping (Alg. 4 line 9)
+            if layer.residual_from is not None:
+                other = stash[layer.residual_from]
+                if mode == "int8":
+                    ql = self.qmodel.layers[i]
+                    oth_scale, oth_idx = other
+                    yf = dequantize(np.asarray(cur), ql.out_scale) + \
+                        dequantize(np.asarray(oth_idx), oth_scale)
+                    cur = jnp.asarray(quantize_activation(yf, ql.out_scale))
+                else:
+                    cur = cur + other
+            if layer.save_as is not None:
+                if mode == "int8":
+                    stash[layer.save_as] = (self.qmodel.layers[i].out_scale, cur)
+                else:
+                    stash[layer.save_as] = cur
+            if collect_activations:
+                acts.append(np.asarray(cur))
+        if collect_activations:
+            return np.asarray(cur), acts
+        return np.asarray(cur)
+
+
+def reference_forward(model, x: np.ndarray, collect_activations: bool = False):
+    """Monolithic single-device forward (the infeasible-on-MCU baseline the
+    split execution must match numerically)."""
+    stash = {}
+    acts = []
+    cur = jnp.asarray(x, dtype=jnp.float32)
+    for layer in model.layers:
+        cur = cur.reshape(layer.in_shape)
+        if layer.kind == "avgpool":
+            cur = jnp.mean(cur, axis=(1, 2), keepdims=True)
+        elif layer.kind == "linear":
+            cur = cur.reshape(-1) @ jnp.asarray(layer.weight) + jnp.asarray(layer.bias)
+            cur = cur.reshape(layer.out_shape)
+            cur = apply_activation(cur, layer.activation)
+        else:
+            x_pad = _pad_chw(cur, layer.padding)
+            cur = _conv_chw(x_pad, jnp.asarray(layer.weight), layer.stride, int8=False)
+            cur = cur + jnp.asarray(layer.bias)[:, None, None]
+            cur = apply_activation(cur, layer.activation)
+        if layer.residual_from is not None:
+            cur = cur + stash[layer.residual_from]
+        if layer.save_as is not None:
+            stash[layer.save_as] = cur
+        if collect_activations:
+            acts.append(np.asarray(cur))
+    if collect_activations:
+        return np.asarray(cur), acts
+    return np.asarray(cur)

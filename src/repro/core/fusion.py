@@ -1,0 +1,52 @@
+"""Layer fusion (paper §V.D): fold BatchNorm into conv weights/bias and fuse
+the activation in-place, so conv+BN+ReLU becomes one composite operation.
+
+With BN parameters (gamma, beta, mean, var, eps):
+    y = gamma * (conv(x, W) + b - mean) / sqrt(var + eps) + beta
+      = conv(x, W * s[c]) + (b - mean) * s[c] + beta,   s = gamma / sqrt(var+eps)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNormParams:
+    gamma: np.ndarray
+    beta: np.ndarray
+    mean: np.ndarray
+    var: np.ndarray
+    eps: float = 1e-5
+
+
+def fold_batchnorm(weight: np.ndarray, bias: np.ndarray | None,
+                   bn: BatchNormParams) -> tuple[np.ndarray, np.ndarray]:
+    """Fold BN into a conv/dwconv weight (Cout, Cin_g, kh, kw) and bias."""
+    s = bn.gamma / np.sqrt(bn.var + bn.eps)
+    w = weight * s[:, None, None, None]
+    b = np.zeros(weight.shape[0], weight.dtype) if bias is None else bias
+    b = (b - bn.mean) * s + bn.beta
+    return w.astype(weight.dtype), b.astype(np.float32)
+
+
+def fold_batchnorm_linear(weight: np.ndarray, bias: np.ndarray | None,
+                          bn: BatchNormParams) -> tuple[np.ndarray, np.ndarray]:
+    """Same folding for a linear weight (in_features, out_features)."""
+    s = bn.gamma / np.sqrt(bn.var + bn.eps)
+    w = weight * s[None, :]
+    b = np.zeros(weight.shape[1], weight.dtype) if bias is None else bias
+    b = (b - bn.mean) * s + bn.beta
+    return w.astype(weight.dtype), b.astype(np.float32)
+
+
+def apply_activation(x, activation: str | None):
+    """In-place-style fused activation (works for numpy and jax arrays)."""
+    if activation is None:
+        return x
+    if activation == "relu":
+        return x * (x > 0)
+    if activation == "relu6":
+        return (x * (x > 0)).clip(max=6.0)
+    raise ValueError(f"unknown activation {activation!r}")

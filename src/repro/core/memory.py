@@ -1,0 +1,68 @@
+"""Peak-RAM accounting (paper §IV.B: peak memory = input activations +
+weight parameters + output activations; evaluated per layer per worker).
+
+This is the analytic counterpart of the paper's on-device heap probe
+(§VII.A Metrics): per worker per layer we count the routed input bytes
+(exact region sizes from the cross-layer mapping), the local weight-fragment
+bytes, and the assigned output bytes.  Weight fragments live in flash on the
+real system, but during computation the active kernel is staged in RAM, so
+the paper's peak includes all three terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .mapping import worker_input_regions
+from .splitting import SplitPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMemory:
+    layer_name: str
+    per_worker_in: np.ndarray       # routed input activation bytes
+    per_worker_weight: np.ndarray   # weight fragment bytes
+    per_worker_out: np.ndarray      # assigned output bytes
+
+    @property
+    def per_worker_peak(self) -> np.ndarray:
+        return self.per_worker_in + self.per_worker_weight + self.per_worker_out
+
+
+def plan_memory(plan: SplitPlan, itemsize: int = 1,
+                weight_itemsize: int | None = None) -> list[LayerMemory]:
+    """Per-layer, per-worker memory terms (itemsize=1 → int8 activations)."""
+    weight_itemsize = itemsize if weight_itemsize is None else weight_itemsize
+    out = []
+    n = plan.n_workers
+    for split in plan.splits:
+        layer = split.layer
+        regions = worker_input_regions(layer, split)
+        m_in = np.array([sum(r.n_points for r in regs) * itemsize
+                         for regs in regions], dtype=np.int64)
+        m_w = np.array([split.shard_of(w).weight_bytes * weight_itemsize
+                        for w in range(n)], dtype=np.int64)
+        m_out = np.array([split.shard_of(w).n_positions * itemsize
+                          for w in range(n)], dtype=np.int64)
+        out.append(LayerMemory(layer.name, m_in, m_w, m_out))
+    return out
+
+
+def peak_ram_per_worker(plan: SplitPlan, itemsize: int = 1) -> np.ndarray:
+    """max over layers of (in + weight + out) per worker — Fig. 12's metric."""
+    mems = plan_memory(plan, itemsize)
+    return np.max(np.stack([m.per_worker_peak for m in mems]), axis=0)
+
+
+def layerwise_peak(plan: SplitPlan, itemsize: int = 1) -> np.ndarray:
+    """(n_layers, n_workers) peak bytes — Fig. 8's metric."""
+    mems = plan_memory(plan, itemsize)
+    return np.stack([m.per_worker_peak for m in mems])
+
+
+def single_device_peak(model, itemsize: int = 1) -> int:
+    """Monolithic per-layer peak (full in + full weights + full out) — the
+    'infeasible on a single MCU' baseline (§VII.B.1)."""
+    return max((l.n_in + l.n_out) * itemsize + l.weight_bytes(itemsize)
+               for l in model.layers)

@@ -1,0 +1,102 @@
+"""Post-training int8 quantization (paper §V.D).
+
+Weights: symmetric per-output-channel int8.  Activations: symmetric
+per-tensor int8, calibrated from a float forward pass over calibration
+inputs (max-abs).  Accumulation in int32, requantization to the next layer's
+activation scale — matching an integer-arithmetic-only MCU runtime
+(Jacob et al., CVPR'18, the paper's [2]).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .fusion import apply_activation
+from .reinterpret import LayerSpec, ReinterpretedModel
+
+
+@dataclasses.dataclass
+class QuantizedLayer:
+    w_q: np.ndarray | None          # int8, same layout as LayerSpec.weight
+    w_scale: np.ndarray | None      # per-output-channel float scale
+    b_q: np.ndarray | None          # int32 bias at scale (s_in * s_w)
+    in_scale: float                 # activation scale feeding this layer
+    out_scale: float                # activation scale of this layer's output
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    model: ReinterpretedModel
+    layers: list[QuantizedLayer]
+    input_scale: float
+
+
+def quantize_tensor_per_channel(w: np.ndarray, channel_axis: int) -> tuple[np.ndarray, np.ndarray]:
+    mx = np.max(np.abs(w), axis=tuple(i for i in range(w.ndim) if i != channel_axis))
+    scale = np.maximum(mx, 1e-12) / 127.0
+    shape = [1] * w.ndim
+    shape[channel_axis] = -1
+    q = np.clip(np.round(w / scale.reshape(shape)), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float64)
+
+
+def quantize_activation(x: np.ndarray, scale: float) -> np.ndarray:
+    return np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+
+
+def dequantize(q: np.ndarray, scale) -> np.ndarray:
+    return q.astype(np.float32) * np.asarray(scale, dtype=np.float32)
+
+
+def calibrate_scales(model: ReinterpretedModel, calib_inputs: list[np.ndarray],
+                     forward_fn) -> list[float]:
+    """Max-abs activation scale per layer boundary.  ``forward_fn(model, x)``
+    must return the list of post-activation outputs per layer (float path)."""
+    n_layers = len(model.layers)
+    maxes = np.zeros(n_layers + 1)
+    for x in calib_inputs:
+        maxes[0] = max(maxes[0], float(np.max(np.abs(x))))
+        acts = forward_fn(model, x)
+        for i, a in enumerate(acts):
+            maxes[i + 1] = max(maxes[i + 1], float(np.max(np.abs(a))))
+    return list(np.maximum(maxes, 1e-12) / 127.0)
+
+
+def quantize_model(model: ReinterpretedModel, act_scales: list[float]) -> QuantizedModel:
+    """act_scales: length n_layers+1 (input scale followed by per-layer output
+    scales) from :func:`calibrate_scales`."""
+    assert len(act_scales) == len(model.layers) + 1
+    qlayers: list[QuantizedLayer] = []
+    for i, layer in enumerate(model.layers):
+        s_in, s_out = act_scales[i], act_scales[i + 1]
+        if layer.weight is None:
+            qlayers.append(QuantizedLayer(None, None, None, s_in, s_out))
+            continue
+        ch_axis = 0 if layer.kind in ("conv", "dwconv") else 1
+        w_q, w_s = quantize_tensor_per_channel(layer.weight, ch_axis)
+        bias = layer.bias if layer.bias is not None else np.zeros(
+            layer.weight.shape[ch_axis], np.float32)
+        b_q = np.round(bias / (s_in * w_s)).astype(np.int64)
+        qlayers.append(QuantizedLayer(w_q, w_s, b_q, s_in, s_out))
+    return QuantizedModel(model, qlayers, act_scales[0])
+
+
+def requantize(acc_i32: np.ndarray, s_in: float, w_scale: np.ndarray,
+               out_scale: float, activation: str | None,
+               channel_of: np.ndarray | None = None) -> np.ndarray:
+    """int32 accumulator -> int8 output at ``out_scale``.
+
+    ``channel_of``: for flat per-position accumulators, the output channel of
+    each position (to select the per-channel scale); None if acc is already
+    laid out (C, ...) with channel leading.
+    """
+    if channel_of is not None:
+        m = s_in * w_scale[channel_of]
+    else:
+        shape = [1] * acc_i32.ndim
+        shape[0] = -1
+        m = (s_in * w_scale).reshape(shape)
+    y_real = acc_i32.astype(np.float64) * m      # back to real-valued domain
+    y_real = apply_activation(y_real, activation)
+    return np.clip(np.round(y_real / out_scale), -127, 127).astype(np.int8)

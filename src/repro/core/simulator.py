@@ -1,0 +1,161 @@
+"""Networked-MCU simulator (paper §VII.D): one coordinator + N workers with
+the same partitioning and communication logic as the testbed, scaled to 120
+workers.
+
+Timing model (paper Eq. 1):
+    t_w = W_w / f_w + (d_w + 1/B_w) * f(W_w)
+with the compute term refined by a frequency-independent flash-access
+component that reproduces Table I's observation that K1 *rises* as the clock
+drops (memory-bound fraction grows with f):
+
+    cycles(macs, f) = macs * (CPM + FLASH_NS * f_mhz / 1000)
+
+Communication volumes are not modeled with Eq. 2's linear f(W)=K1*Kc*W
+approximation — they are *derived exactly* from the cross-layer activation
+mapping (RouteM): per layer, each worker downloads its input region bytes
+(duplication across overlapping receptive fields included) and uploads its
+assigned outputs.  Eq. 2's Kc then falls out of the simulation
+(Kc = comm_bytes / out_bytes per unit workload) instead of being assumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .allocation import WorkerParams
+from .mapping import comm_volume
+from .memory import layerwise_peak
+from .reinterpret import ReinterpretedModel, macs_for_positions
+from .splitting import SplitPlan, split_model
+
+
+@dataclasses.dataclass
+class SimConfig:
+    cycles_per_mac: float = 73.0      # CPM, calibrated vs Table I/II (bench)
+    flash_ns_per_mac: float = 118.0   # frequency-independent weight-fetch ns
+    itemsize: int = 1                 # int8 activations on the wire
+    overlap: bool = True              # §V.D eager partial-result streaming
+    coordinator_bw_kb_s: float = 115000.0  # PC side (GbE) — rarely binding
+
+
+@dataclasses.dataclass
+class SimResult:
+    layer_comp: np.ndarray      # (L,) per-layer compute critical path (s)
+    layer_comm: np.ndarray      # (L,) per-layer communication critical path (s)
+    layer_bytes: np.ndarray     # (L,) total bytes moved at this boundary
+    per_worker_comp: np.ndarray  # (L, N) compute seconds
+    per_worker_comm: np.ndarray  # (L, N)
+    peak_ram: np.ndarray        # (L, N) bytes
+
+    @property
+    def layer_total(self) -> np.ndarray:
+        return self.layer_comp + self.layer_comm
+
+    @property
+    def total_time(self) -> float:
+        return float(self.layer_total.sum())
+
+    @property
+    def comp_time(self) -> float:
+        return float(self.layer_comp.sum())
+
+    @property
+    def comm_time(self) -> float:
+        return float(self.layer_comm.sum())
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.layer_bytes.sum())
+
+
+def _comp_seconds(macs: np.ndarray, f_mhz: np.ndarray, cfg: SimConfig) -> np.ndarray:
+    cycles = macs * (cfg.cycles_per_mac + cfg.flash_ns_per_mac * f_mhz / 1000.0)
+    return cycles / (f_mhz * 1e6)
+
+
+def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
+             ratings: np.ndarray | None = None,
+             cfg: SimConfig | None = None,
+             plan: SplitPlan | None = None) -> SimResult:
+    """Run one end-to-end inference through the timing model.
+
+    ``ratings`` defaults to uniform; ``plan`` may be passed to reuse a split.
+    """
+    cfg = cfg or SimConfig()
+    n = len(workers)
+    if ratings is None:
+        ratings = np.ones(n)
+    if plan is None:
+        plan = split_model(model, ratings)
+    f_mhz = np.array([p.f_mhz for p in workers])
+    d = np.array([p.d_s_per_kb for p in workers])
+    inv_b = np.array([1.0 / p.b_kb_s for p in workers])
+
+    L = len(model.layers)
+    comp = np.zeros((L, n))
+    comm = np.zeros((L, n))
+    nbytes = np.zeros(L)
+    per_layer_total = np.zeros(L)
+    layer_comp_arr = np.zeros(L)
+    prev_split = None
+    for li, split in enumerate(plan.splits):
+        layer = split.layer
+        macs = np.array([macs_for_positions(layer, split.shard_of(w).n_positions)
+                         for w in range(n)], dtype=np.float64)
+        comp[li] = _comp_seconds(macs, f_mhz, cfg)
+        vol = comm_volume(prev_split, layer, split, itemsize=cfg.itemsize)
+        down_kb = vol.download_bytes / 1024.0
+        up_kb = vol.upload_bytes / 1024.0
+        # per-worker link time (Eq. 1's communication term, exact bytes)
+        t_down = (d + inv_b) * down_kb
+        t_up = (d + inv_b) * up_kb
+        comm[li] = t_down + t_up
+        nbytes[li] = vol.total_bytes
+        prev_split = split
+        # all traffic flows through the coordinator (§VI.B), which serializes
+        # sends/receives — the reason communication grows with N (Fig. 9/10)
+        t_down_serial = t_down.sum()
+        t_up_serial = t_up.sum()
+        max_comp = comp[li].max()
+        if cfg.overlap:
+            # eager partial results (§V.D): uploads stream while other
+            # workers still compute
+            totals = t_down_serial + np.maximum(max_comp, t_up_serial)
+        else:
+            totals = t_down_serial + max_comp + t_up_serial
+        per_layer_total[li] = totals
+        layer_comp_arr[li] = max_comp
+
+    layer_comp = layer_comp_arr
+    layer_comm = per_layer_total - layer_comp
+    return SimResult(layer_comp=layer_comp, layer_comm=layer_comm,
+                     layer_bytes=nbytes, per_worker_comp=comp,
+                     per_worker_comm=comm,
+                     peak_ram=layerwise_peak(plan, itemsize=cfg.itemsize))
+
+
+def measured_kc(model: ReinterpretedModel, n_workers: int,
+                cfg: SimConfig | None = None) -> float:
+    """Estimate Eq. 2's communication coefficient Kc by 'profiling or
+    simulation' (§V.B): bytes exchanged per byte of output produced."""
+    cfg = cfg or SimConfig()
+    plan = split_model(model, np.ones(n_workers))
+    total_out = sum(l.n_out for l in model.layers) * cfg.itemsize
+    total_comm = 0
+    prev = None
+    for split in plan.splits:
+        total_comm += comm_volume(prev, split.layer, split, cfg.itemsize).total_bytes
+        prev = split
+    return total_comm / max(total_out, 1)
+
+
+def simulated_k1(model: ReinterpretedModel, f_mhz: float,
+                 cfg: SimConfig | None = None) -> float:
+    """Table I's K1 (KB of output per Mcycle) at a given clock, single MCU,
+    no transfers (the paper's dummy-input measurement)."""
+    cfg = cfg or SimConfig()
+    macs = model.total_macs()
+    out_kb = sum(l.n_out for l in model.layers) * cfg.itemsize / 1024.0
+    mcycles = macs * (cfg.cycles_per_mac + cfg.flash_ns_per_mac * f_mhz / 1000.0) / 1e6
+    return out_kb / mcycles

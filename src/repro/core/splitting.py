@@ -1,0 +1,148 @@
+"""Fine-grained splitting strategy (paper §IV.B, Algorithms 1 and 2).
+
+Output neurons of every layer are partitioned into contiguous flat-index
+ranges, one per worker, proportional to capability ratings.  For conv layers
+the flat order is CHW row-major, so a worker's range touches a channel span
+``[c_lo, c_hi]`` and the worker receives exactly the kernels ``W[c]`` for the
+channels it touches (Alg. 1 lines 6–10: kernel assignment + usage counting).
+For linear layers each column of the weight matrix is one output neuron
+(Alg. 2), so the worker receives the columns in its range.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .reinterpret import LayerSpec, ReinterpretedModel, macs_for_positions
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerShard:
+    """One worker's share of one layer."""
+
+    worker: int
+    start: int                      # first assigned flat output index
+    stop: int                       # one past last assigned flat output index
+    # conv/dwconv: kernels (output channels) held locally, with usage counts
+    # (Alg. 1 "increment usage count") — c -> number of assigned positions.
+    kernel_usage: dict[int, int]
+    # linear: columns held locally (== range(start, stop)); conv: channel span.
+    weight_bytes: int               # fragment size at 1 byte/param (int8)
+
+    @property
+    def n_positions(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSplit:
+    layer: LayerSpec
+    shards: list[WorkerShard]
+
+    def shard_of(self, worker: int) -> WorkerShard:
+        return self.shards[worker]
+
+
+def partition_bounds(total: int, ratings: np.ndarray) -> np.ndarray:
+    """Contiguous partition of ``range(total)`` proportional to ratings.
+
+    Returns ``bounds`` of length N+1 with bounds[0]=0, bounds[-1]=total.
+    Uses cumulative rounding so the shares are within 1 of the exact
+    proportional amount and the partition is exact (no gaps/overlap) — the
+    paper's ``while i - s < n`` loop with the remainder landing on the last
+    worker, made deterministic.
+    """
+    ratings = np.asarray(ratings, dtype=np.float64)
+    if np.any(ratings < 0):
+        raise ValueError("ratings must be non-negative")
+    s = ratings.sum()
+    if s <= 0:
+        raise ValueError("at least one rating must be positive")
+    cum = np.cumsum(ratings) / s
+    bounds = np.round(cum * total).astype(np.int64)
+    bounds = np.concatenate([[0], bounds])
+    bounds[-1] = total  # guard rounding
+    # enforce monotonicity (rounding can momentarily tie)
+    bounds = np.maximum.accumulate(bounds)
+    return bounds
+
+
+def split_conv_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
+    """Algorithm 1: split a conv/dwconv layer across workers kernel-wise."""
+    if layer.kind not in ("conv", "dwconv"):
+        raise ValueError(f"not a conv layer: {layer.kind}")
+    c, h, w = layer.out_shape
+    hw = h * w
+    bounds = partition_bounds(c * hw, ratings)
+    per_kernel_params = int(np.prod(layer.weight.shape[1:])) if layer.weight is not None else 0
+    shards = []
+    for r in range(len(ratings)):
+        s, e = int(bounds[r]), int(bounds[r + 1])
+        usage: dict[int, int] = {}
+        if e > s:
+            c_lo, c_hi = s // hw, (e - 1) // hw
+            for c1 in range(c_lo, c_hi + 1):
+                # positions of channel c1 inside [s, e)
+                lo = max(s, c1 * hw)
+                hi = min(e, (c1 + 1) * hw)
+                usage[c1] = hi - lo
+        wbytes = len(usage) * per_kernel_params + len(usage)  # + per-channel bias
+        shards.append(WorkerShard(r, s, e, usage, wbytes))
+    return LayerSplit(layer, shards)
+
+
+def split_linear_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
+    """Algorithm 2: split a linear layer across workers column-wise."""
+    if layer.kind != "linear":
+        raise ValueError(f"not a linear layer: {layer.kind}")
+    h_in = layer.in_shape[0]
+    w_out = layer.out_shape[0]
+    bounds = partition_bounds(w_out, ratings)
+    shards = []
+    for r in range(len(ratings)):
+        s, e = int(bounds[r]), int(bounds[r + 1])
+        usage = {j: 1 for j in range(s, e)}  # one column per output neuron
+        wbytes = (e - s) * h_in + (e - s)
+        shards.append(WorkerShard(r, s, e, usage, wbytes))
+    return LayerSplit(layer, shards)
+
+
+def split_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
+    if layer.kind in ("conv", "dwconv"):
+        return split_conv_layer(layer, ratings)
+    if layer.kind == "linear":
+        return split_linear_layer(layer, ratings)
+    # avgpool & friends stay coordinator-side: zero-weight single "shard".
+    n = layer.n_out
+    shards = [WorkerShard(r, 0, 0, {}, 0) for r in range(len(ratings))]
+    return LayerSplit(layer, shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """Full-model split: per-layer shards + per-worker totals."""
+
+    model: ReinterpretedModel
+    splits: list[LayerSplit]
+    ratings: np.ndarray
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.ratings)
+
+    def worker_weight_bytes(self, worker: int) -> int:
+        return sum(sp.shard_of(worker).weight_bytes for sp in self.splits)
+
+    def worker_macs(self, worker: int) -> int:
+        return sum(
+            macs_for_positions(sp.layer, sp.shard_of(worker).n_positions)
+            for sp in self.splits)
+
+
+def split_model(model: ReinterpretedModel, ratings) -> SplitPlan:
+    """Split every layer with the same ratings vector (paper reuses R across
+    layers; per-layer ratings are supported by calling split_layer directly)."""
+    ratings = np.asarray(ratings, dtype=np.float64)
+    splits = [split_layer(l, ratings) for l in model.layers]
+    return SplitPlan(model=model, splits=splits, ratings=ratings)

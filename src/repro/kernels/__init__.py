@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ the serving
+decode path).  Each kernel ships with ops.py (jit wrapper) and ref.py
+(pure-jnp oracle); validated with interpret=True on CPU, TPU is the target.
+"""

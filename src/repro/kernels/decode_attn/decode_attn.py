@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: GQA flash-decode (one query token vs a long KV cache).
+
+The serving hot-spot of the assigned LM shapes (decode_32k / long_500k):
+memory-bound streaming of the KV cache through VMEM with an online-softmax
+accumulator.  Grid = (batch, kv_heads, S // block_s) with the innermost
+dimension streaming cache blocks; (m, l, acc) scratch stays VMEM-resident
+per (b, k) so the cache is read exactly once from HBM.
+
+Per-(b,k) block work: logits (G, bs) = q (G, hd) @ k_blk^T (hd, bs) — G and
+hd are MXU-aligned multiples for the assigned archs (G*hd >= 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_s: int, n_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                  # (G, hd)
+    k = k_ref[0, 0]                                  # (bs, hd)
+    v = v_ref[0, 0]                                  # (bs, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (G, bs)
+    # mask cache slots beyond the valid length
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(pos < len_ref[0], logits, NEG_INF)
+
+    m_prev = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                      # (G, bs)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attn(q, k, v, lengths, *, block_s: int = 512,
+                interpret: bool = True):
+    """q: (B, K, G, hd); k, v: (B, K, S, hd); lengths: (B,) int32 valid
+    cache lengths.  Returns (B, K, G, hd) in q.dtype."""
+    b, kh, g, hd = q.shape
+    s = k.shape[2]
+    assert s % block_s == 0, (s, block_s)
+    n_s = s // block_s
+    kernel = functools.partial(_decode_attn_kernel, block_s=block_s, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1,), lambda bi, ki, si: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)

@@ -1,0 +1,30 @@
+"""jit'd wrapper for flash-decode: accepts model-layout tensors
+(q (B,1,K,G,hd), cache (B,S,K,hd)) and pads S to the block multiple."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .decode_attn import decode_attn
+from .ref import decode_attn_ref
+
+
+def flash_decode(q, cache_k, cache_v, lengths, *, block_s: int = 512,
+                 interpret: bool = True):
+    """q: (B, 1, K, G, hd); cache_k/v: (B, S, K, hd); lengths: (B,).
+    Returns (B, 1, K, G, hd)."""
+    qk = q[:, 0]                                     # (B, K, G, hd)
+    k = cache_k.transpose(0, 2, 1, 3)                # (B, K, S, hd)
+    v = cache_v.transpose(0, 2, 1, 3)
+    pad = (-k.shape[2]) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = decode_attn(qk, k, v, lengths, block_s=block_s, interpret=interpret)
+    return out[:, None]
+
+
+def flash_decode_ref(q, cache_k, cache_v, lengths):
+    qk = q[:, 0]
+    k = cache_k.transpose(0, 2, 1, 3)
+    v = cache_v.transpose(0, 2, 1, 3)
+    return decode_attn_ref(qk, k, v, lengths)[:, None]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k, v, lengths):
+    """q: (B, K, G, hd); k, v: (B, K, S, hd); lengths: (B,)."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    s = k.shape[2]
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

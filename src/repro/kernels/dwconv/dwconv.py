@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: int8 3x3 depthwise convolution with fused folded-BN +
+ReLU6 + requantization (MobileNetV2's hot-spot op, §VI).
+
+Depthwise conv has no reduction over channels, so it is VPU (not MXU) work:
+each grid step loads a (block_c, H+2, W+2) pre-padded input tile into VMEM
+and accumulates the 9 shifted element-wise products in int32 — the whole
+channel tile's activations stay VMEM-resident through the epilogue.
+Channels are independent ("kernel-wise" in the paper's splitting), so the
+channel grid dimension is also the natural TP/split axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
+                   *, stride: int, activation: str | None,
+                   out_scale: float | None):
+    x = x_ref[...].astype(jnp.int32)              # (bc, H+2, W+2)
+    w = w_ref[...].astype(jnp.int32)              # (bc, 3, 3)
+    oh, ow = o_ref.shape[1], o_ref.shape[2]
+    acc = jnp.zeros((x.shape[0], oh, ow), jnp.int32)
+    for i in range(3):
+        for j in range(3):
+            window = jax.lax.slice(
+                x, (0, i, j), (x.shape[0], i + (oh - 1) * stride + 1,
+                               j + (ow - 1) * stride + 1),
+                (1, stride, stride))
+            acc += window * w[:, i, j][:, None, None]
+    y = acc.astype(jnp.float32) * scale_ref[...][:, None, None] \
+        + bias_ref[...][:, None, None]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "relu6":
+        y = jnp.clip(y, 0.0, 6.0)
+    if out_scale is not None:
+        o_ref[...] = jnp.clip(jnp.round(y / out_scale), -127, 127).astype(jnp.int8)
+    else:
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "activation",
+                                             "out_scale", "block_c",
+                                             "interpret"))
+def dwconv3x3(x_pad, w, scale, bias, *, stride: int = 1,
+              activation: str | None = None, out_scale: float | None = None,
+              block_c: int = 8, interpret: bool = True):
+    """x_pad: (C, H+2, W+2) int8 (pre-padded by 1); w: (C, 3, 3) int8;
+    scale/bias: (C,) f32.  Returns (C, oh, ow) int8 or f32.
+    C must be a multiple of block_c (ops.py pads)."""
+    c, hp, wp = x_pad.shape
+    assert c % block_c == 0
+    oh = (hp - 3) // stride + 1
+    ow = (wp - 3) // stride + 1
+    out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    kernel = functools.partial(_dwconv_kernel, stride=stride,
+                               activation=activation, out_scale=out_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, hp, wp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c, 3, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_c, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), out_dtype),
+        interpret=interpret,
+    )(x_pad, w, scale, bias)

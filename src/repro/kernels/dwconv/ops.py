@@ -1,0 +1,29 @@
+"""jit'd wrapper for the depthwise conv kernel: pads channels to the block
+multiple and the spatial dims by 1 (SAME padding for 3x3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .dwconv import dwconv3x3
+from .ref import dwconv3x3_ref
+
+
+def dwconv(x_q, w, scale, bias, *, stride: int = 1, activation=None,
+           out_scale=None, block_c: int = 8, interpret: bool = True):
+    """x_q: (C, H, W) int8 (unpadded); SAME 3x3 depthwise conv."""
+    c = x_q.shape[0]
+    pad_c = (-c) % block_c
+    xp = jnp.pad(x_q, ((0, pad_c), (1, 1), (1, 1)))
+    wp = jnp.pad(w, ((0, pad_c), (0, 0), (0, 0)))
+    sp = jnp.pad(scale, (0, pad_c))
+    bp = jnp.pad(bias, (0, pad_c))
+    out = dwconv3x3(xp, wp, sp, bp, stride=stride, activation=activation,
+                    out_scale=out_scale, block_c=block_c, interpret=interpret)
+    return out[:c]
+
+
+def dwconv_ref(x_q, w, scale, bias, *, stride: int = 1, activation=None,
+               out_scale=None):
+    xp = jnp.pad(x_q, ((0, 0), (1, 1), (1, 1)))
+    return dwconv3x3_ref(xp, w, scale, bias, stride=stride,
+                         activation=activation, out_scale=out_scale)

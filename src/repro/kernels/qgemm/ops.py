@@ -1,0 +1,81 @@
+"""jit'd public wrappers around the qgemm Pallas kernel: padding to block
+multiples, plus the im2col path that lowers the paper's quantized conv +
+folded-BN + ReLU6 onto the GEMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .qgemm import qgemm
+from .ref import qgemm_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qgemm_padded(x_q, w_q, scale, bias, *, activation=None, out_scale=None,
+                 block_m=128, block_n=128, block_k=128, interpret=True):
+    """qgemm on arbitrary shapes (pads to block multiples, slices back)."""
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xp = _pad_to(_pad_to(x_q, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w_q, block_k, 0), block_n, 1)
+    sp = _pad_to(scale, block_n, 0)
+    bp = _pad_to(bias, block_n, 0)
+    out = qgemm(xp, wp, sp, bp, activation=activation, out_scale=out_scale,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                interpret=interpret)
+    return out[:m, :n]
+
+
+def im2col(x_q, kernel_hw, stride, padding):
+    """x_q: (C, H, W) int8 -> (out_h*out_w, C*kh*kw) patches (CHW order,
+    matching core/reinterpret's flat-index convention)."""
+    c, h, w = x_q.shape
+    kh, kw = kernel_hw
+    sh, sw = stride
+    ph, pw = padding
+    xp = jnp.pad(x_q, ((0, 0), (ph, ph), (pw, pw)))
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    idx_h = (jnp.arange(oh) * sh)[:, None] + jnp.arange(kh)[None, :]
+    idx_w = (jnp.arange(ow) * sw)[:, None] + jnp.arange(kw)[None, :]
+    patches = xp[:, idx_h[:, None, :, None], idx_w[None, :, None, :]]
+    # (C, oh, ow, kh, kw) -> (oh*ow, C*kh*kw)
+    patches = patches.transpose(1, 2, 0, 3, 4).reshape(oh * ow, c * kh * kw)
+    return patches, (oh, ow)
+
+
+def qconv2d(x_q, w_q, scale, bias, *, stride=(1, 1), padding=(0, 0),
+            activation=None, out_scale=None, interpret=True):
+    """Quantized conv via im2col + qgemm (paper's conv+BN+ReLU6 fused op).
+
+    x_q: (C, H, W) int8; w_q: (Cout, Cin, kh, kw) int8;
+    scale/bias: (Cout,) f32 (BN folded).  Returns (Cout, oh, ow).
+    """
+    cout, cin, kh, kw = w_q.shape
+    patches, (oh, ow) = im2col(x_q, (kh, kw), stride, padding)
+    w2 = w_q.reshape(cout, cin * kh * kw).T          # (C*kh*kw, Cout)
+    y = qgemm_padded(patches, w2, scale, bias, activation=activation,
+                     out_scale=out_scale, interpret=interpret)
+    return y.T.reshape(cout, oh, ow)
+
+
+def qconv2d_ref(x_q, w_q, scale, bias, *, stride=(1, 1), padding=(0, 0),
+                activation=None, out_scale=None):
+    """Oracle for qconv2d built on the qgemm oracle."""
+    cout, cin, kh, kw = w_q.shape
+    patches, (oh, ow) = im2col(x_q, (kh, kw), stride, padding)
+    w2 = w_q.reshape(cout, cin * kh * kw).T
+    y = qgemm_ref(patches, w2, scale, bias, activation=activation,
+                  out_scale=out_scale)
+    return y.T.reshape(cout, oh, ow)

@@ -1,0 +1,390 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / peak_FLOPs            (per device)
+    memory term     = HLO_bytes / HBM_bw                (per device)
+    collective term = collective_bytes / link_bw        (per device)
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+a 10-trip scan reports exactly 1/10 of the unrolled FLOPs), and collective
+traffic isn't reported at all.  Since every model here scans its layer stack,
+we parse the compiled HLO text ourselves, walking the computation graph with
+loop trip counts (extracted from each loop-condition constant):
+
+  * FLOPs: dot/convolution instructions — 2 * |result| * |contracted dims|
+    (elementwise flops are negligible against the matmuls at these shapes).
+  * HBM bytes: per top-level instruction, operand bytes + result bytes —
+    the fusion-boundary traffic model XLA itself uses (internal ops of a
+    fusion are cache-local).  Structural ops (parameter/tuple/gte/constant/
+    bitcast) are free; while/call/fusion recurse instead of self-counting.
+  * Collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e hardware constants (assignment sheet)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"=\s*(?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                        r"([a-z0-9\-]+)\(")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_OPS = {"parameter", "tuple", "get-tuple-element", "constant", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id", "domain",
+             "opt-barrier", "custom-call"}
+
+
+def _shape_list(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(dt: str, dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class _Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "_Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        # computation header: `%name (params...) -> type {` — params may
+        # contain nested tuple parens, so only anchor on name + trailing `{`.
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if m and line.rstrip().endswith("{") and ("->" in line or
+                                                  line.startswith("ENTRY")):
+            cur_name, cur_lines = m.group(1), []
+            continue
+        if line.startswith("}") and cur_name is not None:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def _result_shapes(line: str, om) -> list[tuple[str, list[int]]]:
+    """Result-type shapes: the _OPCODE_RE match spans `= TYPE opcode(` —
+    every shape token inside the span belongs to the result type."""
+    return _shape_list(line[om.start():om.end()])
+
+
+def _symbols(body: str) -> dict[str, list[tuple[str, list[int]]]]:
+    """var name -> list of (dtype, dims) from each instruction's result type
+    (post-optimization HLO omits operand types at use sites)."""
+    sym: dict[str, list[tuple[str, list[int]]]] = {}
+    for line in body.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        om = _OPCODE_RE.search(line)
+        sym[m.group(1)] = (_result_shapes(line, om) if om
+                           else _shape_list(m.group(2).split("(")[0]))
+    return sym
+
+
+def _operand_shapes(line: str, start: int, sym) -> list[tuple[str, list[int]]]:
+    close = line.find(")", start)
+    seg = line[start:close if close >= 0 else len(line)]
+    shapes = _shape_list(seg)            # inline-typed operands (if any)
+    if shapes:
+        return shapes
+    out = []
+    for name in re.findall(r"%([\w\.\-]+)", seg):
+        out.extend(sym.get(name, []))
+    return out
+
+
+_COLL_LINK_FACTOR = {
+    # per-device link traffic model (ring algorithms):
+    #   all-gather: receive (result - shard) ~ result
+    #   reduce-scatter: send ~ operand
+    #   all-reduce: RS + AG ~ 2x operand
+    #   all-to-all / collective-permute: ~ operand
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-reduce": ("operand", 2.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+}
+
+
+def _instruction_cost(line: str, sym) -> _Totals:
+    t = _Totals()
+    m = _OPCODE_RE.search(line)
+    if not m:
+        return t
+    op = m.group(1)
+    if op in _SKIP_OPS or op in ("while", "call", "fusion", "conditional"):
+        return t
+    line_nometa = line.split(", metadata=")[0]
+    result = _result_shapes(line_nometa, m)
+    operands = _operand_shapes(line_nometa, m.end(), sym)
+    res_bytes = sum(_nbytes(dt, d) for dt, d in result)
+    opd_bytes = sum(_nbytes(dt, d) for dt, d in operands)
+    base = op
+    for suf in ("-start", "-done"):
+        if base.endswith(suf):
+            base = base[: -len(suf)]
+    if base in _COLL_OPS:
+        if not op.endswith("-done"):
+            kind, mult = _COLL_LINK_FACTOR[base]
+            t.coll[base] = t.coll.get(base, 0.0) + mult * (
+                res_bytes if kind == "result" else (opd_bytes or res_bytes))
+        return t
+    if op == "dynamic-update-slice":
+        # in-place on the donated buffer: traffic = the updated slice (r+w),
+        # not the whole operand (decode-cache writes would otherwise count
+        # the full 32k cache per token).
+        upd = operands[1] if len(operands) > 1 else result
+        t.bytes += 2 * _nbytes(*upd) if upd else 0
+        return t
+    if op == "dynamic-slice":
+        # reading one scan step's slice out of a stacked buffer moves the
+        # slice, not the buffer
+        t.bytes += 2 * res_bytes
+        return t
+    t.bytes += res_bytes + opd_bytes
+    if op == "dot":
+        cd = _CDIMS_RE.search(line)
+        contracted = 1
+        if cd and operands:
+            lhs_dims = operands[0][1]
+            for i in (int(x) for x in cd.group(1).split(",") if x):
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+        n_out = 1
+        for dt, dims in result[:1]:
+            for d in dims:
+                n_out *= d
+        t.flops += 2.0 * n_out * contracted
+    elif op == "convolution":
+        n_out = 1
+        for dt, dims in result[:1]:
+            for d in dims:
+                n_out *= d
+        if len(operands) >= 2:
+            rhs = operands[1][1]
+            k = 1
+            for d in rhs[:-1]:
+                k *= d
+            t.flops += 2.0 * n_out * k / max(rhs[-1], 1)
+        else:
+            t.flops += 2.0 * n_out
+    return t
+
+
+def analyze_hlo(hlo: str) -> _Totals:
+    """Loop-aware totals over the ENTRY computation."""
+    comps = _split_computations(hlo)
+    memo: dict[str, _Totals] = {}
+
+    def walk(name: str) -> _Totals:
+        if name in memo:
+            return memo[name]
+        memo[name] = _Totals()      # cycle guard
+        acc = _Totals()
+        body = comps.get(name, "")
+        sym = _symbols(body)
+        for line in body.splitlines():
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, wbody = wm.group(1), wm.group(2)
+                acc.add(walk(wbody), _trip_count(comps.get(cond, "")))
+                continue
+            om = _OPCODE_RE.search(line)
+            if om and om.group(1) in ("call", "conditional"):
+                cm = _TOAPPLY_RE.search(line)
+                if cm:
+                    acc.add(walk(cm.group(1)))
+                continue
+            if om and om.group(1) == "fusion":
+                # fusion internals are cache-local: count boundary traffic.
+                # In-place update fusions (a dynamic-update-slice writing one
+                # scan step's slice into a stacked buffer) alias the big
+                # operand: count only the small operands (the written slice),
+                # not the full buffer — otherwise a 4096-step sLSTM scan
+                # "moves" its residual buffer 4096 times (TiBs of phantom
+                # traffic).
+                line_nometa = line.split(", metadata=")[0]
+                result = _result_shapes(line_nometa, om)
+                operands = _operand_shapes(line_nometa, om.end(), sym)
+                cm = _TOAPPLY_RE.search(line)
+                callee = comps.get(cm.group(1), "") if cm else ""
+                res_set = {(dt, tuple(d)) for dt, d in result}
+                aliased = [op for op in operands
+                           if (op[0], tuple(op[1])) in res_set]
+                res_bytes = sum(_nbytes(dt, d) for dt, d in result)
+                if aliased and "dynamic-update-slice" in callee:
+                    small = sum(_nbytes(dt, d) for dt, d in operands
+                                if (dt, tuple(d)) not in res_set)
+                    acc.bytes += 2 * small    # read inputs + write the slice
+                elif "dynamic-slice(" in callee:
+                    # slicing fusion: drop operands much larger than the
+                    # result (the stacked buffer being indexed)
+                    acc.bytes += res_bytes + sum(
+                        _nbytes(dt, d) for dt, d in operands
+                        if _nbytes(dt, d) <= 4 * max(res_bytes, 1))
+                else:
+                    acc.bytes += res_bytes
+                    acc.bytes += sum(_nbytes(dt, d) for dt, d in operands)
+                continue
+            acc.add(_instruction_cost(line, sym))
+        memo[name] = acc
+        return acc
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        acc = _Totals()
+        sym: dict = {}
+        for line in hlo.splitlines():
+            acc.add(_instruction_cost(line, sym))
+        return acc
+    return walk(entry)
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    return analyze_hlo(hlo).coll
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per-device HLO flops (loop-aware)
+    hbm_bytes: float             # per-device bytes (fusion-boundary model)
+    coll_bytes: dict[str, float]
+    model_flops: float           # analytic 6*N*D (or decode equivalent) /chip
+    peak_mem_bytes: float        # per-device (args+temp) from memory_analysis
+    xla_flops: float = 0.0       # raw cost_analysis (loop-unaware, reference)
+    xla_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes.values()) / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-compute time over the achievable step time max(terms) —
+        the MFU the dry-run's schedule would deliver at best."""
+        t_star = self.model_flops / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / max(t_bound, 1e-30)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS per global step: 6*N*D train (fwd+bwd), 2*N*D
+    forward-only; D = processed tokens; MoE uses active params."""
+    n = cfg.n_active_params()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence
+
+
+def summarize(compiled, hlo_text: str, cfg, shape, mesh_desc: str,
+              n_chips: int) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    peak = (getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0))
+    tot = analyze_hlo(hlo_text)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_desc,
+        flops=tot.flops,
+        hbm_bytes=tot.bytes,
+        coll_bytes=tot.coll,
+        model_flops=model_flops_for(cfg, shape) / n_chips,
+        peak_mem_bytes=float(peak),
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+    )

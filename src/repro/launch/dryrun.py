@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) cell against the production meshes and record
+memory/cost/collective analysis for EXPERIMENTS.md §Dry-run and §Roofline.
+
+The two lines above MUST precede any jax import: jax locks the device count
+on first init, and the dry-run needs 512 placeholder host devices.  Smoke
+tests and benches never import this module, so they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+Options: --multi-pod (2x16x16 mesh), --routing {direct,coordinator},
+         --seq-parallel, --print-hlo
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, LM_SHAPES, get_config, get_shape, shape_applicable
+from ..models import lm
+from ..train import serve as serve_lib
+from ..train import trainer as trainer_lib
+from ..train.optimizer import OptConfig
+from ..parallel.sharding import make_rules, use_rules
+from . import analysis
+from .mesh import make_production_mesh
+
+
+def input_specs(cfg, shape, rules):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape.mode == "train":
+        return trainer_lib.batch_specs(cfg, shape, rules)
+    return serve_lib.serve_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                       rules)
+
+
+def lower_cell(cfg, shape, mesh, routing: str = "direct",
+               seq_parallel: bool = True, microbatches: int = 1):
+    """Build + lower the jitted step for one (arch x shape x mesh) cell.
+    Returns (lowered, n_chips)."""
+    n_chips = mesh.size
+    if shape.mode == "train":
+        opts = trainer_lib.TrainOptions(routing=routing,
+                                        seq_parallel=seq_parallel,
+                                        microbatches=microbatches)
+        step, rules = trainer_lib.make_train_step(cfg, OptConfig(), mesh, opts)
+        params, opt = trainer_lib.abstract_train_state(cfg, rules)
+        batch = input_specs(cfg, shape, rules)
+        with mesh:
+            lowered = step.lower(params, opt, batch)
+        return lowered, n_chips
+    if shape.mode == "prefill":
+        step, rules = serve_lib.make_prefill_step(
+            cfg, mesh, shape.global_batch, shape.seq_len, routing=routing)
+        params, _ = serve_lib.abstract_serve_params(cfg, rules)
+        cache = serve_lib.abstract_cache(cfg, shape.global_batch,
+                                         shape.seq_len, rules)
+        batch = input_specs(cfg, shape, rules)
+        with mesh:
+            lowered = step.lower(params, cache, batch)
+        return lowered, n_chips
+    # decode: one new token against a seq_len cache
+    step, rules = serve_lib.make_decode_step(
+        cfg, mesh, shape.global_batch, shape.seq_len, routing=routing)
+    params, _ = serve_lib.abstract_serve_params(cfg, rules)
+    cache = serve_lib.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                     rules)
+    toks = rules.sds((shape.global_batch, 1), jnp.int32, ("batch", None))
+    with mesh:
+        lowered = step.lower(params, cache, toks)
+    return lowered, n_chips
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             routing: str = "direct", seq_parallel: bool = True,
+             print_hlo: bool = False, moe_impl: str | None = None,
+             overrides: dict | None = None, microbatches: int = 1) -> dict:
+    cfg = get_config(arch)
+    if moe_impl and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if overrides:
+        typed = {k: type(getattr(cfg, k))(v) for k, v in overrides.items()}
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_desc,
+            "routing": routing, "seq_parallel": seq_parallel,
+            "moe_impl": cfg.moe_impl if cfg.n_experts else None}
+    if not ok:
+        return {**base, "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered, n_chips = lower_cell(cfg, shape, mesh, routing, seq_parallel,
+                                      microbatches=microbatches)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        hlo = compiled.as_text()
+        if print_hlo:
+            print(hlo[:20000])
+        rep = analysis.summarize(compiled, hlo, cfg, shape, mesh_desc, n_chips)
+        ma = compiled.memory_analysis()
+        print(f"[dryrun] {arch} x {shape_name} @ {mesh_desc} "
+              f"({routing}): COMPILED in {t_compile:.1f}s")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB  (per device)")
+        print(f"  cost_analysis: flops/dev={rep.flops:.3e} "
+              f"bytes/dev={rep.hbm_bytes:.3e}")
+        print(f"  collectives/dev: " + ", ".join(
+            f"{k}={v/2**20:.1f}MiB" for k, v in sorted(rep.coll_bytes.items())) or "none")
+        print(f"  roofline: t_comp={rep.t_compute*1e3:.2f}ms "
+              f"t_mem={rep.t_memory*1e3:.2f}ms t_coll={rep.t_collective*1e3:.2f}ms "
+              f"-> {rep.bottleneck}-bound, frac={rep.roofline_frac:.3f}")
+        return {**base, "status": "ok", "t_lower_s": t_lower,
+                "t_compile_s": t_compile, **rep.to_dict(),
+                "mem": {"argument": ma.argument_size_in_bytes,
+                        "output": ma.output_size_in_bytes,
+                        "temp": ma.temp_size_in_bytes,
+                        "alias": ma.alias_size_in_bytes}}
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        traceback.print_exc()
+        return {**base, "status": "failed", "error": f"{type(e).__name__}: {e}"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in LM_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--routing", default="direct",
+                    choices=["direct", "coordinator"])
+    ap.add_argument("--seq-parallel", dest="seq_parallel", action="store_true", default=True)
+    ap.add_argument("--no-seq-parallel", dest="seq_parallel", action="store_false")
+    ap.add_argument("--moe-impl", default=None, choices=["einsum", "gather"])
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="override a ModelConfig field")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default=None, help="label recorded in the JSONL")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+    overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in LM_SHAPES:
+                cells.append((a, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        res = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       routing=args.routing, seq_parallel=args.seq_parallel,
+                       print_hlo=args.print_hlo, moe_impl=args.moe_impl,
+                       overrides=overrides, microbatches=args.microbatches)
+        if args.tag:
+            res["tag"] = args.tag
+        if res["status"] == "failed":
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512
+host-platform devices while tests/benches must see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data","model").  Multi-pod: 2 pods of
+    256 = 512 chips ("pod","data","model"); the pod axis carries only
+    data-parallel gradient reduction (DCN-crossing collectives)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests use (2,2)/(2,2,2) with forced host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axis_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

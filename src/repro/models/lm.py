@@ -1,0 +1,579 @@
+"""Generic LM-family model builder covering all assigned architectures.
+
+A model is a sequence of *block stacks*; each stack is a repeating pattern of
+block kinds scanned over its group axis (params stacked on a leading 'layers'
+dim -> small HLO, fast multi-pod compiles):
+
+  dense / vlm : [('attn',) x L]
+  moe         : [('moe',) x L]
+  hybrid      : [('rec','rec','attn') x L//3] (+ remainder stack)
+  ssm         : [('mlstm' x (k-1), 'slstm') x L//k] (+ remainder)
+  audio       : encoder [('enc_attn',) x Le] + decoder [('xattn',) x Ld]
+
+Execution modes: 'train' (logits for loss), 'prefill' (logits + filled KV /
+recurrent caches), 'decode' (single token against caches).  The modality
+frontends of the audio/vlm archs are stubs per the assignment: inputs carry
+precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..nn.attention import gqa_attention, update_cache
+from ..nn.layers import (ParamDef, abstract_params, apply_norm, apply_rope,
+                         gelu, init_params, norm_defs, rmsnorm, spec_tree,
+                         swish)
+from ..nn.moe import moe_defs, moe_ffn
+from ..nn.recurrent import (mlstm_defs, mlstm_sequence, mlstm_step,
+                            rglru_block, rglru_defs, slstm_defs,
+                            slstm_sequence)
+from ..parallel.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# pattern machinery
+# ---------------------------------------------------------------------------
+
+def pattern_stacks(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, n_groups), ...] covering exactly cfg.n_layers blocks."""
+    if cfg.family == "audio":
+        return [(("xattn",), cfg.n_layers)]
+    if cfg.family == "moe":
+        return [(("moe",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.block_pattern)
+        n, r = divmod(cfg.n_layers, len(pat))
+        stacks = [(pat, n)] if n else []
+        if r:
+            stacks.append((pat[:r], 1))
+        return stacks
+    if cfg.family == "ssm":
+        k = cfg.slstm_every or cfg.n_layers + 1
+        if k > cfg.n_layers:
+            return [(("mlstm",), cfg.n_layers)]
+        pat = ("mlstm",) * (k - 1) + ("slstm",)
+        n, r = divmod(cfg.n_layers, k)
+        stacks = [(pat, n)] if n else []
+        if r:
+            stacks.append((("mlstm",) * r, 1))
+        return stacks
+    return [(("attn",), cfg.n_layers)]     # dense, vlm
+
+
+def _attn_defs(cfg: ModelConfig, ng: int, cross: bool = False) -> dict:
+    """Head-structured projection weights (d, K, G, hd).
+
+    Keeping the head axes explicit lets the sharding rules split kv-heads
+    (the paper's kernel-wise unit) when they divide the mesh — e.g.
+    deepseek-moe's K=16 on a 16-way model axis — while the fit-to-shape rule
+    falls back to FSDP-only for K=8 archs, where attention parallelism comes
+    from the *sequence* dim instead (see _attn_act_names): 40 q-heads or 8
+    kv-heads never divide 16 and uneven GSPMD shardings caused involuntary
+    full-remat copies."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    g = h // kv
+    ps, pn = (ng,), ("layers",)
+    # TP axis: K (kv heads) for GQA/MHA; the G (q-group) axis for MQA (K==1).
+    ax_k = "kv_heads" if kv > 1 else None
+    ax_g = "heads" if kv == 1 else None
+    defs = {
+        "ln": norm_defs(d, cfg.norm, ps, pn),
+        "wq": ParamDef(ps + (d, kv, g, hd), pn + ("embed", ax_k, ax_g, None)),
+        "wk": ParamDef(ps + (d, kv, hd), pn + ("embed", ax_k, None)),
+        "wv": ParamDef(ps + (d, kv, hd), pn + ("embed", ax_k, None)),
+        "wo": ParamDef(ps + (kv, g, hd, d), pn + (ax_k, ax_g, None, "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef(ps + (kv, g, hd), pn + (ax_k, ax_g, None), init="zeros")
+        defs["bk"] = ParamDef(ps + (kv, hd), pn + (ax_k, None), init="zeros")
+        defs["bv"] = ParamDef(ps + (kv, hd), pn + (ax_k, None), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef(ps + (hd,), pn + (None,), init="ones")
+        defs["k_norm"] = ParamDef(ps + (hd,), pn + (None,), init="ones")
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, ng: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ps, pn = (ng,), ("layers",)
+    defs = {
+        "ln": norm_defs(d, cfg.norm, ps, pn),
+        "wi": ParamDef(ps + (d, ff), pn + ("embed", "ff")),
+        "wo": ParamDef(ps + (ff, d), pn + ("ff_in", "embed")),
+    }
+    if cfg.act == "swiglu":
+        defs["wg"] = ParamDef(ps + (d, ff), pn + ("embed", "ff"))
+    return defs
+
+
+def block_defs(kind: str, cfg: ModelConfig, ng: int) -> dict:
+    ps, pn = (ng,), ("layers",)
+    if kind in ("attn", "enc_attn"):
+        return {"attn": _attn_defs(cfg, ng), "mlp": _mlp_defs(cfg, ng)}
+    if kind == "xattn":
+        return {"attn": _attn_defs(cfg, ng),
+                "xa": _attn_defs(cfg, ng, cross=True),
+                "mlp": _mlp_defs(cfg, ng)}
+    if kind == "moe":
+        return {"attn": _attn_defs(cfg, ng),
+                "moe_ln": norm_defs(cfg.d_model, cfg.norm, ps, pn),
+                "moe": moe_defs(cfg, ps, pn)}
+    if kind == "rec":
+        return {"ln": norm_defs(cfg.d_model, cfg.norm, ps, pn),
+                "rec": rglru_defs(cfg.d_model, cfg.d_rnn or cfg.d_model,
+                                  cfg.conv_width, ps, pn),
+                "mlp": _mlp_defs(cfg, ng)}
+    if kind == "mlstm":
+        return {"ln": norm_defs(cfg.d_model, cfg.norm, ps, pn),
+                "cell": mlstm_defs(cfg, ps, pn)}
+    if kind == "slstm":
+        return {"ln": norm_defs(cfg.d_model, cfg.norm, ps, pn),
+                "cell": slstm_defs(cfg, ps, pn)}
+    raise ValueError(kind)
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02),
+        "out_ln": norm_defs(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.padded_vocab), ("embed", "vocab"))
+    defs["stacks"] = [
+        {f"{i}_{kind}": block_defs(kind, cfg, ng)
+         for i, kind in enumerate(pattern)}
+        for pattern, ng in pattern_stacks(cfg)
+    ]
+    if cfg.family == "audio":
+        defs["encoder"] = {
+            "stacks": [{f"0_enc_attn": block_defs("enc_attn", cfg,
+                                                  cfg.n_encoder_layers)}],
+            "out_ln": norm_defs(d, cfg.norm),
+        }
+    if cfg.family == "vlm":
+        defs["mm_proj"] = ParamDef((d, d), ("embed", "act_embed"))
+    return defs
+
+
+def init_model(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    return init_params(model_defs(cfg), key, dtype=dt)
+
+
+def abstract_model(cfg: ModelConfig):
+    return abstract_params(model_defs(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+def model_spec_tree(cfg: ModelConfig):
+    return spec_tree(model_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    mode: str                      # train | prefill | decode
+    positions: jnp.ndarray         # (B, S) absolute positions
+    enc_out: jnp.ndarray | None = None   # (B, F, d) encoder output (audio)
+    causal: bool = True
+
+
+def _sinusoid(positions, d):
+    """(B, S) -> (B, S, d) fixed sinusoidal embeddings (whisper-style)."""
+    half = d // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_act_names(cfg: ModelConfig, mode: str):
+    """Sharding names for q (5D) / kv (4D).
+
+    Attention parallelism is *sequence-parallel*: q keeps its seq dim sharded
+    through scores -> softmax -> output (all seq-local math, zero attention
+    collectives), while k/v are replicated along model (they are GQA-small).
+    Head-dim sharding is deliberately avoided: 40 q-heads / 8 kv-heads never
+    divide a 16-way axis and uneven GSPMD shardings triggered involuntary
+    full-remat copies (see DESIGN.md §5).  Decode has q_len=1, so q is
+    replicated and balance comes from the seq-sharded KV cache instead."""
+    if mode == "decode":
+        return ("batch", None, None, None, None), ("batch", None, None, None)
+    return ("batch", "seq", None, None, None), ("batch", None, None, None)
+
+
+def _project_qkv(p, xn, ctx: Ctx, rope: bool = True):
+    """Returns q (B, S, K, G, hd); k, v (B, S, K, hd) — K-sharded."""
+    cfg = ctx.cfg
+    q = jnp.einsum("bsd,dkgh->bskgh", xn, p["wq"].astype(xn.dtype))
+    k = jnp.einsum("bsd,dkh->bskh", xn, p["wk"].astype(xn.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", xn, p["wv"].astype(xn.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope and cfg.rope_theta > 0:
+        q = apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, cfg.rope_theta)
+    qn, kn = _attn_act_names(cfg, ctx.mode)
+    q = shard_act(q, qn)
+    k = shard_act(k, kn)
+    v = shard_act(v, kn)
+    return q, k, v
+
+
+def _apply_attn(p, x, ctx: Ctx, cache, *, local_window=0, cross=False):
+    """Self- or cross-attention sublayer.  Returns (x + attnout, new_cache)."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    xn = apply_norm(x, p["ln"], cfg.norm, 1e-6)
+    new_cache = cache
+    qn, kn = _attn_act_names(cfg, ctx.mode)
+    if cross:
+        # cross-attention: kv precomputed from encoder output (prefill) and
+        # stored in cache for decode.
+        q = jnp.einsum("bsd,dkgh->bskgh", xn, p["wq"].astype(xn.dtype))
+        q = shard_act(q, qn)
+        if cache is not None and ctx.mode == "decode":
+            k, v = cache["k"], cache["v"]
+        else:
+            eo = ctx.enc_out.astype(xn.dtype)
+            k = jnp.einsum("bfd,dkh->bfkh", eo, p["wk"].astype(xn.dtype))
+            v = jnp.einsum("bfd,dkh->bfkh", eo, p["wv"].astype(xn.dtype))
+            if cache is not None:
+                new_cache = {"k": k.astype(cache["k"].dtype),
+                             "v": v.astype(cache["v"].dtype)}
+        kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], k.shape[:2])
+        out = gqa_attention(q, k, v, q_pos=ctx.positions, kv_pos=kv_pos,
+                            causal=False, chunk=cfg.attn_chunk)
+    else:
+        q, k, v = _project_qkv(p, xn, ctx, rope=True)
+        if ctx.mode == "decode":
+            w = cache["k"].shape[1]
+            pos = ctx.positions[0, 0]
+            slot = pos % w if local_window else jnp.minimum(pos, w - 1)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, slot, 0, 0))
+            kv_pos_store = cache["kv_pos"].at[slot].set(pos)
+            new_cache = {"k": ck, "v": cv, "kv_pos": kv_pos_store}
+            kv_pos = jnp.broadcast_to(kv_pos_store[None], (b, w))
+            valid = (kv_pos >= 0) & (kv_pos <= pos)
+            out = gqa_attention(q, ck, cv, q_pos=ctx.positions, kv_pos=kv_pos,
+                                kv_valid=valid, causal=True,
+                                local_window=local_window, chunk=0)
+        else:
+            kv_pos = ctx.positions
+            out = gqa_attention(q, k, v, q_pos=ctx.positions, kv_pos=kv_pos,
+                                causal=ctx.causal, local_window=local_window,
+                                chunk=cfg.attn_chunk)
+            if cache is not None:   # prefill: persist (window of) kv
+                w = cache["k"].shape[1]
+                if s >= w:
+                    ks, vs, kp = k[:, s - w:], v[:, s - w:], kv_pos[0, s - w:]
+                    if local_window:
+                        # ring layout: position p lives at slot p % w so that
+                        # decode's slot = pos % w overwrites the oldest entry.
+                        order = np.argsort((s - w + np.arange(w)) % w)
+                        ks, vs, kp = ks[:, order], vs[:, order], kp[order]
+                else:
+                    # pad at the end; position p already sits at slot p (p < w)
+                    pad = w - s
+                    ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    kp = jnp.pad(kv_pos[0], ((0, pad),), constant_values=-1)
+                new_cache = {"k": ks.astype(cache["k"].dtype),
+                             "v": vs.astype(cache["v"].dtype),
+                             "kv_pos": kp}
+    # row-parallel output projection: contract (K, G, hd); K sharded ->
+    # partial sums -> all-reduce (the 'direct' routing reduce pattern)
+    proj = jnp.einsum("bskgh,kghd->bsd", out.astype(x.dtype),
+                      p["wo"].astype(x.dtype))
+    return x + proj, new_cache
+
+
+def _apply_mlp(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    xn = apply_norm(x, p["ln"], cfg.norm, 1e-6)
+    h = xn @ p["wi"]
+    if cfg.act == "swiglu":
+        h = swish(xn @ p["wg"]) * h
+    else:
+        h = gelu(h)
+    h = shard_act(h, ("batch", None, "act_ff"))
+    return x + (h @ p["wo"]).astype(x.dtype)
+
+
+def apply_block(kind: str, p, x, ctx: Ctx, cache):
+    """Returns (x, new_cache_for_block)."""
+    cfg = ctx.cfg
+    if kind in ("attn", "enc_attn"):
+        lw = cfg.local_window if (kind == "attn" and cfg.family == "hybrid") else 0
+        x, c = _apply_attn(p["attn"], x, ctx, cache,
+                           local_window=lw)
+        x = _apply_mlp(p["mlp"], x, ctx)
+        return x, c
+    if kind == "xattn":
+        x, c_self = _apply_attn(p["attn"], x, ctx,
+                                None if cache is None else cache.get("self"))
+        x, c_cross = _apply_attn(p["xa"], x, ctx,
+                                 None if cache is None else cache.get("cross"),
+                                 cross=True)
+        x = _apply_mlp(p["mlp"], x, ctx)
+        c = None if cache is None else {"self": c_self, "cross": c_cross}
+        return x, c
+    if kind == "moe":
+        x, c = _apply_attn(p["attn"], x, ctx, cache)
+        xn = apply_norm(x, p["moe_ln"], cfg.norm, 1e-6)
+        x = x + moe_ffn(p["moe"], xn, cfg).astype(x.dtype)
+        return x, c
+    if kind == "rec":
+        xn = apply_norm(x, p["ln"], cfg.norm, 1e-6)
+        y, c = rglru_block(p["rec"], xn, cfg, cache=cache)
+        x = x + y.astype(x.dtype)
+        x = _apply_mlp(p["mlp"], x, ctx)
+        return x, c
+    if kind == "mlstm":
+        xn = apply_norm(x, p["ln"], cfg.norm, 1e-6)
+        cell = p["cell"]
+        b, s, d = xn.shape
+        di = int(cfg.proj_factor * d)
+        hh = cfg.n_heads
+        dk = di // hh
+        u = xn @ cell["w_up"]
+        z = xn @ cell["w_gate"]
+        from ..nn.recurrent import causal_conv1d
+        conv_state = None if cache is None else cache["conv"]
+        cu, new_conv = causal_conv1d(u, cell["conv_w"], conv_state)
+        cu = swish(cu)
+        q = (cu @ cell["wq"]).reshape(b, s, hh, dk)
+        k = (cu @ cell["wk"]).reshape(b, s, hh, dk) / np.sqrt(dk)
+        v = (u @ cell["wv"]).reshape(b, s, hh, dk)
+        gates = xn @ cell["w_if"] + cell["b_if"]
+        i_gate = gates[..., :hh].astype(jnp.float32)
+        lf = jax.nn.log_sigmoid(gates[..., hh:].astype(jnp.float32))
+        state = None if cache is None else (cache["C"], cache["n"], cache["m"])
+        if ctx.mode == "decode":
+            h, (C, n, m) = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                      i_gate[:, 0], lf[:, 0], state)
+            h = h[:, None]
+        else:
+            h, (C, n, m) = mlstm_sequence(q, k, v, i_gate, lf, state=state,
+                                          chunk=cfg.mlstm_chunk)
+        h = rmsnorm(h.reshape(b, s, di), cell["hnorm"])
+        y = (h * swish(z)) @ cell["w_down"]
+        new_cache = None if cache is None else {
+            "C": C, "n": n, "m": m, "conv": new_conv}
+        if ctx.mode == "prefill":
+            new_cache = {"C": C, "n": n, "m": m, "conv": new_conv}
+        return x + y.astype(x.dtype), new_cache
+    if kind == "slstm":
+        xn = apply_norm(x, p["ln"], cfg.norm, 1e-6)
+        cell = p["cell"]
+        state = None if cache is None else (cache["c"], cache["n"],
+                                            cache["h"], cache["m"])
+        h, (c_, n_, h_, m_) = slstm_sequence(cell, xn, cfg.n_heads, state=state)
+        y = gelu(h @ cell["up"]) @ cell["down"]
+        new_cache = None
+        if cache is not None or ctx.mode == "prefill":
+            new_cache = {"c": c_, "n": n_, "h": h_, "m": m_}
+        return x + y.astype(x.dtype), new_cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _attn_window(cfg: ModelConfig, kind: str, max_seq: int) -> int:
+    if kind == "attn" and cfg.family == "hybrid" and cfg.local_window:
+        return min(cfg.local_window, max_seq)
+    return max_seq
+
+
+def block_cache(kind: str, cfg: ModelConfig, ng: int, batch: int,
+                max_seq: int, dtype) -> dict | None:
+    hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+    d = cfg.d_model
+
+    def attn_cache(window):
+        return {"k": jnp.zeros((ng, batch, window, kv, hd), dtype),
+                "v": jnp.zeros((ng, batch, window, kv, hd), dtype),
+                "kv_pos": jnp.full((ng, window), -1, jnp.int32)}
+
+    if kind == "attn":
+        return attn_cache(_attn_window(cfg, kind, max_seq))
+    if kind == "xattn":
+        return {"self": attn_cache(max_seq),
+                "cross": {"k": jnp.zeros((ng, batch, cfg.n_audio_frames, kv, hd), dtype),
+                          "v": jnp.zeros((ng, batch, cfg.n_audio_frames, kv, hd), dtype)}}
+    if kind == "moe":
+        return attn_cache(max_seq)
+    if kind == "rec":
+        dr = cfg.d_rnn or d
+        return {"h": jnp.zeros((ng, batch, dr), dtype),
+                "conv": jnp.zeros((ng, batch, cfg.conv_width - 1, dr), dtype)}
+    if kind == "mlstm":
+        di = int(cfg.proj_factor * d)
+        dk = di // cfg.n_heads
+        return {"C": jnp.zeros((ng, batch, cfg.n_heads, dk, dk), jnp.float32),
+                "n": jnp.zeros((ng, batch, cfg.n_heads, dk), jnp.float32),
+                "m": jnp.zeros((ng, batch, cfg.n_heads), jnp.float32),
+                "conv": jnp.zeros((ng, batch, 3, di), dtype)}
+    if kind == "slstm":
+        z = jnp.zeros((ng, batch, d), jnp.float32)
+        return {"c": z, "n": z + 1e-6, "h": z, "m": z - 10.0}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache = {"pos": jnp.zeros((), jnp.int32), "stacks": []}
+    for pattern, ng in pattern_stacks(cfg):
+        cache["stacks"].append({
+            f"{i}_{kind}": block_cache(kind, cfg, ng, batch, max_seq, dtype)
+            for i, kind in enumerate(pattern)})
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# top-level forward
+# ---------------------------------------------------------------------------
+
+def _run_stacks(params, x, ctx: Ctx, cache, cfg: ModelConfig,
+                stacks=None):
+    """Scan each stack over its group axis.  Returns (x, new_caches)."""
+    new_caches = []
+    for si, (pattern, ng) in enumerate(stacks or pattern_stacks(cfg)):
+        stack_params = params["stacks"][si]
+        stack_cache = None if cache is None else cache["stacks"][si]
+
+        carry_seq = ctx.mode != "decode" and cfg.family not in ("ssm",)
+        carry_names = ("batch", "seq" if carry_seq else None, "act_embed")
+
+        def body(xc, xs, pattern=pattern, carry_names=carry_names):
+            gp, gc = xs
+            # constraint on the scan carry: under sequence parallelism the
+            # per-layer saved residual is sharded (batch x seq), which is
+            # what keeps 40-60 saved carries per stack inside HBM.  The ssm
+            # family shards channels instead (recurrences are sequential in
+            # seq but diagonal/head-local in channels).
+            xc = shard_act(xc, carry_names)
+            new_gc = {}
+            for i, kind in enumerate(pattern):
+                key = f"{i}_{kind}"
+                bc = None if gc is None else gc[key]
+                xc, nc = apply_block(kind, gp[key], xc, ctx, bc)
+                new_gc[key] = nc
+            return xc, (new_gc if gc is not None else 0)
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        x, ys = jax.lax.scan(body, x, (stack_params, stack_cache))
+        new_caches.append(ys if stack_cache is not None else None)
+    return x, new_caches
+
+
+def forward(params, inputs: dict, cfg: ModelConfig, mode: str = "train",
+            cache=None):
+    """inputs: {'tokens': (B, S)} [+ 'frames' (B, F, d) | 'patches' (B, P, d)].
+
+    train   -> logits (B, S_total, V)
+    prefill -> (last-position logits (B, V), filled cache)
+    decode  -> (logits (B, V), updated cache); tokens is (B, 1)
+    """
+    dt = jnp.dtype(cfg.dtype)
+    tokens = inputs["tokens"]
+    b = tokens.shape[0]
+    d = cfg.d_model
+
+    if mode == "decode":
+        pos0 = cache["pos"]
+        positions = jnp.full((b, 1), pos0, jnp.int32)
+    else:
+        positions = None  # set after frontend concat below
+
+    x = params["embed"].astype(dt)[tokens]
+    prefix = 0
+    enc_out = None
+    if cfg.family == "vlm" and mode != "decode":
+        patches = inputs["patches"].astype(dt) @ params["mm_proj"].astype(dt)
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix = patches.shape[1]
+    if cfg.family == "audio" and mode != "decode":
+        f = inputs["frames"].shape[1]
+        fpos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+        xe = inputs["frames"].astype(dt) + _sinusoid(fpos, d).astype(dt)
+        ectx = Ctx(cfg=cfg, mode="train", positions=fpos, causal=False)
+        xe, _ = _run_stacks(params["encoder"], xe, ectx, None, cfg,
+                            stacks=[(("enc_attn",), cfg.n_encoder_layers)])
+        enc_out = apply_norm(xe, params["encoder"]["out_ln"], cfg.norm, 1e-6)
+
+    if positions is None:
+        s_total = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+    if cfg.rope_theta == 0:   # whisper: absolute sinusoidal positions
+        x = x + _sinusoid(positions, d).astype(dt)
+    x = shard_act(x, ("batch", "seq", "act_embed"))
+
+    ctx = Ctx(cfg=cfg, mode=mode, positions=positions, enc_out=enc_out)
+    run_cache = cache if mode in ("decode", "prefill") else None
+    x, new_stack_caches = _run_stacks(params, x, ctx, run_cache, cfg)
+    x = apply_norm(x, params["out_ln"], cfg.norm, 1e-6)
+
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    if mode == "train":
+        x = shard_act(x, ("batch", None, "act_embed"))
+        logits = x @ head
+        logits = shard_act(logits, ("batch", None, "vocab"))
+        return logits
+    if mode == "prefill":
+        logits = x[:, -1, :] @ head
+        new_cache = {"pos": jnp.asarray(x.shape[1], jnp.int32),
+                     "stacks": new_stack_caches}
+        return logits, new_cache
+    # decode
+    logits = x[:, 0, :] @ head
+    new_cache = {"pos": cache["pos"] + 1, "stacks": new_stack_caches}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch: dict, cfg: ModelConfig):
+    """Next-token cross entropy (prefix positions from stub frontends and the
+    final position are excluded).  batch: inputs + optional 'loss_mask'."""
+    logits = forward(params, batch, cfg, mode="train")
+    tokens = batch["tokens"]
+    prefix = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, prefix:, :]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1, :].astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:   # mask padded vocab columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        lg = jnp.where(pad_mask[None, None, :], -1e30, lg)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,88 @@
+"""Grouped-query attention (full / sliding-window / cross / decode-with-cache)
+in pure JAX, with optional q-chunked streaming softmax so prefill at 32k
+doesn't materialize (S, S) score tensors.
+
+All math in fp32 accumulation regardless of activation dtype.
+Shapes: q (B, Sq, H, hd); k, v (B, Sk, K, hd) with H = K * G (GQA groups).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, kv_valid, causal: bool, local_window: int):
+    """(B, Sq, Sk) additive bias: 0 where attendable, NEG_INF elsewhere."""
+    m = kv_valid[:, None, :]
+    if causal:
+        m = m & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if local_window > 0:
+        m = m & (kv_pos[:, None, :] > q_pos[:, :, None] - local_window)
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend(q, k, v, bias):
+    """q: (B,Sq,K,G,hd); k,v: (B,Sk,K,hd); bias: (B,Sq,Sk) -> (B,Sq,K,G,hd).
+
+    Operands stay in their storage dtype (bf16) with f32 MXU accumulation via
+    preferred_element_type — explicit f32 casts would double every backward
+    collective (cotangents inherit the operand dtype)."""
+    scale = jnp.float32(1.0 / np.sqrt(q.shape[-1]))
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out
+
+
+def gqa_attention(q, k, v, *, q_pos, kv_pos, kv_valid=None, causal=True,
+                  local_window: int = 0, chunk: int = 0):
+    """q: (B, Sq, K, G, hd); k, v: (B, Sk, K, hd).  Returns (B, Sq, K, G, hd).
+
+    The K (kv-head) dim is the tensor-parallel unit: it stays sharded through
+    projection -> scores -> output with no resharding (DESIGN.md §5).
+    q_pos: (B, Sq) absolute positions; kv_pos: (B, Sk); kv_valid: (B, Sk)
+    bool (False for unwritten cache slots).  chunk > 0 streams the query
+    dimension through lax.scan (memory O(Sk * chunk) instead of O(Sq * Sk)).
+    """
+    b, sq, kdim, g, hd = q.shape
+    if kv_valid is None:
+        kv_valid = jnp.ones(k.shape[:2], dtype=bool)
+
+    if chunk and sq > chunk and sq % chunk == 0:
+        n_chunks = sq // chunk
+        qg_c = q.reshape(b, n_chunks, chunk, kdim, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        qp_c = q_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def step_math(qc, qp):
+            bias = _mask_bias(qp, kv_pos, kv_valid, causal, local_window)
+            return _attend(qc, k, v, bias)
+
+        def step(_, qs):
+            # rematerialize per-chunk probs in backward: without this the
+            # scan stacks every chunk's (.., Sq_chunk, Sk) prob matrix as a
+            # saved residual — 10+ GiB/device at 4k x 4k per layer.
+            return None, step_math(*qs)
+
+        _, out = jax.lax.scan(step, None, (qg_c, qp_c))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kdim, g, hd)
+    else:
+        bias = _mask_bias(q_pos, kv_pos, kv_valid, causal, local_window)
+        out = _attend(q, k, v, bias)
+    return out.astype(q.dtype)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos: jnp.ndarray):
+    """Write k_new/v_new (B, Sn, K, hd) into the cache at ``pos`` (scalar int32
+    position of the first new token).  Returns updated (cache_k, cache_v)."""
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    return cache_k, cache_v

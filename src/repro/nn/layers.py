@@ -1,0 +1,132 @@
+"""Parameter definition machinery + primitive layers (pure JAX).
+
+Models declare a nested dict of :class:`ParamDef` (shape + logical axis
+names + init); the same tree drives real initialization, abstract
+(ShapeDtypeStruct) initialization for the dry-run, and sharding-spec
+derivation — so the dry-run never allocates parameter memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    names: tuple[str | None, ...]       # logical axes (see parallel/sharding)
+    init: str = "normal"                # normal | zeros | ones
+    scale: float | None = None          # stddev; None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=None):
+    """Materialize a ParamDef tree into arrays (splitting the key per leaf)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(d: ParamDef, k):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1]))
+        # stacked-layer params: leading 'layers' axis is not fan-in
+        if len(d.shape) >= 2 and d.names[0] == "layers":
+            fan_in = int(np.prod(d.shape[1:-1])) or 1
+        scale = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(defs, dtype=None):
+    """ShapeDtypeStruct tree — free 'initialization' for lower()/compile()."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype),
+        defs, is_leaf=_is_def)
+
+
+def spec_tree(defs):
+    """Tree of logical-name tuples (consumed by parallel.sharding)."""
+    return jax.tree.map(lambda d: tuple(d.names), defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=_is_def))
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def norm_defs(d: int, kind: str, prefix_shape: tuple[int, ...] = (),
+              prefix_names: tuple[str, ...] = ()) -> dict:
+    out = {"scale": ParamDef(prefix_shape + (d,), prefix_names + ("act_embed",), init="ones")}
+    if kind == "layernorm":
+        out["bias"] = ParamDef(prefix_shape + (d,), prefix_names + ("act_embed",), init="zeros")
+    return out
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, ..., hd) with any number of head axes; positions: (B, S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B, S, hd/2)
+    head_axes = (1,) * (x.ndim - 3)
+    ang = ang.reshape(*ang.shape[:2], *head_axes, hd // 2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swish(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN (GShard-style capacity dispatch) with two dispatch
+implementations:
+
+* ``einsum`` — the classic one-hot dispatch/combine einsums (GShard
+  [arXiv:2006.16668]).  Simple, but the dispatch einsums burn
+  O(T * E * C * d) FLOPs — visible in the roofline compute term.
+* ``gather`` — FLOP-free dispatch: position-in-expert via cumsum, then
+  take_along_axis gathers into the capacity buffer and back.  This is the
+  beyond-paper optimization evaluated in EXPERIMENTS.md §Perf.
+
+Experts are sharded over the mesh (EP): 'experts' logical axis; token groups
+shard over data.  Tokens over capacity are dropped (standard GShard), with
+the residual connection preserving their activations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard_act
+from .layers import ParamDef, swish
+
+
+def moe_defs(cfg, prefix_shape=(), prefix_names=()) -> dict:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ps, pn = prefix_shape, prefix_names
+    defs = {
+        "router": ParamDef(ps + (d, e), pn + ("embed", None), scale=0.02),
+        "wi": ParamDef(ps + (e, d, ff), pn + ("experts", "embed", "expert_ff")),
+        "wg": ParamDef(ps + (e, d, ff), pn + ("experts", "embed", "expert_ff")),
+        "wo": ParamDef(ps + (e, ff, d), pn + ("experts", "expert_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.moe_d_ff * cfg.n_shared_experts
+        defs["shared_wi"] = ParamDef(ps + (d, sff), pn + ("embed", "ff"))
+        defs["shared_wg"] = ParamDef(ps + (d, sff), pn + ("embed", "ff"))
+        defs["shared_wo"] = ParamDef(ps + (sff, d), pn + ("ff_in", "embed"))
+    return defs
+
+
+def _expert_ffn(p, x):
+    """x: (G, E, C, d) -> (G, E, C, d); per-expert SwiGLU."""
+    h = jnp.einsum("gecd,edf->gecf", x, p["wi"])
+    g = jnp.einsum("gecd,edf->gecf", x, p["wg"])
+    h = swish(g) * h
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"])
+
+
+def _shared_ffn(p, x):
+    h = swish(x @ p["shared_wg"]) * (x @ p["shared_wi"])
+    return h @ p["shared_wo"]
+
+
+def _top_k_routing(logits, top_k):
+    """Returns (weights (T,k) fp32 normalized, idx (T,k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d).  Groups of ``moe_group_size`` tokens are
+    dispatched independently (bounds the dispatch tensor)."""
+    b, s, d = x.shape
+    t = b * s
+    gs = min(cfg.moe_group_size, t)
+    pad = (-t) % gs
+    xf = x.reshape(t, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)], axis=0)
+    ng = (t + pad) // gs
+    xt = xf.reshape(ng, gs, d)
+    xt = shard_act(xt, ("moe_groups", None, None))
+    valid = (jnp.arange(t + pad) < t).reshape(ng, gs)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(k * gs / e * cfg.capacity_factor), 1)
+
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"])
+    weights, idx = _top_k_routing(logits.reshape(ng * gs, e), k)
+    weights = weights.reshape(ng, gs, k) * valid[..., None]
+    idx = idx.reshape(ng, gs, k)
+    idx = jnp.where(valid[..., None], idx, e - 1)  # park padding on one expert
+
+    # position of each (token, choice) within its expert: cumsum over the
+    # flattened (token-major, choice-minor) order
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32) * \
+        valid[..., None, None].astype(jnp.int32)             # (g, s, k, e)
+    flat = onehot.reshape(ng, gs * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                        # (g, s*k, e)
+    pos_tok = (pos * flat).sum(-1).reshape(ng, gs, k)         # (g, s, k)
+    keep = (pos_tok < cap) & (pos_tok >= 0) & valid[..., None]
+    weights = weights * keep
+
+    if cfg.moe_impl == "einsum":
+        # GShard dispatch/combine one-hot einsums (baseline)
+        disp = (jax.nn.one_hot(idx, e, dtype=xt.dtype)[..., :, None]
+                * jax.nn.one_hot(pos_tok, cap, dtype=xt.dtype)[..., None, :]
+                * keep[..., None, None].astype(xt.dtype))     # (g,s,k,e,cap)
+        disp = disp.sum(2)                                    # (g,s,e,cap)
+        disp = shard_act(disp, ("moe_groups", None, "act_experts", None))
+        ex_in = jnp.einsum("gsec,gsd->gecd", disp, xt)
+        ex_out = _expert_ffn(p, ex_in)
+        comb = jnp.einsum(
+            "gske,gskc->gsec",
+            jax.nn.one_hot(idx, e, dtype=jnp.float32) * weights[..., None],
+            jax.nn.one_hot(pos_tok, cap, dtype=jnp.float32) * keep[..., None])
+        out = jnp.einsum("gsec,gecd->gsd", comb.astype(xt.dtype), ex_out)
+    else:
+        # gather dispatch (optimized): build a (g, e, cap) source-token table
+        # by scatter, then pure gathers — no O(T*E*C*d) dispatch FLOPs.
+        tok_ids = jnp.broadcast_to(jnp.arange(gs)[None, :, None], idx.shape)
+        flat_e = idx.reshape(ng, gs * k)
+        flat_pos = pos_tok.reshape(ng, gs * k)
+        flat_tok = tok_ids.reshape(ng, gs * k)
+        flat_keep = keep.reshape(ng, gs * k)
+        safe_pos = jnp.where(flat_keep, flat_pos, cap)   # overflow -> trash slot
+        gidx = jnp.broadcast_to(jnp.arange(ng)[:, None], flat_e.shape)
+        buf_src = jnp.zeros((ng, e, cap + 1), jnp.int32)
+        buf_src = buf_src.at[gidx, flat_e, safe_pos].set(flat_tok)
+        buf_src = buf_src[..., :cap]                          # (g, e, cap)
+        ex_in = xt[jnp.arange(ng)[:, None, None], buf_src]    # (g, e, cap, d)
+        ex_in = shard_act(ex_in, ("moe_groups", "act_experts", None, None))
+        ex_out = _expert_ffn(p, ex_in)                         # (g, e, cap, d)
+        # combine: gather each token's k expert outputs from the buffer
+        flat_out = ex_out.reshape(ng, e * cap, d)
+        slot = idx * cap + jnp.minimum(pos_tok, cap - 1)       # (g, s, k)
+        gathered = flat_out[jnp.arange(ng)[:, None, None], slot]  # (g,s,k,d)
+        out = (gathered * weights[..., None].astype(xt.dtype)).sum(2)
+
+    if cfg.n_shared_experts:
+        out = out + _shared_ffn(p, xt)
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:t]
+    return out.reshape(b, s, d)

@@ -1,0 +1,260 @@
+"""Recurrent sequence mixers:
+
+* RG-LRU (Griffin / RecurrentGemma, arXiv:2402.19427) — gated diagonal linear
+  recurrence, parallelized over sequence with an associative scan.  Diagonal
+  recurrence means channels are independent — the exact analogue of the
+  paper's kernel-wise split, so the 'rnn' logical axis shards channels.
+* mLSTM (xLSTM, arXiv:2405.04517) — matrix-memory LSTM with exponential
+  gating; implemented in the chunkwise-parallel form (sequence chunks with
+  carried (C, n, m) state) for train/prefill and a single-step form for
+  decode.  Validated against the sequential reference in tests.
+* sLSTM — scalar-memory LSTM with recurrent (block-diagonal per head) weights
+  and exponential gating; inherently sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamDef, swish
+
+
+# ---------------------------------------------------------------------------
+# generic first-order linear recurrence h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def linear_scan(a, b, h0=None, axis: int = 1):
+    """Associative scan for h_t = a_t h_{t-1} + b_t (all (..., S, D))."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        b0 = b.take(jnp.array(0), axis=axis) + a.take(jnp.array(0), axis=axis) * h0
+        b = jax.lax.dynamic_update_index_in_dim(b, b0, 0, axis)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_defs(d_model: int, d_rnn: int, conv_width: int,
+               prefix_shape=(), prefix_names=()) -> dict:
+    ps, pn = prefix_shape, prefix_names
+    return {
+        "w_x": ParamDef(ps + (d_model, d_rnn), pn + ("embed", "rnn")),
+        "w_gate": ParamDef(ps + (d_model, d_rnn), pn + ("embed", "rnn")),
+        "w_out": ParamDef(ps + (d_rnn, d_model), pn + ("rnn", "embed")),
+        "conv_w": ParamDef(ps + (conv_width, d_rnn), pn + (None, "rnn"),
+                           scale=0.5),
+        # per-channel gates computed from the recurrence branch input
+        "w_a": ParamDef(ps + (d_rnn, d_rnn), pn + ("rnn", "rnn"), scale=0.02),
+        "w_i": ParamDef(ps + (d_rnn, d_rnn), pn + ("rnn", "rnn"), scale=0.02),
+        "lam": ParamDef(ps + (d_rnn,), pn + ("rnn",), init="ones"),
+    }
+
+
+def causal_conv1d(u, w, state=None):
+    """u: (B, S, D); w: (W, D) depthwise causal conv.  ``state``: (B, W-1, D)
+    trailing inputs from the previous segment (decode); returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)          # (B, S+W-1, D)
+    y = sum(ext[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return y.astype(u.dtype), ext[:, -(width - 1):, :]
+
+
+def rglru(u, p, h0=None):
+    """u: (B, S, dr) post-conv recurrence-branch input.  Returns (h, h_last)."""
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * u.astype(jnp.float32))
+    h = linear_scan(a, gated, h0=None if h0 is None else h0.astype(jnp.float32))
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_block(p, x, cfg, cache=None):
+    """Griffin recurrent block: gate branch * (conv -> RG-LRU) branch.
+    cache: dict(h=(B,dr), conv=(B,W-1,dr)) or None (train/prefill).
+    Returns (y, new_cache)."""
+    gate = swish(x @ p["w_gate"])
+    u = x @ p["w_x"]
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    h0 = cache["h"] if cache is not None else None
+    h, h_last = rglru(u, p, h0=h0)
+    y = (h * gate) @ p["w_out"]
+    new_cache = {"h": h_last.astype(x.dtype), "conv": new_conv}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise-parallel) — per-head matrix memory
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg, prefix_shape=(), prefix_names=()) -> dict:
+    d = cfg.d_model
+    di = int(cfg.proj_factor * d)
+    h = cfg.n_heads
+    ps, pn = prefix_shape, prefix_names
+    return {
+        "w_up": ParamDef(ps + (d, di), pn + ("embed", "ff")),
+        "w_gate": ParamDef(ps + (d, di), pn + ("embed", "ff")),
+        "conv_w": ParamDef(ps + (4, di), pn + (None, "ff"), scale=0.5),
+        "wq": ParamDef(ps + (di, di), pn + ("ff_in", "ff")),
+        "wk": ParamDef(ps + (di, di), pn + ("ff_in", "ff")),
+        "wv": ParamDef(ps + (di, di), pn + ("ff_in", "ff")),
+        "w_if": ParamDef(ps + (d, 2 * h), pn + ("embed", None), scale=0.02),
+        "b_if": ParamDef(ps + (2 * h,), pn + (None,), init="zeros"),
+        "hnorm": ParamDef(ps + (di,), pn + ("ff",), init="ones"),
+        "w_down": ParamDef(ps + (di, d), pn + ("ff_in", "embed")),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_gate, lf, state):
+    """One chunk, all heads.  q,k,v: (B, H, L, dk|dv); i_gate/lf: (B, H, L)
+    (input gate pre-activation, log-sigmoid forget).  state: (C, n, m) with
+    C (B,H,dk,dv), n (B,H,dk), m (B,H).  Returns (h, new_state)."""
+    B, H, L, dk = q.shape
+    scale = 1.0 / np.sqrt(dk)
+    b_cum = jnp.cumsum(lf, axis=-1)                       # (B,H,L)
+    # stabilizer: m_t = B_t + max(m_prev, max_{tau<=t}(i_tau - B_tau))
+    a_run = jax.lax.cummax(i_gate - b_cum, axis=i_gate.ndim - 1)
+    c_prev, n_prev, m_prev = state
+    m_t = b_cum + jnp.maximum(m_prev[..., None], a_run)
+    # intra-chunk decay matrix D[t,tau] = i_tau + B_t - B_tau - m_t (tau<=t)
+    dmat = (i_gate[:, :, None, :] + b_cum[:, :, :, None]
+            - b_cum[:, :, None, :] - m_t[..., None])
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    dexp = jnp.where(mask, jnp.exp(dmat), 0.0)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale * dexp
+    inter_decay = jnp.exp(b_cum + m_prev[..., None] - m_t)  # (B,H,L)
+    num = jnp.einsum("bhts,bhsv->bhtv", s, v.astype(jnp.float32)) + \
+        inter_decay[..., None] * jnp.einsum(
+            "bhtd,bhdv->bhtv", q.astype(jnp.float32), c_prev) * scale
+    den = s.sum(-1) + inter_decay * jnp.einsum(
+        "bhtd,bhd->bht", q.astype(jnp.float32), n_prev) * scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # state update to end of chunk
+    m_new = m_t[..., -1]
+    w_tau = jnp.exp(i_gate + b_cum[..., -1:] - b_cum - m_new[..., None])
+    c_new = jnp.exp(b_cum[..., -1] + m_prev - m_new)[..., None, None] * c_prev \
+        + jnp.einsum("bhs,bhsd,bhsv->bhdv", w_tau, k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    n_new = jnp.exp(b_cum[..., -1] + m_prev - m_new)[..., None] * n_prev \
+        + jnp.einsum("bhs,bhsd->bhd", w_tau, k.astype(jnp.float32))
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_sequence(q, k, v, i_gate, lf, state=None, chunk: int = 256):
+    """Chunkwise mLSTM over a full sequence.  q,k,v: (B, S, H, dk);
+    gates (B, S, H).  Returns (h (B,S,H,dv), final_state)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = (jnp.zeros((B, H, dk, dv), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32),
+                 jnp.full((B, H), 0.0, jnp.float32))
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def to_chunks(x):  # (B,S,H,*) -> (nc, B, H, L, *)
+        x = x.reshape(B, nc, chunk, H, -1).transpose(1, 0, 3, 2, 4)
+        return x
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic = i_gate.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+    fc = lf.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+
+    def step(carry, xs):
+        qx, kx, vx, ix, fx = xs
+        h, new = _mlstm_chunk(qx, kx, vx, ix, fx, carry)
+        return new, h
+
+    final, hs = jax.lax.scan(step, state, (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    return h.astype(q.dtype), final
+
+
+def mlstm_step(q, k, v, i_gate, lf, state):
+    """Single decode step.  q,k,v: (B, H, dk|dv); gates (B, H)."""
+    c_prev, n_prev, m_prev = state
+    dk = q.shape[-1]
+    scale = 1.0 / np.sqrt(dk)
+    m_new = jnp.maximum(lf + m_prev, i_gate)
+    i_p = jnp.exp(i_gate - m_new)
+    f_p = jnp.exp(lf + m_prev - m_new)
+    c_new = f_p[..., None, None] * c_prev + i_p[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = f_p[..., None] * n_prev + i_p[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), c_new) * scale
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new) * scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential scan with block-diagonal recurrent weights
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg, prefix_shape=(), prefix_names=()) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ps, pn = prefix_shape, prefix_names
+    dff = int(4 * d / 3 // 64 * 64) or d
+    return {
+        "w_in": ParamDef(ps + (d, 4 * d), pn + ("embed", "ff")),     # z,i,f,o
+        "r": ParamDef(ps + (4, h, dh, dh), pn + (None, "heads", None, None),
+                      scale=0.02),
+        "b": ParamDef(ps + (4 * d,), pn + (None,), init="zeros"),
+        "up": ParamDef(ps + (d, dff), pn + ("embed", "ff")),
+        "down": ParamDef(ps + (dff, d), pn + ("ff_in", "embed")),
+    }
+
+
+def slstm_sequence(p, x, n_heads: int, state=None):
+    """x: (B, S, d).  Returns (h_seq (B,S,d), final_state)."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    pre = x @ p["w_in"] + p["b"]                      # (B, S, 4d)
+    if state is None:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state = (z0, z0 + 1e-6, z0, z0 - 10.0)        # c, n, h, m
+
+    r = p["r"].astype(jnp.float32)                    # (4, H, dh, dh)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, n_heads, dh)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, r).reshape(B, 4 * d)
+        g = pre_t.astype(jnp.float32) + rec
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    final, hs = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(x.dtype), final

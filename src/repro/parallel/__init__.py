@@ -1,0 +1,1 @@
+from .sharding import MeshRules, make_rules, param_shardings, shard_act, use_rules

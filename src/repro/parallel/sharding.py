@@ -1,0 +1,181 @@
+"""Sharding rules: the paper's fine-grained output-neuron splitting mapped to
+mesh axes (DESIGN.md §2).
+
+Params and activations are annotated with *logical axis names*; a rules table
+maps logical names -> mesh axes per execution mode.  Column-parallel linears
+('ff', 'heads', 'vocab' on the output dim) are the paper's Alg. 1/2 kernel-
+and column-wise splits; 'embed' FSDP sharding over the data axis is the
+ZeRO-style weight distribution that bounds per-device parameter bytes.
+
+``routing`` selects the paper-faithful coordinator pattern (activations
+replicated at every layer boundary — everything flows "through the
+coordinator") vs the beyond-paper ``direct`` mode (activations stay sharded;
+reduce-scatter/all-gather pairs = direct worker-to-worker forwarding, the
+paper's explicit future work).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis mapping (None = replicate)."""
+
+    mesh: Mesh | None
+    rules: dict[str, Any]
+
+    @staticmethod
+    def _dedup(axes_list: list) -> list:
+        """A mesh axis may appear only once in a PartitionSpec; on conflict
+        the earlier (leftmost) dim keeps it."""
+        seen: set[str] = set()
+        out = []
+        for axes in axes_list:
+            if axes is None:
+                out.append(None)
+                continue
+            tup = (axes,) if isinstance(axes, str) else tuple(axes)
+            tup = tuple(a for a in tup if a not in seen)
+            seen.update(tup)
+            out.append(tup if tup else None)
+        return out
+
+    def spec(self, names: tuple[str | None, ...]) -> P:
+        return P(*self._dedup([self.rules.get(n) if n else None for n in names]))
+
+    def sharding(self, names: tuple[str | None, ...]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(names))
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def fit_spec(self, names: tuple[str | None, ...],
+                 shape: tuple[int, ...]) -> P:
+        """Like spec(), but drops mesh axes on dims they don't divide —
+        pjit argument shardings require exact divisibility (uneven sharding
+        is only legal on internal constraints, where GSPMD pads)."""
+        out = []
+        for n, dim in zip(names, shape):
+            axes = self.rules.get(n) if n else None
+            if axes is not None and dim % self._axis_size(axes) != 0:
+                axes = None
+            out.append(axes)
+        return P(*self._dedup(out))
+
+    def fit_sharding(self, names: tuple[str | None, ...],
+                     shape: tuple[int, ...]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.fit_spec(names, shape))
+
+    def sds(self, shape: tuple[int, ...], dtype,
+            names: tuple[str | None, ...]) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct with a divisibility-fitted sharding."""
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=self.fit_sharding(names, shape))
+
+
+def _axes(mesh: Mesh | None) -> set[str]:
+    return set(mesh.axis_names) if mesh is not None else set()
+
+
+def make_rules(mesh: Mesh | None, mode: str = "train",
+               routing: str = "direct", seq_parallel: bool = True) -> MeshRules:
+    """Build the rules table for a mesh.
+
+    mode: 'train' (FSDP over data + TP over model) or 'serve' (TP only;
+    MoE experts over data).
+    routing: 'direct' | 'coordinator' (paper-faithful baseline).
+    """
+    ax = _axes(mesh)
+    data_axes = tuple(a for a in ("pod", "data") if a in ax) or None
+    model = "model" if "model" in ax else None
+    # FSDP over the data axis in BOTH modes: d_model always divides the mesh
+    # (head dims often don't), so this is the axis that reliably bounds
+    # per-device parameter bytes — the paper's core memory goal.  In serve
+    # mode this trades per-layer weight all-gathers for fitting in HBM.
+    fsdp = data_axes
+    rules: dict[str, Any] = {
+        # --- parameter logical axes ---
+        "embed": fsdp,            # FSDP: shard d_model dim of weights on data
+        "ff": model,              # column-parallel output dim (paper Alg. 2)
+        "ff_in": model,           # row-parallel input dim (down-projection)
+        "heads": model,           # kernel-wise q-group split (MQA archs)
+        "kv_heads": model,        # kernel-wise kv-head split (GQA/MHA archs)
+        "vocab": model,           # output-neuron split of the LM head
+        "experts": model if mode == "train" else data_axes,
+        "expert_ff": model if mode == "serve" else None,
+        "rnn": model,             # RG-LRU channels are independent neurons
+        "layers": None,           # scanned layer axis is never sharded
+        # --- activation logical axes ---
+        "batch": data_axes,
+        "seq": model if seq_parallel else None,
+        "act_embed": None,
+        "act_heads": model,
+        "act_ff": model,
+        "kv_seq": model,          # decode KV cache sharded along sequence
+        "moe_groups": data_axes,
+        "act_experts": model if mode == "train" else data_axes,
+    }
+    if routing == "coordinator":
+        # Paper-faithful: every layer-boundary activation is replicated (all
+        # traffic through the coordinator); weights stay split.  The model
+        # axis then all-gathers activations instead of reduce-scattering.
+        rules.update({"act_heads": None, "act_ff": None, "seq": None,
+                      "kv_seq": None})
+    return MeshRules(mesh=mesh, rules=rules)
+
+
+# --- thread-local rules context (models call shard_act without plumbing) ---
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules | None):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield
+    finally:
+        _ctx.rules = prev
+
+
+def current_rules() -> MeshRules | None:
+    return getattr(_ctx, "rules", None)
+
+
+def shard_act(x, names: tuple[str | None, ...]):
+    """Apply a sharding constraint if a rules context is active."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    if jax.eval_shape(lambda v: v, x).ndim != len(names):
+        raise ValueError(f"rank mismatch: {x.shape} vs names {names}")
+    return jax.lax.with_sharding_constraint(x, r.sharding(names))
+
+
+def param_shardings(spec_tree, rules: MeshRules, shapes=None):
+    """Map a tree of logical-name tuples to NamedShardings.  When ``shapes``
+    (a matching tree of ShapeDtypeStructs/arrays) is given, shardings are
+    divisibility-fitted per dim."""
+    if shapes is None:
+        return jax.tree.map(
+            lambda names: rules.sharding(tuple(names)),
+            spec_tree, is_leaf=lambda v: isinstance(v, tuple))
+    return jax.tree.map(
+        lambda names, s: rules.fit_sharding(tuple(names), tuple(s.shape)),
+        spec_tree, shapes, is_leaf=lambda v: isinstance(v, tuple))

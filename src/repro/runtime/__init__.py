@@ -1,0 +1,1 @@
+from .elastic import ElasticCluster, WorkerHealth, plan_recovery_mesh

@@ -1,0 +1,109 @@
+"""Elastic runtime: failure handling, straggler mitigation, and re-allocation
+— the paper's Eq. 7 overflow-redistribution reused as the recovery policy.
+
+Two deployment worlds share this module:
+
+* **MCU cluster** (the paper's): :class:`ElasticCluster` tracks per-worker
+  health from heartbeats/observed step times, demotes stragglers by scaling
+  their capability rating (the same quantity Eq. 5 defines), drops dead
+  workers, and re-splits the model with the remaining ratings —
+  `redistribute_overflow` guarantees the new plan still fits each worker's
+  storage.
+* **TPU pod**: checkpoints restore onto a smaller mesh (ckpt/checkpoint.py
+  restores with new shardings); `plan_recovery_mesh` picks the largest
+  (data, model) mesh that still divides the surviving chip count, and the
+  caller rebuilds the train step against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.allocation import WorkerParams, ratings_for, redistribute_overflow
+from ..core.splitting import SplitPlan, split_model
+
+
+@dataclasses.dataclass
+class WorkerHealth:
+    params: WorkerParams
+    alive: bool = True
+    last_heartbeat: float = 0.0
+    ema_step_time: float | None = None   # straggler signal
+
+
+class ElasticCluster:
+    """Rating-based elastic coordinator for the networked-MCU world."""
+
+    def __init__(self, model, workers: list[WorkerParams], k1: float,
+                 kc: float, heartbeat_timeout: float = 5.0,
+                 straggler_factor: float = 1.5):
+        self.model = model
+        self.k1, self.kc = k1, kc
+        self.timeout = heartbeat_timeout
+        self.straggler_factor = straggler_factor
+        self.health = [WorkerHealth(p, last_heartbeat=time.monotonic())
+                       for p in workers]
+        self._planned_alive: tuple[int, ...] = tuple(range(len(workers)))
+        self.plan: SplitPlan = self._replan()
+
+    # -- signals ------------------------------------------------------------
+    def heartbeat(self, worker: int, now: float | None = None):
+        self.health[worker].last_heartbeat = now or time.monotonic()
+
+    def report_step_time(self, worker: int, seconds: float, alpha=0.5):
+        h = self.health[worker]
+        h.ema_step_time = (seconds if h.ema_step_time is None
+                           else alpha * seconds + (1 - alpha) * h.ema_step_time)
+
+    def mark_failed(self, worker: int):
+        self.health[worker].alive = False
+
+    # -- policy ---------------------------------------------------------------
+    def check(self, now: float | None = None) -> bool:
+        """Apply failure + straggler policy; returns True if the plan changed."""
+        now = now or time.monotonic()
+        changed = tuple(self.alive_indices) != self._planned_alive
+        for h in self.health:
+            if h.alive and now - h.last_heartbeat > self.timeout:
+                h.alive = False
+                changed = True
+        times = [h.ema_step_time for h in self.health
+                 if h.alive and h.ema_step_time]
+        if times:
+            med = float(np.median(times))
+            for h in self.health:
+                if h.alive and h.ema_step_time and \
+                        h.ema_step_time > self.straggler_factor * med:
+                    # straggler: demote its effective clock so the rating —
+                    # and therefore its Alg. 1/2 share — shrinks.
+                    h.params = dataclasses.replace(
+                        h.params, f_mhz=h.params.f_mhz * med / h.ema_step_time)
+                    h.ema_step_time = None
+                    changed = True
+        if changed:
+            self.plan = self._replan()
+        return changed
+
+    def _replan(self) -> SplitPlan:
+        self._planned_alive = tuple(self.alive_indices)
+        alive = [h.params for h in self.health if h.alive]
+        if not alive:
+            raise RuntimeError("no surviving workers")
+        r = ratings_for(alive, self.k1, self.kc)
+        caps = np.array([p.flash_bytes for p in alive], dtype=np.float64)
+        r = redistribute_overflow(r, caps, self.model.total_weight_bytes(1))
+        return split_model(self.model, r)
+
+    @property
+    def alive_indices(self) -> list[int]:
+        return [i for i, h in enumerate(self.health) if h.alive]
+
+
+def plan_recovery_mesh(n_surviving: int, model_axis: int = 16) -> tuple[int, int]:
+    """Largest (data, model) mesh on the surviving chips, keeping the model
+    axis intact (TP degree is baked into layer shardings); data shrinks."""
+    if n_surviving < model_axis:
+        raise ValueError(f"need >= {model_axis} chips, have {n_surviving}")
+    return (n_surviving // model_axis, model_axis)

@@ -1,0 +1,136 @@
+"""Serving steps: prefill (builds the KV / recurrent caches) and decode (one
+token against the caches), with TP-sharded params and caches sharded
+(batch -> data, kv sequence -> model) so 32k-context x 128-batch caches fit.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..models.lm import pattern_stacks
+from ..parallel.sharding import MeshRules, make_rules, param_shardings, use_rules
+
+
+def _attn_cache_specs():
+    # the cache shards along the kv *sequence* (32k+ contexts dominate
+    # memory); the kv-head dim is replicated here — per-step writes reshard
+    # one token, which is negligible.
+    return {"k": ("layers", "batch", "kv_seq", None, None),
+            "v": ("layers", "batch", "kv_seq", None, None),
+            "kv_pos": ("layers", "kv_seq")}
+
+
+def block_cache_specs(kind: str, cfg: ModelConfig):
+    if kind in ("attn", "moe"):
+        return _attn_cache_specs()
+    if kind == "xattn":
+        return {"self": _attn_cache_specs(),
+                "cross": {"k": ("layers", "batch", None, None, None),
+                          "v": ("layers", "batch", None, None, None)}}
+    if kind == "rec":
+        return {"h": ("layers", "batch", "rnn"),
+                "conv": ("layers", "batch", None, "rnn")}
+    if kind == "mlstm":
+        return {"C": ("layers", "batch", None, None, "ff"),
+                "n": ("layers", "batch", None, None),
+                "m": ("layers", "batch", None),
+                "conv": ("layers", "batch", None, "ff")}
+    if kind == "slstm":
+        return {k: ("layers", "batch", None) for k in ("c", "n", "h", "m")}
+    raise ValueError(kind)
+
+
+def cache_spec_tree(cfg: ModelConfig):
+    return {"pos": (),
+            "stacks": [{f"{i}_{kind}": block_cache_specs(kind, cfg)
+                        for i, kind in enumerate(pattern)}
+                       for pattern, _ in pattern_stacks(cfg)]}
+
+
+def cache_shardings(cfg: ModelConfig, rules: MeshRules, batch: int,
+                    max_seq: int):
+    """Divisibility-fitted shardings for the cache pytree."""
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_seq))
+    return jax.tree.map(
+        lambda names, s: rules.fit_sharding(tuple(names), tuple(s.shape)),
+        cache_spec_tree(cfg), shapes, is_leaf=lambda v: isinstance(v, tuple))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   rules: MeshRules):
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_seq))
+    sh = cache_shardings(cfg, rules, batch, max_seq)
+    return jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        shapes, sh)
+
+
+def abstract_serve_params(cfg: ModelConfig, rules: MeshRules):
+    params = lm.abstract_model(cfg)
+    p_sh = param_shardings(lm.model_spec_tree(cfg), rules, shapes=params)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params, p_sh), p_sh
+
+
+def make_decode_step(cfg: ModelConfig, mesh, batch: int, max_seq: int,
+                     routing: str = "direct"):
+    """(params, cache, tokens(B,1)) -> (logits (B,V), cache); cache donated."""
+    rules = make_rules(mesh, mode="serve", routing=routing)
+
+    def decode_step(params, cache, tokens):
+        with use_rules(rules):
+            return lm.forward(params, {"tokens": tokens}, cfg, mode="decode",
+                              cache=cache)
+
+    _, p_sh = abstract_serve_params(cfg, rules)
+    c_sh = cache_shardings(cfg, rules, batch, max_seq)
+    tok_sh = rules.fit_sharding(("batch", None), (batch, 1))
+    lg_sh = rules.fit_sharding(("batch", "vocab"), (batch, cfg.padded_vocab))
+    step = jax.jit(decode_step,
+                   in_shardings=(p_sh, c_sh, tok_sh),
+                   out_shardings=(lg_sh, c_sh),
+                   donate_argnums=(1,))
+    return step, rules
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, batch: int, max_seq: int,
+                      routing: str = "direct"):
+    """(params, cache0, batch) -> (last-token logits, filled cache)."""
+    rules = make_rules(mesh, mode="serve", routing=routing)
+
+    def prefill_step(params, cache, batch_in):
+        with use_rules(rules):
+            return lm.forward(params, batch_in, cfg, mode="prefill",
+                              cache=cache)
+
+    _, p_sh = abstract_serve_params(cfg, rules)
+    c_sh = cache_shardings(cfg, rules, batch, max_seq)
+    lg_sh = rules.fit_sharding(("batch", "vocab"), (batch, cfg.padded_vocab))
+    step = jax.jit(prefill_step,
+                   in_shardings=(p_sh, c_sh, None),
+                   out_shardings=(lg_sh, c_sh),
+                   donate_argnums=(1,))
+    return step, rules
+
+
+def serve_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                      rules: MeshRules) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        p = cfg.n_patches
+        out["tokens"] = rules.sds((batch, seq - p), jnp.int32, ("batch", None))
+        out["patches"] = rules.sds((batch, p, cfg.d_model), dt,
+                                   ("batch", None, None))
+    elif cfg.family == "audio":
+        out["tokens"] = rules.sds((batch, seq), jnp.int32, ("batch", None))
+        out["frames"] = rules.sds((batch, cfg.n_audio_frames, cfg.d_model), dt,
+                                  ("batch", None, None))
+    else:
+        out["tokens"] = rules.sds((batch, seq), jnp.int32, ("batch", None))
+    return out

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device;
+only launch/dryrun.py (and the subprocess tests) force 512/8 host devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_cnn(seed=0):
+    """A small conv+dw+linear net exercising every layer kind."""
+    from repro.core.reinterpret import trace_sequential
+    spec = [
+        dict(kind="conv", out_channels=6, kernel=(3, 3), stride=(1, 1),
+             padding=(1, 1), activation="relu6", save_as="blk"),
+        dict(kind="dwconv", kernel=(3, 3), stride=(1, 1), padding=(1, 1),
+             activation="relu6"),
+        dict(kind="conv", out_channels=6, kernel=(1, 1), stride=(1, 1),
+             padding=(0, 0), residual_from="blk"),
+        dict(kind="conv", out_channels=8, kernel=(3, 3), stride=(2, 2),
+             padding=(1, 1), activation="relu"),
+        dict(kind="avgpool"),
+        dict(kind="linear", features=10),
+    ]
+    return trace_sequential(spec, (3, 12, 12),
+                            rng=np.random.default_rng(seed))

@@ -1,0 +1,88 @@
+"""Resource-aware allocation (Eq. 1-7) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (WorkerParams, allocate, capability_rating,
+                                   execution_time, proportional_allocation,
+                                   ratings_evenly, ratings_for,
+                                   ratings_freq_only, redistribute_overflow)
+
+
+class TestRating:
+    def test_no_comm_degenerates_to_compute(self):
+        p = WorkerParams(f_mhz=600)
+        # Eq. 5 with Kc=0: R = f*K1
+        assert capability_rating(p, k1=0.133, kc=0.0) == pytest.approx(600 * 0.133)
+
+    def test_rating_monotone_in_frequency(self):
+        lo = capability_rating(WorkerParams(f_mhz=150), 0.133, 2.9)
+        hi = capability_rating(WorkerParams(f_mhz=600), 0.133, 2.9)
+        assert hi > lo
+
+    def test_rating_decreases_with_delay(self):
+        base = capability_rating(WorkerParams(d_s_per_kb=0.0), 0.133, 2.9)
+        slow = capability_rating(WorkerParams(d_s_per_kb=0.02), 0.133, 2.9)
+        assert slow < base
+
+    def test_execution_time_eq1(self):
+        p = WorkerParams(f_mhz=600, d_s_per_kb=0.001, b_kb_s=10000)
+        w = 1200.0  # Mcycles
+        t = execution_time(w, p, k1=0.133, kc=2.0)
+        expected = w / 600 + (0.001 + 1e-4) * 0.133 * 2.0 * w
+        assert t == pytest.approx(expected)
+
+
+class TestRedistribution:
+    def test_preserves_sum(self):
+        r = np.array([5.0, 1.0, 1.0])
+        caps = np.array([100.0, 1000.0, 1000.0])
+        r2 = redistribute_overflow(r, caps, total_size=700.0)
+        assert r2.sum() == pytest.approx(r.sum())
+
+    def test_respects_capacity(self):
+        r = np.array([5.0, 1.0, 1.0])
+        caps = np.array([100.0, 1000.0, 1000.0])
+        r2 = redistribute_overflow(r, caps, total_size=700.0)
+        sizes = proportional_allocation(r2, 700.0)
+        assert np.all(sizes <= caps + 1e-6)
+
+    def test_infeasible_raises(self):
+        with pytest.raises(ValueError):
+            redistribute_overflow(np.ones(2), np.array([10.0, 10.0]), 100.0)
+
+    def test_noop_when_fits(self):
+        r = np.array([2.0, 1.0])
+        r2 = redistribute_overflow(r, np.array([1e9, 1e9]), 300.0)
+        np.testing.assert_allclose(r, r2)
+
+    @given(n=st.integers(1, 10), seed=st.integers(0, 200),
+           frac=st.floats(0.3, 0.95))
+    @settings(max_examples=100, deadline=None)
+    def test_random_instances(self, n, seed, frac):
+        rng = np.random.default_rng(seed)
+        r = rng.uniform(0.1, 10.0, n)
+        caps = rng.uniform(10.0, 100.0, n)
+        total = frac * caps.sum()
+        r2 = redistribute_overflow(r, caps, total)
+        sizes = proportional_allocation(r2, total)
+        assert np.all(sizes <= caps + 1e-6)
+        assert r2.sum() == pytest.approx(r.sum(), rel=1e-6)
+        assert sizes.sum() == pytest.approx(total, rel=1e-6)
+
+
+def test_allocate_end_to_end():
+    workers = [WorkerParams(f_mhz=600, flash_bytes=8 << 20),
+               WorkerParams(f_mhz=150, flash_bytes=8 << 20),
+               WorkerParams(f_mhz=450, flash_bytes=8 << 20)]
+    r, sizes = allocate(workers, k1=0.133, kc=2.9, model_bytes=3.5e6)
+    assert sizes.sum() == pytest.approx(3.5e6)
+    assert r[0] > r[2] > r[1]   # faster clock -> bigger share
+
+
+def test_baseline_ratings():
+    workers = [WorkerParams(f_mhz=600), WorkerParams(f_mhz=150)]
+    assert list(ratings_evenly(workers)) == [1.0, 1.0]
+    assert list(ratings_freq_only(workers)) == [600.0, 150.0]
+    r = ratings_for(workers, 0.133, 2.9)
+    assert r[0] > r[1]

@@ -1,0 +1,128 @@
+"""HLO analysis parser tests: loop-aware FLOP/byte/collective accounting
+validated against compiled oracles and synthetic HLO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import analysis as A
+
+
+class TestScanOracle:
+    def test_scan_flops_exact(self):
+        D, L = 128, 7
+        def f(ws, x):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(body, x, ws)[0].sum()
+        c = jax.jit(f).lower(jnp.zeros((L, D, D)), jnp.zeros((32, D))).compile()
+        t = A.analyze_hlo(c.as_text())
+        assert t.flops == pytest.approx(2 * 32 * D * D * L, rel=0.02)
+
+    def test_nested_scan_flops(self):
+        D, L1, L2 = 64, 3, 5
+        def f(ws, x):
+            def outer(x, w):
+                def inner(x2, _):
+                    return jnp.tanh(x2 @ w), None
+                return jax.lax.scan(inner, x, jnp.arange(L2))[0], None
+            return jax.lax.scan(outer, x, ws)[0].sum()
+        c = jax.jit(f).lower(jnp.zeros((L1, D, D)), jnp.zeros((16, D))).compile()
+        t = A.analyze_hlo(c.as_text())
+        assert t.flops == pytest.approx(2 * 16 * D * D * L1 * L2, rel=0.05)
+
+    def test_unrolled_matches_xla(self):
+        D = 128
+        def f(a, b):
+            return (a @ b).sum()
+        c = jax.jit(f).lower(jnp.zeros((D, D)), jnp.zeros((D, D))).compile()
+        t = A.analyze_hlo(c.as_text())
+        xla = c.cost_analysis()["flops"]
+        assert t.flops == pytest.approx(xla, rel=0.02)
+
+    def test_scan_bytes_not_quadratic(self):
+        """Stacked scan outputs (DUS into a (L, ...) buffer) must count the
+        written slice per step, not the whole buffer."""
+        D, L = 256, 64
+        def f(x):
+            def body(c, _):
+                c = jnp.tanh(c) * 1.0001
+                return c, c
+            _, ys = jax.lax.scan(body, x, None, length=L)
+            return ys
+        c = jax.jit(f).lower(jnp.zeros((D, D))).compile()
+        t = A.analyze_hlo(c.as_text())
+        buf = L * D * D * 4
+        # traffic should be O(L * slice) ~ a few x buf; the broken model
+        # would give O(L * buf) = L x larger
+        assert t.bytes < 8 * buf, (t.bytes, buf)
+
+
+class TestSyntheticHLO:
+    HLO = """\
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,8]) -> f32[8,8] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,8]{1,0} parameter(1)
+  %d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[32,8]{1,0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %init), condition=%cond, body=%body
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+    def test_dot_flops(self):
+        t = A.analyze_hlo(self.HLO)
+        assert t.flops == 2 * 8 * 8 * 16
+
+    def test_collectives_with_trip_count(self):
+        t = A.analyze_hlo(self.HLO)
+        # all-gather at entry: result bytes 32*8*4
+        assert t.coll["all-gather"] == 32 * 8 * 4
+        # all-reduce inside a 12-trip while: 2x operand bytes x 12
+        assert t.coll["all-reduce"] == 2 * (8 * 8 * 4) * 12
+
+    def test_trip_count_extraction(self):
+        comps = A._split_computations(self.HLO)
+        assert A._trip_count(comps["cond"]) == 12
+
+
+class TestRooflineReport:
+    def test_terms_and_bottleneck(self):
+        r = A.RooflineReport(
+            arch="x", shape="train_4k", mesh="16x16",
+            flops=1.97e14, hbm_bytes=8.19e11, coll_bytes={"all-gather": 5e10},
+            model_flops=0.985e14, peak_mem_bytes=1e9)
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.t_memory == pytest.approx(1.0)
+        assert r.t_collective == pytest.approx(1.0)
+        assert r.useful_flops_frac == pytest.approx(0.5)
+        assert r.roofline_frac == pytest.approx(0.5)
+
+    def test_model_flops_modes(self):
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        cfg = get_config("qwen3-14b")
+        n = cfg.n_params()
+        tr = A.model_flops_for(cfg, ShapeConfig("t", 4096, 256, "train"))
+        pf = A.model_flops_for(cfg, ShapeConfig("p", 4096, 256, "prefill"))
+        de = A.model_flops_for(cfg, ShapeConfig("d", 4096, 256, "decode"))
+        assert tr == pytest.approx(6 * n * 4096 * 256)
+        assert pf == pytest.approx(tr / 3)
+        assert de == pytest.approx(2 * n * 256)

@@ -1,0 +1,94 @@
+"""Split execution (Alg. 4) must match monolithic inference numerically —
+the core correctness claim of the system."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.executor import SplitExecutor, reference_forward
+from repro.core.quantize import calibrate_scales, quantize_model
+from repro.core.reinterpret import trace_sequential
+from repro.core.splitting import split_model
+from repro.models import mobilenet_v2_smoke
+from conftest import small_cnn
+
+
+def _acts_fn(model, x):
+    return reference_forward(model, x, collect_activations=True)[1]
+
+
+class TestFloatEquality:
+    def test_small_cnn_various_workers(self, rng):
+        m = small_cnn()
+        x = rng.standard_normal((3, 12, 12)).astype(np.float32)
+        ref = reference_forward(m, x)
+        for ratings in ([1.0], [1, 1], [3, 1, 2, 0.5], np.ones(8)):
+            out = SplitExecutor(split_model(m, ratings)).run(x)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_mobilenet_smoke(self, rng):
+        m = mobilenet_v2_smoke()
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        ref = reference_forward(m, x)
+        out = SplitExecutor(split_model(m, [2, 1, 1])).run(x)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @given(c1=st.integers(1, 6), c2=st.integers(1, 6), hw=st.integers(4, 10),
+           stride=st.integers(1, 2), n=st.integers(1, 6),
+           seed=st.integers(0, 100))
+    @settings(max_examples=40, deadline=None)
+    def test_random_cnn_property(self, c1, c2, hw, stride, n, seed):
+        rng = np.random.default_rng(seed)
+        spec = [
+            dict(kind="conv", out_channels=c1, kernel=(3, 3),
+                 stride=(stride, stride), padding=(1, 1), activation="relu6"),
+            dict(kind="dwconv", kernel=(3, 3), stride=(1, 1), padding=(1, 1),
+                 activation="relu"),
+            dict(kind="conv", out_channels=c2, kernel=(1, 1), padding=(0, 0)),
+            dict(kind="avgpool"),
+            dict(kind="linear", features=5),
+        ]
+        m = trace_sequential(spec, (2, hw, hw), rng=rng)
+        x = rng.standard_normal((2, hw, hw)).astype(np.float32)
+        ref = reference_forward(m, x)
+        ratings = rng.uniform(0.2, 3.0, n)
+        out = SplitExecutor(split_model(m, ratings)).run(x)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+class TestInt8Path:
+    def test_int8_matches_float_closely(self, rng):
+        m = small_cnn()
+        calib = [rng.standard_normal((3, 12, 12)).astype(np.float32)
+                 for _ in range(4)]
+        scales = calibrate_scales(m, calib, _acts_fn)
+        qm = quantize_model(m, scales)
+        plan = split_model(m, [1, 2, 1])
+        ex = SplitExecutor(plan, qm)
+        x = calib[0]
+        ref = reference_forward(m, x)
+        q_out = ex.run(x, mode="int8").astype(np.float32) * scales[-1]
+        corr = np.corrcoef(ref.ravel(), q_out.ravel())[0, 1]
+        assert corr > 0.99
+
+    def test_int8_split_equals_int8_single(self, rng):
+        """Splitting must not change the quantized result (bit-exact int8)."""
+        m = small_cnn()
+        calib = [rng.standard_normal((3, 12, 12)).astype(np.float32)
+                 for _ in range(2)]
+        scales = calibrate_scales(m, calib, _acts_fn)
+        qm = quantize_model(m, scales)
+        x = calib[0]
+        single = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+        multi = SplitExecutor(split_model(m, [1, 1, 1, 1]), qm).run(x, mode="int8")
+        # int32 accumulation is exact; requant rounding can differ by <=1 ulp
+        assert np.max(np.abs(single.astype(np.int32) -
+                             multi.astype(np.int32))) <= 1
+
+
+def test_zero_rating_worker():
+    m = small_cnn()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 12, 12)).astype(np.float32)
+    ref = reference_forward(m, x)
+    out = SplitExecutor(split_model(m, [1.0, 0.0, 1.0])).run(x)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,113 @@
+"""Simulator + memory-model tests: Eq. 1 timing, paper-trend assertions
+(Table II orderings, Figs 8-12 qualitative claims)."""
+import numpy as np
+import pytest
+
+from repro.core.allocation import WorkerParams, ratings_evenly, ratings_for, ratings_freq_only
+from repro.core.memory import (layerwise_peak, peak_ram_per_worker,
+                               single_device_peak)
+from repro.core.simulator import SimConfig, measured_kc, simulate, simulated_k1
+from repro.core.splitting import split_model
+from repro.models import mobilenet_v2_smoke
+from conftest import small_cnn
+
+
+def test_k1_rises_as_clock_drops():
+    """Table I: K1(150MHz) > K1(450) > K1(600) — memory-bound fraction grows."""
+    m = mobilenet_v2_smoke()
+    k600 = simulated_k1(m, 600)
+    k450 = simulated_k1(m, 450)
+    k150 = simulated_k1(m, 150)
+    assert k150 > k450 > k600
+    # paper ratio K1(150)/K1(600) ~ 0.211/0.133 ~ 1.59
+    assert 1.2 < k150 / k600 < 2.1
+
+
+def test_kc_grows_with_workers():
+    m = mobilenet_v2_smoke()
+    assert measured_kc(m, 8) > measured_kc(m, 2) > 0
+
+
+class TestSimulateTrends:
+    def setup_method(self):
+        self.m = mobilenet_v2_smoke()
+
+    def test_compute_decreases_with_workers(self):
+        """Fig. 11: computation time falls monotonically with N."""
+        times = [simulate(self.m, [WorkerParams()] * n).comp_time
+                 for n in (1, 2, 4, 8)]
+        assert times == sorted(times, reverse=True)
+
+    def test_comm_increases_with_workers(self):
+        """Fig. 10: communication rises with N (duplication + transfers)."""
+        cfg = SimConfig()
+        c2 = simulate(self.m, [WorkerParams(d_s_per_kb=0.005)] * 2, cfg=cfg)
+        c8 = simulate(self.m, [WorkerParams(d_s_per_kb=0.005)] * 8, cfg=cfg)
+        assert c8.comm_time > c2.comm_time
+
+    def test_slow_worker_dominates_even_split(self):
+        """Table II: 'Evenly' is worst under heterogeneity."""
+        het = [WorkerParams(f_mhz=600), WorkerParams(f_mhz=150),
+               WorkerParams(f_mhz=450)]
+        even = simulate(self.m, het, ratings_evenly(het)).total_time
+        freq = simulate(self.m, het, ratings_freq_only(het)).total_time
+        assert freq < even
+
+    def test_rating_beats_freq_only_under_delays(self):
+        """Table II cases 5-8: optimized wins once delays differ."""
+        het = [WorkerParams(f_mhz=600, d_s_per_kb=0.02),
+               WorkerParams(f_mhz=396, d_s_per_kb=0.005),
+               WorkerParams(f_mhz=150, d_s_per_kb=0.010)]
+        kc = measured_kc(self.m, 3)
+        k1 = simulated_k1(self.m, 600)
+        freq = simulate(self.m, het, ratings_freq_only(het)).total_time
+        opt = simulate(self.m, het, ratings_for(het, k1, kc)).total_time
+        assert opt < freq
+
+    def test_overlap_reduces_latency(self):
+        w = [WorkerParams(d_s_per_kb=0.01)] * 3
+        base = simulate(self.m, w, cfg=SimConfig(overlap=False)).total_time
+        ovl = simulate(self.m, w, cfg=SimConfig(overlap=True)).total_time
+        assert ovl <= base
+
+
+class TestMemoryModel:
+    def test_single_device_infeasible_full_model(self):
+        """§VII.B.1: full MobileNetV2@112 exceeds a 512 KB budget."""
+        from repro.models import mobilenet_v2
+        m = mobilenet_v2()
+        assert single_device_peak(m) > 512 * 1024
+
+    def test_split_reduces_peak(self):
+        m = mobilenet_v2_smoke()
+        single = single_device_peak(m)
+        p4 = peak_ram_per_worker(split_model(m, np.ones(4))).max()
+        assert p4 < single
+
+    def test_peak_decreases_then_saturates(self):
+        """Fig. 12: biggest gains early, diminishing returns later."""
+        m = mobilenet_v2_smoke()
+        peaks = [peak_ram_per_worker(split_model(m, np.ones(n))).max()
+                 for n in (1, 2, 4, 8, 16)]
+        assert peaks[0] > peaks[1] > peaks[2]
+        gain_early = peaks[0] - peaks[2]
+        gain_late = peaks[3] - peaks[4]
+        assert gain_early > gain_late
+
+    def test_layerwise_within_budget_for_enough_workers(self):
+        """Fig. 8 shape: with enough workers every layer fits a budget that
+        the single device exceeds."""
+        m = mobilenet_v2_smoke()
+        single = single_device_peak(m)
+        budget = single * 0.6
+        lw = layerwise_peak(split_model(m, np.ones(4)))
+        assert lw.max() <= budget
+
+    def test_memory_terms_positive_and_consistent(self):
+        m = small_cnn()
+        plan = split_model(m, np.ones(3))
+        lw = layerwise_peak(plan)
+        assert lw.shape == (len(m.layers), 3)
+        assert np.all(lw >= 0)
+        np.testing.assert_array_equal(peak_ram_per_worker(plan),
+                                      lw.max(axis=0))

@@ -1,0 +1,125 @@
+"""Unit + property tests for the fine-grained splitting (Alg. 1/2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reinterpret import LayerSpec, conv_out_hw
+from repro.core.splitting import (partition_bounds, split_conv_layer,
+                                  split_linear_layer, split_model)
+from conftest import small_cnn
+
+
+def _conv_layer(c_in=4, c_out=6, hw=8, k=3, stride=1):
+    rng = np.random.default_rng(0)
+    oh, ow = conv_out_hw((hw, hw), (k, k), (stride, stride), (1, 1))
+    w = rng.standard_normal((c_out, c_in, k, k)).astype(np.float32)
+    return LayerSpec("conv", "conv", (c_in, hw, hw), (c_out, oh, ow), w,
+                     np.zeros(c_out, np.float32), stride=(stride, stride),
+                     padding=(1, 1))
+
+
+class TestPartitionBounds:
+    def test_exact_partition(self):
+        b = partition_bounds(100, np.array([1.0, 1.0, 1.0, 1.0]))
+        assert b[0] == 0 and b[-1] == 100
+        assert np.all(np.diff(b) >= 0)
+
+    @given(total=st.integers(0, 10_000),
+           ratings=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=16))
+    @settings(max_examples=200, deadline=None)
+    def test_partition_properties(self, total, ratings):
+        r = np.asarray(ratings)
+        if r.sum() <= 0:
+            r = r + 1.0
+        b = partition_bounds(total, r)
+        # exact cover, monotone, proportional within 1 position per worker
+        assert b[0] == 0 and b[-1] == total
+        assert np.all(np.diff(b) >= 0)
+        shares = np.diff(b)
+        exact = r / r.sum() * total
+        assert np.all(np.abs(shares - exact) <= len(r))
+
+    def test_proportionality(self):
+        b = partition_bounds(1000, np.array([3.0, 1.0]))
+        assert abs((b[1] - b[0]) - 750) <= 1
+
+    def test_zero_rating_worker_gets_nothing(self):
+        b = partition_bounds(100, np.array([1.0, 0.0, 1.0]))
+        assert b[2] - b[1] == 0
+
+
+class TestConvSplit(object):
+    def test_every_position_assigned_once(self):
+        layer = _conv_layer()
+        sp = split_conv_layer(layer, np.array([1.0, 2.0, 1.0]))
+        covered = []
+        for sh in sp.shards:
+            covered.extend(range(sh.start, sh.stop))
+        assert covered == list(range(layer.n_out))
+
+    def test_kernel_assignment_matches_positions(self):
+        """Alg. 1: a worker holds kernel c iff it owns a position of
+        channel c; usage counts sum to the positions owned."""
+        layer = _conv_layer(c_out=5, hw=6)
+        sp = split_conv_layer(layer, np.array([1.0, 1.0, 3.0]))
+        hw = layer.out_shape[1] * layer.out_shape[2]
+        for sh in sp.shards:
+            chans = {j // hw for j in range(sh.start, sh.stop)}
+            assert set(sh.kernel_usage) == chans
+            assert sum(sh.kernel_usage.values()) == sh.n_positions
+
+    def test_weight_fragment_bytes(self):
+        layer = _conv_layer(c_in=4, c_out=6, k=3)
+        sp = split_conv_layer(layer, np.array([1.0]))
+        # single worker holds all kernels: 6*(4*3*3) weights + 6 biases
+        assert sp.shards[0].weight_bytes == 6 * 36 + 6
+
+    @given(c=st.integers(1, 8), hw=st.integers(2, 8),
+           n=st.integers(1, 6), seed=st.integers(0, 100))
+    @settings(max_examples=50, deadline=None)
+    def test_random_split_covers(self, c, hw, n, seed):
+        rng = np.random.default_rng(seed)
+        layer = _conv_layer(c_out=c, hw=hw)
+        ratings = rng.uniform(0.1, 5.0, n)
+        sp = split_conv_layer(layer, ratings)
+        total = sum(sh.n_positions for sh in sp.shards)
+        assert total == layer.n_out
+        # contiguous ascending
+        pos = 0
+        for sh in sp.shards:
+            assert sh.start == pos
+            pos = sh.stop
+
+
+class TestLinearSplit:
+    def test_column_split(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((16, 10)).astype(np.float32)
+        layer = LayerSpec("fc", "linear", (16, 1, 1), (10, 1, 1), w,
+                          np.zeros(10, np.float32))
+        sp = split_linear_layer(layer, np.array([1.0, 1.0]))
+        assert sp.shards[0].n_positions + sp.shards[1].n_positions == 10
+        # each column counted once
+        cols = set()
+        for sh in sp.shards:
+            cols |= set(sh.kernel_usage)
+        assert cols == set(range(10))
+
+    def test_fragment_bytes(self):
+        w = np.zeros((16, 10), np.float32)
+        layer = LayerSpec("fc", "linear", (16, 1, 1), (10, 1, 1), w,
+                          np.zeros(10, np.float32))
+        sp = split_linear_layer(layer, np.array([1.0]))
+        assert sp.shards[0].weight_bytes == 10 * 16 + 10
+
+
+def test_split_model_worker_totals():
+    from repro.core.reinterpret import layer_macs
+    m = small_cnn()
+    plan = split_model(m, [2.0, 1.0, 1.0])
+    total_macs = sum(plan.worker_macs(w) for w in range(3))
+    # avgpool stays coordinator-side (zero worker shards) by design
+    expected = sum(layer_macs(l) for l in m.layers if l.kind != "avgpool")
+    assert abs(total_macs - expected) <= len(m.layers) * 3
+    # higher-rated worker gets more work
+    assert plan.worker_macs(0) > plan.worker_macs(1) * 1.3

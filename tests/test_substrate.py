@@ -1,0 +1,250 @@
+"""Substrate tests: optimizer, quantization, fusion, checkpoint, data
+pipeline, elastic runtime, recurrent-cell math."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.allocation import WorkerParams
+from repro.core.fusion import BatchNormParams, fold_batchnorm
+from repro.core.quantize import dequantize, quantize_activation, quantize_tensor_per_channel
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.models import mobilenet_v2_smoke
+from repro.runtime.elastic import ElasticCluster, plan_recovery_mesh
+from repro.train.optimizer import (OptConfig, adamw_update, fake_quant_grads,
+                                   global_norm, init_opt_state, schedule)
+
+
+class TestOptimizer:
+    def test_adamw_minimizes_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = init_opt_state(params)
+        cfg = OptConfig(lr=0.2, weight_decay=0.0, warmup_steps=0,
+                        total_steps=200, min_lr_frac=1.0)
+        for _ in range(150):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, opt, _ = adamw_update(g, opt, params, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_clipping(self):
+        params = {"w": jnp.zeros(3)}
+        opt = init_opt_state(params)
+        cfg = OptConfig(clip_norm=1.0)
+        g = {"w": jnp.full(3, 100.0)}
+        _, _, metrics = adamw_update(g, opt, params, cfg)
+        assert float(metrics["grad_norm"]) == pytest.approx(
+            float(global_norm(g)))
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                        min_lr_frac=0.1)
+        assert float(schedule(jnp.asarray(5), cfg)) == pytest.approx(0.5)
+        assert float(schedule(jnp.asarray(10), cfg)) == pytest.approx(1.0)
+        assert float(schedule(jnp.asarray(100), cfg)) == pytest.approx(0.1, rel=1e-2)
+
+    @given(bits=st.integers(4, 8), seed=st.integers(0, 50))
+    @settings(max_examples=30, deadline=None)
+    def test_fake_quant_error_bound(self, bits, seed):
+        rng = np.random.default_rng(seed)
+        g = {"w": jnp.asarray(rng.standard_normal(100).astype(np.float32))}
+        gq = fake_quant_grads(g, bits=bits)
+        scale = float(jnp.max(jnp.abs(g["w"]))) / (2 ** (bits - 1) - 1)
+        assert float(jnp.max(jnp.abs(gq["w"] - g["w"]))) <= scale / 2 + 1e-7
+
+
+class TestQuantize:
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_error_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((8, 4, 3, 3)).astype(np.float32)
+        q, s = quantize_tensor_per_channel(w, 0)
+        back = q.astype(np.float32) * s[:, None, None, None]
+        per_ch_scale = np.abs(w).max(axis=(1, 2, 3)) / 127
+        assert np.all(np.abs(back - w) <= per_ch_scale[:, None, None, None]
+                      * 0.5 + 1e-7)
+
+    def test_activation_quant(self):
+        x = np.linspace(-2, 2, 100).astype(np.float32)
+        q = quantize_activation(x, 2.0 / 127)
+        assert q.dtype == np.int8
+        np.testing.assert_allclose(dequantize(q, 2.0 / 127), x, atol=0.01)
+
+
+class TestFusion:
+    def test_bn_fold_equals_unfused(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((6, 4, 3, 3)).astype(np.float32)
+        b = rng.standard_normal(6).astype(np.float32)
+        bn = BatchNormParams(
+            gamma=rng.uniform(0.5, 1.5, 6).astype(np.float32),
+            beta=rng.uniform(-1, 1, 6).astype(np.float32),
+            mean=rng.uniform(-1, 1, 6).astype(np.float32),
+            var=rng.uniform(0.5, 2.0, 6).astype(np.float32))
+        wf, bf = fold_batchnorm(w, b, bn)
+        x = rng.standard_normal((4, 8, 8)).astype(np.float32)
+        conv = lambda wt: jax.lax.conv_general_dilated(
+            jnp.asarray(x)[None], jnp.asarray(wt), (1, 1), "SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+        y_unfused = (np.asarray(conv(w)) + b[:, None, None] - bn.mean[:, None, None]) \
+            / np.sqrt(bn.var + bn.eps)[:, None, None] * bn.gamma[:, None, None] \
+            + bn.beta[:, None, None]
+        y_fused = np.asarray(conv(wf)) + bf[:, None, None]
+        np.testing.assert_allclose(y_fused, y_unfused, rtol=1e-4, atol=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                "opt": {"m": [jnp.zeros(2), jnp.ones(3)],
+                        "step": jnp.asarray(7)}}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        out = restore_checkpoint(str(tmp_path), 7, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomicity_tmp_ignored(self, tmp_path):
+        os.makedirs(tmp_path / "step_5.tmp")
+        assert latest_step(str(tmp_path)) is None
+        save_checkpoint(str(tmp_path), 3, {"w": jnp.zeros(2)})
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_async_save(self, tmp_path):
+        t = save_checkpoint(str(tmp_path), 1, {"w": jnp.ones(4)},
+                            blocking=False)
+        t.join()
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3)})
+
+    def test_overwrite_same_step(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.ones(2)})
+        out = restore_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones(2))
+
+
+class TestData:
+    def test_deterministic(self):
+        d = SyntheticLM(1000, seed=3)
+        b1 = d.batch(5, 8, 16)
+        b2 = d.batch(5, 8, 16)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_shards_disjoint_and_cover(self):
+        d = SyntheticLM(1000, seed=3)
+        full = d.batch(2, 8, 16)
+        shards = [d.batch(2, 8, 16, shard=i, n_shards=4) for i in range(4)]
+        assert all(s["tokens"].shape == (2, 16) for s in shards)
+        # different shards differ (PRNG keyed on shard)
+        assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
+
+    def test_prefetcher(self):
+        seen = []
+        pf = Prefetcher(lambda i: {"i": i}, depth=2)
+        for _ in range(5):
+            seen.append(next(pf)["i"])
+        pf.close()
+        assert seen == [0, 1, 2, 3, 4]
+
+
+class TestElastic:
+    def _cluster(self):
+        m = mobilenet_v2_smoke()
+        workers = [WorkerParams(f_mhz=600, flash_bytes=1 << 20)
+                   for _ in range(4)]
+        return ElasticCluster(m, workers, k1=0.133, kc=2.0,
+                              heartbeat_timeout=0.1)
+
+    def test_failure_replan(self):
+        c = self._cluster()
+        n0 = c.plan.n_workers
+        c.mark_failed(3)
+        assert c.check()
+        assert c.plan.n_workers == n0 - 1
+
+    def test_heartbeat_timeout(self):
+        c = self._cluster()
+        now = time.monotonic()
+        c.heartbeat(0, now)
+        c.heartbeat(1, now)
+        c.heartbeat(2, now)
+        # worker 3 silent past the timeout
+        c.health[3].last_heartbeat = now - 1.0
+        assert c.check(now)
+        assert 3 not in c.alive_indices
+
+    def test_straggler_demoted(self):
+        c = self._cluster()
+        for w in range(4):
+            c.report_step_time(w, 1.0 if w else 10.0)   # worker 0 is 10x slow
+        macs_before = c.plan.worker_macs(0)
+        assert c.check()
+        assert c.plan.worker_macs(0) < macs_before
+
+    def test_all_dead_raises(self):
+        c = self._cluster()
+        for w in range(4):
+            c.mark_failed(w)
+        with pytest.raises(RuntimeError):
+            c.check()
+
+    def test_recovery_mesh(self):
+        assert plan_recovery_mesh(512) == (32, 16)
+        assert plan_recovery_mesh(250) == (15, 16)
+        with pytest.raises(ValueError):
+            plan_recovery_mesh(8)
+
+
+class TestRecurrentCells:
+    def test_rglru_scan_equals_stepwise(self):
+        """Associative-scan RG-LRU == sequential per-token recurrence."""
+        from repro.nn.recurrent import linear_scan
+        rng = np.random.default_rng(0)
+        B, S, D = 2, 17, 5
+        a = jnp.asarray(rng.uniform(0.1, 0.99, (B, S, D)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+        h0 = jnp.asarray(rng.standard_normal((B, D)).astype(np.float32))
+        got = linear_scan(a, b, h0=h0)
+        h = h0
+        exp = []
+        for t in range(S):
+            h = a[:, t] * h + b[:, t]
+            exp.append(h)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.stack([np.asarray(e) for e in exp], 1),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_mlstm_chunked_equals_stepwise(self):
+        """Chunkwise-parallel mLSTM == the sequential step recurrence."""
+        from repro.nn.recurrent import mlstm_sequence, mlstm_step
+        rng = np.random.default_rng(1)
+        B, S, H, dk = 2, 16, 2, 8
+        q = jnp.asarray(rng.standard_normal((B, S, H, dk)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((B, S, H, dk)).astype(np.float32)) / np.sqrt(dk)
+        v = jnp.asarray(rng.standard_normal((B, S, H, dk)).astype(np.float32))
+        ig = jnp.asarray(rng.standard_normal((B, S, H)).astype(np.float32))
+        lf = jnp.asarray(jax.nn.log_sigmoid(
+            jnp.asarray(rng.standard_normal((B, S, H)).astype(np.float32))))
+        h_chunk, final_c = mlstm_sequence(q, k, v, ig, lf, chunk=4)
+        state = (jnp.zeros((B, H, dk, dk)), jnp.zeros((B, H, dk)),
+                 jnp.zeros((B, H)))
+        outs = []
+        for t in range(S):
+            h_t, state = mlstm_step(q[:, t], k[:, t], v[:, t], ig[:, t],
+                                    lf[:, t], state)
+            outs.append(h_t)
+        exp = np.stack([np.asarray(o) for o in outs], axis=1)
+        np.testing.assert_allclose(np.asarray(h_chunk), exp, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(final_c[0]),
+                                   np.asarray(state[0]), rtol=2e-4, atol=2e-4)
