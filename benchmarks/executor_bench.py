@@ -1,0 +1,125 @@
+"""Eager vs compiled split-executor benchmark (the engine perf trajectory).
+
+Measures wall-clock per batch for the eager reference ``SplitExecutor`` and
+the jitted ``CompiledSplitExecutor`` over {config} x {float, int8} x
+{batch 1, batch 8} on heterogeneous ratings, and writes the rows to
+``BENCH_executor.json`` at the repo root:
+
+    {config, mode, batch, eager_s, compiled_s, speedup}
+
+Compilation is excluded (one warmup per compiled entry); the eager executor
+is warmed once per mode so its per-op jit caches are hot too — the measured
+gap is dispatch/host-sync vs a single fused XLA computation, not compile
+time.
+
+Run:  PYTHONPATH=src python -m benchmarks.executor_bench [--quick]
+(--quick: smoke config only, fewer iters — used by the CI smoke run.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULT_PATH = _REPO_ROOT / "BENCH_executor.json"
+
+BATCHES = (1, 8)
+RATINGS = (3.0, 1.0, 2.0, 0.5)          # heterogeneous 4-worker cluster
+
+
+def _configs(quick: bool):
+    from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
+    cfgs = [("smoke", mobilenet_v2_smoke, 32, 3)]
+    if not quick:
+        cfgs.append(("mnv2_112", mobilenet_v2_paper, 112, 2))
+    return cfgs
+
+
+def _time(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_rows(quick: bool = False) -> list[dict]:
+    from repro.core import (CompiledSplitExecutor, SplitExecutor,
+                            calibrate_scales, quantize_model,
+                            reference_forward, split_model)
+
+    rng = np.random.default_rng(0)
+    rows: list[dict] = []
+    for name, make_model, hw, iters in _configs(quick):
+        model = make_model()
+        x = rng.standard_normal((3, hw, hw)).astype(np.float32)
+        scales = calibrate_scales(
+            model, [x],
+            lambda m, xx: reference_forward(m, xx,
+                                            collect_activations=True)[1])
+        qm = quantize_model(model, scales)
+        plan = split_model(model, np.asarray(RATINGS))
+        eager = SplitExecutor(plan, qm)
+        compiled = CompiledSplitExecutor(plan, qm)
+        xs = {b: np.stack([rng.standard_normal((3, hw, hw)).astype(np.float32)
+                           for _ in range(b)]) for b in BATCHES}
+        for mode in ("float", "int8"):
+            eager.run(x, mode=mode)                 # warm per-op jit caches
+            for batch in BATCHES:
+                data = xs[batch]
+                eager_s = _time(
+                    lambda: [eager.run(data[i], mode=mode)
+                             for i in range(batch)],
+                    iters)
+                compiled.warmup((3, hw, hw), batch=batch, mode=mode)
+                compiled_s = _time(
+                    lambda: compiled.run_batch(data, mode=mode), iters)
+                rows.append(dict(config=name, mode=mode, batch=batch,
+                                 eager_s=round(eager_s, 6),
+                                 compiled_s=round(compiled_s, 6),
+                                 speedup=round(eager_s / compiled_s, 2)))
+    return rows
+
+
+def write_results(rows: list[dict]) -> dict:
+    import jax
+    payload = dict(
+        benchmark="executor_eager_vs_compiled",
+        backend=jax.default_backend(),
+        ratings=list(RATINGS),
+        rows=rows,
+    )
+    RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def bench_executor(quick: bool = False) -> list[tuple]:
+    """run.py suite entry: benchmark, persist JSON, return CSV rows."""
+    rows = bench_rows(quick=quick)
+    write_results(rows)
+    out = []
+    for r in rows:
+        out.append((f"executor_{r['config']}_{r['mode']}_b{r['batch']}",
+                    r["compiled_s"],
+                    f"eager={r['eager_s']}s speedup={r['speedup']}x"))
+    out.append(("executor_bench_json", 1.0, str(RESULT_PATH.name)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke config only (CI)")
+    args = ap.parse_args()
+    rows = bench_rows(quick=args.quick)
+    payload = write_results(rows)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

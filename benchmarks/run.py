@@ -1,14 +1,21 @@
-"""Benchmark driver: one function per paper table/figure + kernel bench.
+"""Benchmark driver: one function per paper table/figure + kernel bench +
+the executor engine bench (which also writes BENCH_executor.json).
 Prints ``name,value,derived`` CSV (run: PYTHONPATH=src python -m benchmarks.run).
+Set REPRO_BENCH_QUICK=1 to restrict the executor bench to the smoke config
+(the CI smoke invocation).
 """
 from __future__ import annotations
 
+import functools
+import os
 import sys
 import time
 
 
 def main() -> None:
-    from . import kernel_bench, paper_benchmarks as pb
+    from . import executor_bench, kernel_bench, paper_benchmarks as pb
+    quick = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0", "false",
+                                                            "False")
     suites = [
         ("Table I (K1 calibration)", pb.table1_k1),
         ("Table II (allocation strategies)", pb.table2_allocation),
@@ -17,6 +24,8 @@ def main() -> None:
         ("Figs 10-11 (layer-wise comm/comp)", pb.fig10_fig11_layerwise),
         ("Fig 12 (memory scalability)", pb.fig12_scalability),
         ("Kernels", kernel_bench.bench_kernels),
+        ("Executor (eager vs compiled)",
+         functools.partial(executor_bench.bench_executor, quick=quick)),
     ]
     print("name,value,derived")
     failures = 0

@@ -15,6 +15,29 @@ fragments and (b) the activation slice the coordinator routed them — the
 per-worker bounding-box slice of the padded input.  No worker ever holds a
 full layer's weights or activations, which is the paper's memory claim; the
 analytic accounting lives in core/memory.py.
+
+Two executors share those semantics:
+
+* :class:`SplitExecutor` — the **eager** reference oracle.  One Python-level
+  dispatch per layer per shard, host sync between layers.  Faithful to the
+  MCU protocol step-for-step, supports ``collect_activations`` (used for
+  calibration), and is what every other path is tested against.  Use it for
+  correctness work and anything that needs per-layer visibility.
+
+* :class:`CompiledSplitExecutor` — the **compiled** engine.  At construction
+  it precomputes every shard's static geometry (channel spans, bbox slices,
+  routed input windows, flat index maps — :func:`mapping.compile_shard_geometry`)
+  and the int8 epilogue constants, then lowers the *entire* SplitPlan into a
+  single ``jax.jit``-ed function per mode: only pure jnp ops inside the
+  trace, no host sync until the final output.  In int8 mode the hot ops
+  route through the Pallas kernels (``kernels.dwconv`` for 3x3 depthwise,
+  ``kernels.qgemm`` for conv-as-im2col and linear shards) when
+  ``use_pallas`` is enabled — on by default on TPU, with a pure-jnp fallback
+  elsewhere that performs the *same float32 epilogue arithmetic*, so both
+  paths (and the eager oracle) agree bit-for-bit on int8.  ``run_batch``
+  vmaps the traced function over a leading sample axis so serving amortizes
+  compilation and dispatch across requests.  Use it for throughput: serving,
+  benchmarks, batched evaluation.
 """
 from __future__ import annotations
 
@@ -23,10 +46,11 @@ import jax
 import jax.numpy as jnp
 
 from .fusion import apply_activation
-from .mapping import worker_input_regions
-from .quantize import QuantizedModel, dequantize, quantize_activation, requantize
+from .mapping import compile_shard_geometry, worker_input_regions
+from .quantize import (QuantizedModel, epilogue_params,
+                       quantize_activation_jnp, requantize)
 from .reinterpret import LayerSpec
-from .splitting import LayerSplit, SplitPlan, WorkerShard
+from .splitting import LayerSplit, ShardGeometry, SplitPlan, WorkerShard
 
 
 def _pad_chw(x, padding):
@@ -49,11 +73,33 @@ def _conv_chw(x, w, stride, int8: bool):
     return out[0]
 
 
+def _avgpool_int8(x_q, in_scale: float, out_scale: float):
+    """Coordinator-side global average pool, requantized.  The spatial sum is
+    exact int32; the mean + rescale collapse into a single f32 multiply so
+    eager and jitted execution round identically (see quantize.epilogue_params
+    for the no-float-adds contract shared by both executors)."""
+    hw = x_q.shape[-2] * x_q.shape[-1]
+    factor = float(in_scale) / (hw * float(out_scale))
+    s = jnp.sum(x_q.astype(jnp.int32), axis=(-2, -1), keepdims=True)
+    return jnp.clip(jnp.round(s.astype(jnp.float32) * factor),
+                    -127, 127).astype(jnp.int8)
+
+
+def _residual_add_int8(cur_q, cur_scale: float, other_q, other_scale: float):
+    """Coordinator-side residual add (Alg. 4 line 9): the stashed activation
+    is requantized to ``cur_scale`` (one f32 multiply + round), then added in
+    exact int32.  Shared by both executors — bit-identical eager vs jitted."""
+    ratio = float(other_scale) / float(cur_scale)
+    r = jnp.round(other_q.astype(jnp.float32) * ratio).astype(jnp.int32)
+    return jnp.clip(cur_q.astype(jnp.int32) + r, -127, 127).astype(jnp.int8)
+
+
 def _worker_compute(layer: LayerSpec, shard: WorkerShard, x_pad,
                     weight, bias, int8: bool):
     """Compute the shard's flat output range using only the fragment weights
     and the routed input slice.  Returns a flat vector of len n_positions
-    (raw accumulator: float32 or int32; bias added; activation NOT applied)."""
+    (raw accumulator: float32, or int32 with the int32 bias ``b_q`` already
+    added — exact; activation NOT applied)."""
     if shard.n_positions == 0:
         dt = jnp.int32 if int8 else jnp.float32
         return jnp.zeros((0,), dt)
@@ -90,7 +136,6 @@ def _worker_compute(layer: LayerSpec, shard: WorkerShard, x_pad,
     out = out + bias[c_lo:c_hi + 1][:, None, None]
     # flat-select [s, e) out of the bbox
     flat = out.reshape(-1)
-    offset = c_lo * hw + row_lo * w_out  # flat index of bbox origin... per-channel!
     # bbox layout: channel-major over (c_lo..c_hi, row_lo..row_hi, w). Build
     # the index map from global flat [s,e) to bbox flat.
     idx = jnp.arange(s, e)
@@ -104,14 +149,21 @@ def _worker_compute(layer: LayerSpec, shard: WorkerShard, x_pad,
 
 
 class SplitExecutor:
-    """Runs Algorithm 4 over a SplitPlan.
+    """Runs Algorithm 4 over a SplitPlan, eagerly (the reference oracle).
 
     ``mode``: "float" (fp32) or "int8" (W8A8, requires a QuantizedModel).
+    See the module docstring for when to prefer :class:`CompiledSplitExecutor`.
     """
 
     def __init__(self, plan: SplitPlan, qmodel: QuantizedModel | None = None):
         self.plan = plan
         self.qmodel = qmodel
+        self._epilogues: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    def _epilogue(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        if i not in self._epilogues:
+            self._epilogues[i] = epilogue_params(self.qmodel.layers[i])
+        return self._epilogues[i]
 
     # -- single-layer worker pass -----------------------------------------
     def _run_layer_float(self, layer: LayerSpec, split: LayerSplit, x):
@@ -131,36 +183,38 @@ class SplitExecutor:
     def _run_layer_int8(self, i: int, layer: LayerSpec, split: LayerSplit, x_q):
         ql = self.qmodel.layers[i]
         if layer.kind == "avgpool":
-            # coordinator-side in real domain, then requantize
-            xf = dequantize(np.asarray(x_q), ql.in_scale)
-            y = xf.mean(axis=(1, 2), keepdims=True)
-            return jnp.asarray(quantize_activation(y, ql.out_scale))
+            return _avgpool_int8(x_q, ql.in_scale, ql.out_scale)
         x_pad = _pad_chw(x_q, layer.padding) if layer.kind != "linear" else x_q
         w = jnp.asarray(ql.w_q)
-        b = jnp.asarray(ql.b_q.astype(np.int32))
+        scale, b_q = self._epilogue(i)
+        b = jnp.asarray(b_q)
         parts = [
             _worker_compute(layer, sh, x_pad, w, b, int8=True)
             for sh in split.shards
         ]
-        acc = np.asarray(jnp.concatenate(parts))  # int32 flat
-        c_of = (np.arange(layer.n_out) // (layer.out_shape[1] * layer.out_shape[2])
-                if layer.kind != "linear" else np.arange(layer.n_out))
-        y_q = requantize(acc, ql.in_scale, ql.w_scale, ql.out_scale,
-                         layer.activation, channel_of=c_of)
-        return jnp.asarray(y_q.reshape(layer.out_shape))
+        acc = jnp.concatenate(parts)  # int32 flat, bias included (exact)
+        if layer.kind != "linear":
+            hw = layer.out_shape[1] * layer.out_shape[2]
+            scale = scale[np.arange(layer.n_out) // hw]
+        y_q = requantize(acc, jnp.asarray(scale), float(ql.out_scale),
+                         layer.activation)
+        return y_q.reshape(layer.out_shape)
 
     # -- full-model execution ----------------------------------------------
     def run(self, x: np.ndarray, mode: str = "float",
             collect_activations: bool = False):
         """x: (C, H, W) input sample.  Returns final output (and per-layer
         activations if requested — used for calibration)."""
+        if mode not in ("float", "int8"):
+            raise ValueError(f"unknown mode {mode!r} (want 'float' or 'int8')")
         model = self.plan.model
         stash: dict[str, jnp.ndarray] = {}
         acts = []
         if mode == "int8":
             if self.qmodel is None:
                 raise ValueError("int8 mode requires a QuantizedModel")
-            cur = jnp.asarray(quantize_activation(np.asarray(x), self.qmodel.input_scale))
+            cur = quantize_activation_jnp(jnp.asarray(x),
+                                          self.qmodel.input_scale)
         else:
             cur = jnp.asarray(x, dtype=jnp.float32)
         for i, (layer, split) in enumerate(zip(model.layers, self.plan.splits)):
@@ -174,10 +228,8 @@ class SplitExecutor:
                 other = stash[layer.residual_from]
                 if mode == "int8":
                     ql = self.qmodel.layers[i]
-                    oth_scale, oth_idx = other
-                    yf = dequantize(np.asarray(cur), ql.out_scale) + \
-                        dequantize(np.asarray(oth_idx), oth_scale)
-                    cur = jnp.asarray(quantize_activation(yf, ql.out_scale))
+                    oth_scale, oth_q = other
+                    cur = _residual_add_int8(cur, ql.out_scale, oth_q, oth_scale)
                 else:
                     cur = cur + other
             if layer.save_as is not None:
@@ -190,6 +242,248 @@ class SplitExecutor:
         if collect_activations:
             return np.asarray(cur), acts
         return np.asarray(cur)
+
+
+# ---------------------------------------------------------------------------
+# Compiled engine
+# ---------------------------------------------------------------------------
+
+def _kernel_eligible_dwconv(layer: LayerSpec) -> bool:
+    """The Pallas dwconv kernel covers exactly MobileNet-style depthwise
+    convs: 3x3, SAME padding 1, square stride."""
+    return (layer.kind == "dwconv" and layer.kernel == (3, 3)
+            and layer.padding == (1, 1)
+            and layer.stride[0] == layer.stride[1])
+
+
+class CompiledSplitExecutor:
+    """Lowers a whole :class:`SplitPlan` into one jitted function per mode.
+
+    All shard geometry (channel spans, routed input windows, bbox offsets)
+    is precomputed host-side via :func:`mapping.compile_shard_geometry`; the
+    traced function contains only static slices and pure jnp/Pallas ops, so
+    a full forward pass is a single XLA dispatch with no host round-trips.
+
+    Parameters
+    ----------
+    plan, qmodel:
+        As for :class:`SplitExecutor`.
+    use_pallas:
+        Route int8 dwconv/conv/linear shards through the Pallas kernels
+        (``kernels.dwconv``, ``kernels.qgemm``).  ``None`` auto-detects:
+        enabled on TPU, disabled elsewhere (where the pure-jnp fallback is
+        faster than interpret-mode Pallas but computes the identical result).
+    interpret:
+        Forwarded to the kernels when ``use_pallas`` is active (``None``
+        auto-detects; pass ``True`` to exercise the kernel path on CPU).
+
+    ``run``/``run_batch`` accept float inputs in both modes; int8 mode
+    quantizes on-device inside the trace.  ``collect_activations`` is not
+    supported — use the eager :class:`SplitExecutor` for calibration.
+    """
+
+    def __init__(self, plan: SplitPlan, qmodel: QuantizedModel | None = None,
+                 *, use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+        self.plan = plan
+        self.qmodel = qmodel
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        self.interpret = interpret
+        self._geometry: list[list[ShardGeometry | None]] = [
+            compile_shard_geometry(sp.layer, sp) for sp in plan.splits]
+        self._save_scale: dict[str, float] = {}
+        if qmodel is not None:
+            for i, layer in enumerate(plan.model.layers):
+                if layer.save_as is not None:
+                    self._save_scale[layer.save_as] = float(
+                        qmodel.layers[i].out_scale)
+        self._fns: dict[str, callable] = {}
+        self._batch_fns: dict[str, callable] = {}
+
+    # -- traced per-layer bodies ------------------------------------------
+    def _layer_float(self, i: int, layer: LayerSpec, split: LayerSplit, cur):
+        if layer.kind == "avgpool":
+            return jnp.mean(cur, axis=(1, 2), keepdims=True)
+        if layer.kind == "linear":
+            w = jnp.asarray(layer.weight)
+            b = jnp.asarray(layer.bias if layer.bias is not None
+                            else np.zeros(layer.out_shape[0], np.float32))
+            xv = cur.reshape(-1).astype(jnp.float32)
+            parts = [xv @ w[:, sh.start:sh.stop] + b[sh.start:sh.stop]
+                     for sh in split.shards if sh.n_positions]
+            y = jnp.concatenate(parts).reshape(layer.out_shape)
+            return apply_activation(y, layer.activation)
+        w = jnp.asarray(layer.weight)
+        b = jnp.asarray(layer.bias if layer.bias is not None
+                        else np.zeros(layer.out_shape[0], np.float32))
+        x_pad = _pad_chw(cur, layer.padding)
+        parts = []
+        for g in self._geometry[i]:
+            if g is None:
+                continue
+            x_s = x_pad[:, g.in_r0:g.in_r1, :]
+            if layer.kind == "dwconv":
+                x_s = x_s[g.c_lo:g.c_hi + 1]
+            out = _conv_chw(x_s, w[g.c_lo:g.c_hi + 1], layer.stride,
+                            int8=False)
+            out = out + b[g.c_lo:g.c_hi + 1][:, None, None]
+            flat = out.reshape(-1)
+            parts.append(flat[g.bbox_start:g.bbox_start + g.n_positions])
+        y = jnp.concatenate(parts).reshape(layer.out_shape)
+        return apply_activation(y, layer.activation)
+
+    def _layer_int8(self, i: int, layer: LayerSpec, split: LayerSplit, cur):
+        ql = self.qmodel.layers[i]
+        if layer.kind == "avgpool":
+            return _avgpool_int8(cur, ql.in_scale, ql.out_scale)
+        scale, b_q = epilogue_params(ql)
+        scale_j, b_j = jnp.asarray(scale), jnp.asarray(b_q)
+        out_scale = float(ql.out_scale)
+        w_q = jnp.asarray(ql.w_q)
+
+        if layer.kind == "linear":
+            xv = cur.reshape(-1)
+            parts = []
+            for sh in split.shards:
+                if not sh.n_positions:
+                    continue
+                s, e = sh.start, sh.stop
+                if self.use_pallas:
+                    from ..kernels.qgemm.ops import qgemm_padded
+                    y = qgemm_padded(xv[None, :], w_q[:, s:e], scale_j[s:e],
+                                     b_j[s:e], activation=layer.activation,
+                                     out_scale=out_scale,
+                                     interpret=self.interpret)[0]
+                else:
+                    acc = xv.astype(jnp.int32) @ w_q[:, s:e].astype(jnp.int32)
+                    y = requantize(acc + b_j[s:e], scale_j[s:e], out_scale,
+                                   layer.activation)
+                parts.append(y)
+            return jnp.concatenate(parts).reshape(layer.out_shape)
+
+        c_out, h_out, w_out = layer.out_shape
+        hw = h_out * w_out
+        geoms = [g for g in self._geometry[i] if g is not None]
+
+        if self.use_pallas and _kernel_eligible_dwconv(layer):
+            from ..kernels.dwconv.ops import dwconv
+            parts = []
+            for g in geoms:
+                y = dwconv(cur[g.c_lo:g.c_hi + 1],
+                           w_q[g.c_lo:g.c_hi + 1, 0],
+                           scale_j[g.c_lo:g.c_hi + 1],
+                           b_j[g.c_lo:g.c_hi + 1],
+                           stride=layer.stride[0],
+                           activation=layer.activation, out_scale=out_scale,
+                           interpret=self.interpret)
+                # the kernel computes the fragment's full rows: the shard's
+                # flat range starts at g.start - c_lo*hw in the fragment
+                flat = y.reshape(-1)
+                off = g.start - g.c_lo * hw
+                parts.append(flat[off:off + g.n_positions])
+            return jnp.concatenate(parts).reshape(layer.out_shape)
+
+        if self.use_pallas and layer.kind == "conv":
+            from ..kernels.qgemm.ops import im2col, qgemm_padded
+            patches, _ = im2col(cur, layer.kernel, layer.stride, layer.padding)
+            w2 = w_q.reshape(c_out, -1).T         # (Cin*kh*kw, Cout) int8
+            parts = []
+            for g in geoms:
+                y = qgemm_padded(patches, w2[:, g.c_lo:g.c_hi + 1],
+                                 scale_j[g.c_lo:g.c_hi + 1],
+                                 b_j[g.c_lo:g.c_hi + 1],
+                                 activation=layer.activation,
+                                 out_scale=out_scale,
+                                 interpret=self.interpret)
+                flat = y.T.reshape(-1)            # fragment full rows, CHW
+                off = g.start - g.c_lo * hw
+                parts.append(flat[off:off + g.n_positions])
+            return jnp.concatenate(parts).reshape(layer.out_shape)
+
+        # pure-jnp fallback: same int32 accumulation (bias included, exact)
+        # + float32 multiply-only epilogue as the kernels — bit-identical
+        x_pad = _pad_chw(cur, layer.padding)
+        parts = []
+        for g in geoms:
+            x_s = x_pad[:, g.in_r0:g.in_r1, :]
+            if layer.kind == "dwconv":
+                x_s = x_s[g.c_lo:g.c_hi + 1]
+            acc = _conv_chw(x_s, w_q[g.c_lo:g.c_hi + 1], layer.stride,
+                            int8=True)
+            acc = acc + b_j[g.c_lo:g.c_hi + 1][:, None, None]
+            flat = acc.reshape(-1)
+            parts.append(flat[g.bbox_start:g.bbox_start + g.n_positions])
+        acc = jnp.concatenate(parts)
+        c_of = np.arange(layer.n_out) // hw
+        y = requantize(acc, jnp.asarray(scale[c_of]), out_scale,
+                       layer.activation)
+        return y.reshape(layer.out_shape)
+
+    # -- plan lowering ------------------------------------------------------
+    def _build(self, mode: str):
+        if mode not in ("float", "int8"):
+            raise ValueError(f"unknown mode {mode!r} (want 'float' or 'int8')")
+        if mode == "int8" and self.qmodel is None:
+            raise ValueError("int8 mode requires a QuantizedModel")
+        model = self.plan.model
+
+        def fn(x):
+            if mode == "int8":
+                cur = quantize_activation_jnp(x, self.qmodel.input_scale)
+            else:
+                cur = jnp.asarray(x, jnp.float32)
+            stash: dict[str, jnp.ndarray] = {}
+            for i, (layer, split) in enumerate(zip(model.layers,
+                                                   self.plan.splits)):
+                cur = cur.reshape(layer.in_shape)
+                if mode == "int8":
+                    cur = self._layer_int8(i, layer, split, cur)
+                else:
+                    cur = self._layer_float(i, layer, split, cur)
+                if layer.residual_from is not None:
+                    if mode == "int8":
+                        cur = _residual_add_int8(
+                            cur, float(self.qmodel.layers[i].out_scale),
+                            stash[layer.residual_from],
+                            self._save_scale[layer.residual_from])
+                    else:
+                        cur = cur + stash[layer.residual_from]
+                if layer.save_as is not None:
+                    stash[layer.save_as] = cur
+            return cur
+
+        return fn
+
+    def _fn(self, mode: str):
+        if mode not in self._fns:
+            self._fns[mode] = jax.jit(self._build(mode))
+        return self._fns[mode]
+
+    def _batch_fn(self, mode: str):
+        if mode not in self._batch_fns:
+            self._batch_fns[mode] = jax.jit(jax.vmap(self._build(mode)))
+        return self._batch_fns[mode]
+
+    # -- public API ---------------------------------------------------------
+    def run(self, x: np.ndarray, mode: str = "float") -> np.ndarray:
+        """x: (C, H, W) float input sample (int8 mode quantizes on-device)."""
+        return np.asarray(self._fn(mode)(jnp.asarray(x, jnp.float32)))
+
+    def run_batch(self, xs: np.ndarray, mode: str = "float") -> np.ndarray:
+        """xs: (B, C, H, W) float batch; returns (B, *out_shape).  One XLA
+        dispatch for the whole batch (vmap over the traced plan)."""
+        return np.asarray(self._batch_fn(mode)(jnp.asarray(xs, jnp.float32)))
+
+    def warmup(self, input_shape=None, batch: int | None = None,
+               mode: str = "float") -> None:
+        """Force compilation ahead of serving (zeros input)."""
+        shape = tuple(input_shape or self.plan.model.input_shape)
+        if batch is None:
+            self.run(np.zeros(shape, np.float32), mode)
+        else:
+            self.run_batch(np.zeros((batch, *shape), np.float32), mode)
 
 
 def reference_forward(model, x: np.ndarray, collect_activations: bool = False):

@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from .reinterpret import LayerSpec
-from .splitting import LayerSplit
+from .splitting import LayerSplit, ShardGeometry
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +171,56 @@ def worker_input_regions(layer: LayerSpec, split: LayerSplit) -> list[list[Input
                                for r, ivs in col_map.items()}
                     regions.append(InputRegion(c_lo, c_hi, col_map))
         out.append(regions)
+    return out
+
+
+def compile_shard_geometry(layer: LayerSpec,
+                           split: LayerSplit) -> list[ShardGeometry | None]:
+    """Precompute each conv/dwconv shard's static geometry (paper Alg. 3
+    made static): channel span, output-row interval, routed padded-input row
+    window, and the flat map from the global output range into the shard's
+    bounding box.  Entries are ``None`` for empty shards and for layer kinds
+    whose shards carry no spatial geometry (linear / avgpool).
+
+    This is the host-side half of the compiled executor: everything here is
+    data-independent, so the traced function consumes only the resulting
+    Python ints (static slices) and constant index arrays.
+    """
+    if layer.kind not in ("conv", "dwconv"):
+        return [None] * len(split.shards)
+    c_out, h_out, w_out = layer.out_shape
+    hw = h_out * w_out
+    sh, _ = layer.stride
+    kh, _ = layer.kernel
+    out: list[ShardGeometry | None] = []
+    for shard in split.shards:
+        if shard.n_positions == 0:
+            out.append(None)
+            continue
+        s, e = shard.start, shard.stop
+        c_lo, c_hi = s // hw, (e - 1) // hw
+        if c_hi > c_lo:
+            # union bbox over partial first/last channels spans all rows
+            row_lo, row_hi = 0, h_out - 1
+        else:
+            row_lo = (s - c_lo * hw) // w_out
+            row_hi = (e - 1 - c_lo * hw) // w_out
+        in_r0 = row_lo * sh
+        in_r1 = row_hi * sh + kh
+        idx = np.arange(s, e)
+        c = idx // hw
+        rem = idx % hw
+        r = rem // w_out
+        col = rem % w_out
+        n_rows = row_hi - row_lo + 1
+        bbox_index = (c - c_lo) * (n_rows * w_out) + (r - row_lo) * w_out + col
+        # shards are contiguous ascending ranges, so the bbox map is a
+        # contiguous run (ShardGeometry.bbox_start relies on this)
+        assert np.array_equal(bbox_index,
+                              np.arange(len(bbox_index)) + bbox_index[0])
+        out.append(ShardGeometry(shard.worker, s, e, int(c_lo), int(c_hi),
+                                 int(row_lo), int(row_hi), int(in_r0),
+                                 int(in_r1), bbox_index))
     return out
 
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from .fusion import apply_activation
@@ -82,21 +83,45 @@ def quantize_model(model: ReinterpretedModel, act_scales: list[float]) -> Quanti
     return QuantizedModel(model, qlayers, act_scales[0])
 
 
-def requantize(acc_i32: np.ndarray, s_in: float, w_scale: np.ndarray,
-               out_scale: float, activation: str | None,
-               channel_of: np.ndarray | None = None) -> np.ndarray:
-    """int32 accumulator -> int8 output at ``out_scale``.
+def epilogue_params(ql: QuantizedLayer) -> tuple[np.ndarray, np.ndarray]:
+    """The int8 layer's fused-epilogue constants: the float32 per-channel
+    dequant multiplier ``scale = s_in * w_scale`` and the int32 bias ``b_q``
+    (already at accumulator scale).
 
-    ``channel_of``: for flat per-position accumulators, the output channel of
-    each position (to select the per-channel scale); None if acc is already
-    laid out (C, ...) with channel leading.
+    The epilogue contract — shared bit-for-bit by the eager executor, the
+    compiled jnp path and the Pallas kernels — is
+
+        y_real = f32(acc_i32 + b_q) * scale            # one f32 multiply
+        q_out  = clip(round(y_real * (1 / out_scale)))  # one f32 multiply
+
+    The bias is added in exact int32 arithmetic and every float step is a
+    *multiply*: float adds are deliberately avoided because XLA contracts
+    ``a*b + c`` into an FMA inside large fused graphs (jit) but not in
+    op-by-op dispatch, which flips requantization rounding at ties.  With
+    multiplies only, eager and jitted execution round identically.
     """
-    if channel_of is not None:
-        m = s_in * w_scale[channel_of]
-    else:
-        shape = [1] * acc_i32.ndim
-        shape[0] = -1
-        m = (s_in * w_scale).reshape(shape)
-    y_real = acc_i32.astype(np.float64) * m      # back to real-valued domain
-    y_real = apply_activation(y_real, activation)
-    return np.clip(np.round(y_real / out_scale), -127, 127).astype(np.int8)
+    m = (ql.in_scale * ql.w_scale).astype(np.float32)
+    return m, ql.b_q.astype(np.int32)
+
+
+def requantize(acc_i32, scale, out_scale: float, activation: str | None):
+    """Biased int32 accumulator -> int8 output at ``out_scale`` (jnp,
+    on-device).  ``scale`` is the float32 multiplier array from
+    :func:`epilogue_params`, broadcastable against ``acc_i32`` (per leading
+    channel for (C, H, W) accumulators, per position for flat accumulators).
+    See :func:`epilogue_params` for the exactness contract.
+    """
+    y = acc_i32.astype(jnp.float32) * scale
+    y = apply_activation(y, activation)
+    return jnp.clip(jnp.round(y * (1.0 / float(out_scale))),
+                    -127, 127).astype(jnp.int8)
+
+
+def quantize_activation_jnp(x, scale: float):
+    """jnp counterpart of :func:`quantize_activation` (float32
+    multiply-by-reciprocal — see :func:`epilogue_params` for why) — used
+    on-device by both executors so the eager and compiled int8 paths round
+    identically."""
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.clip(jnp.round(x * (1.0 / float(scale))),
+                    -127, 127).astype(jnp.int8)

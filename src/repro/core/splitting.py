@@ -120,6 +120,54 @@ def split_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardGeometry:
+    """Static output/input geometry of one conv/dwconv shard, precomputed
+    host-side so a traced executor contains no geometry arithmetic.
+
+    All fields are plain Python ints / numpy arrays fixed at plan-compile
+    time (the flat ranges are data-independent): the channel span the worker
+    holds kernels for, the output-row interval it produces, the padded-input
+    row window the coordinator routes to it, and the flat map from its global
+    output range ``[start, stop)`` into its computed bounding box.
+
+    Because shards are contiguous ascending flat ranges and the bbox spans
+    full rows whenever the shard crosses a channel boundary, ``bbox_index``
+    is always a contiguous run — ``bbox_start`` exposes it as a plain slice
+    offset so the hot path is a static slice, not a gather.  The index map is
+    kept (and property-tested) because it is the general contract.
+    """
+
+    worker: int
+    start: int                      # global flat output range [start, stop)
+    stop: int
+    c_lo: int                       # inclusive channel span of the fragment
+    c_hi: int
+    row_lo: int                     # inclusive output-row interval computed
+    row_hi: int
+    in_r0: int                      # padded-input row window routed to the
+    in_r1: int                      # worker (half-open)
+    bbox_index: np.ndarray          # int64 (n_positions,) map into bbox flat
+
+    @property
+    def n_positions(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def n_channels(self) -> int:
+        return self.c_hi - self.c_lo + 1
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_hi - self.row_lo + 1
+
+    @property
+    def bbox_start(self) -> int:
+        """Offset of ``start`` inside the shard's bbox flat buffer (the
+        contiguous-slice fast path; see class docstring)."""
+        return int(self.bbox_index[0]) if self.n_positions else 0
+
+
+@dataclasses.dataclass(frozen=True)
 class SplitPlan:
     """Full-model split: per-layer shards + per-worker totals."""
 

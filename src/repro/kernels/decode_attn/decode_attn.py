@@ -16,6 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..backend import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -59,9 +61,11 @@ def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attn(q, k, v, lengths, *, block_s: int = 512,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """q: (B, K, G, hd); k, v: (B, K, S, hd); lengths: (B,) int32 valid
-    cache lengths.  Returns (B, K, G, hd) in q.dtype."""
+    cache lengths.  Returns (B, K, G, hd) in q.dtype.
+    ``interpret=None`` auto-detects the backend (see kernels.backend)."""
+    interpret = resolve_interpret(interpret)
     b, kh, g, hd = q.shape
     s = k.shape[2]
     assert s % block_s == 0, (s, block_s)

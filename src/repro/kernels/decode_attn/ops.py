@@ -9,7 +9,7 @@ from .ref import decode_attn_ref
 
 
 def flash_decode(q, cache_k, cache_v, lengths, *, block_s: int = 512,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """q: (B, 1, K, G, hd); cache_k/v: (B, S, K, hd); lengths: (B,).
     Returns (B, 1, K, G, hd)."""
     qk = q[:, 0]                                     # (B, K, G, hd)

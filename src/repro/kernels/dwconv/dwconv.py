@@ -16,10 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..backend import resolve_interpret
+
 
 def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
                    *, stride: int, activation: str | None,
-                   out_scale: float | None):
+                   out_scale: float | None, int_bias: bool):
     x = x_ref[...].astype(jnp.int32)              # (bc, H+2, W+2)
     w = w_ref[...].astype(jnp.int32)              # (bc, 3, 3)
     oh, ow = o_ref.shape[1], o_ref.shape[2]
@@ -31,14 +33,22 @@ def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
                                j + (ow - 1) * stride + 1),
                 (1, stride, stride))
             acc += window * w[:, i, j][:, None, None]
-    y = acc.astype(jnp.float32) * scale_ref[...][:, None, None] \
-        + bias_ref[...][:, None, None]
+    if int_bias:
+        # b_q added in exact int32; float steps are multiplies only so the
+        # result is bit-identical to the executors' jnp epilogue (no
+        # FMA-contraction sensitivity — see core.quantize).
+        acc = acc + bias_ref[...][:, None, None]
+        y = acc.astype(jnp.float32) * scale_ref[...][:, None, None]
+    else:
+        y = acc.astype(jnp.float32) * scale_ref[...][:, None, None] \
+            + bias_ref[...][:, None, None]
     if activation == "relu":
         y = jnp.maximum(y, 0.0)
     elif activation == "relu6":
         y = jnp.clip(y, 0.0, 6.0)
     if out_scale is not None:
-        o_ref[...] = jnp.clip(jnp.round(y / out_scale), -127, 127).astype(jnp.int8)
+        o_ref[...] = jnp.clip(jnp.round(y * (1.0 / out_scale)),
+                              -127, 127).astype(jnp.int8)
     else:
         o_ref[...] = y.astype(o_ref.dtype)
 
@@ -48,17 +58,23 @@ def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
                                              "interpret"))
 def dwconv3x3(x_pad, w, scale, bias, *, stride: int = 1,
               activation: str | None = None, out_scale: float | None = None,
-              block_c: int = 8, interpret: bool = True):
+              block_c: int = 8, interpret: bool | None = None):
     """x_pad: (C, H+2, W+2) int8 (pre-padded by 1); w: (C, 3, 3) int8;
-    scale/bias: (C,) f32.  Returns (C, oh, ow) int8 or f32.
-    C must be a multiple of block_c (ops.py pads)."""
+    scale: (C,) f32; bias: (C,) f32 (real-domain, f32 epilogue) or int32
+    (quantized ``b_q``, added in exact int32 — the bit-exact executor path).
+    Returns (C, oh, ow) int8 or f32.  C must be a multiple of block_c
+    (ops.py pads).
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     c, hp, wp = x_pad.shape
     assert c % block_c == 0
     oh = (hp - 3) // stride + 1
     ow = (wp - 3) // stride + 1
     out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    int_bias = jnp.issubdtype(jnp.asarray(bias).dtype, jnp.integer)
     kernel = functools.partial(_dwconv_kernel, stride=stride,
-                               activation=activation, out_scale=out_scale)
+                               activation=activation, out_scale=out_scale,
+                               int_bias=int_bias)
     return pl.pallas_call(
         kernel,
         grid=(c // block_c,),

@@ -9,8 +9,9 @@ from .ref import dwconv3x3_ref
 
 
 def dwconv(x_q, w, scale, bias, *, stride: int = 1, activation=None,
-           out_scale=None, block_c: int = 8, interpret: bool = True):
-    """x_q: (C, H, W) int8 (unpadded); SAME 3x3 depthwise conv."""
+           out_scale=None, block_c: int = 8, interpret: bool | None = None):
+    """x_q: (C, H, W) int8 (unpadded); SAME 3x3 depthwise conv.
+    ``interpret=None`` auto-detects the backend (see kernels.backend)."""
     c = x_q.shape[0]
     pad_c = (-c) % block_c
     xp = jnp.pad(x_q, ((0, pad_c), (1, 1), (1, 1)))

@@ -23,7 +23,7 @@ def _pad_to(x, m, axis):
 
 
 def qgemm_padded(x_q, w_q, scale, bias, *, activation=None, out_scale=None,
-                 block_m=128, block_n=128, block_k=128, interpret=True):
+                 block_m=128, block_n=128, block_k=128, interpret=None):
     """qgemm on arbitrary shapes (pads to block multiples, slices back)."""
     m, k = x_q.shape
     n = w_q.shape[1]
@@ -56,7 +56,7 @@ def im2col(x_q, kernel_hw, stride, padding):
 
 
 def qconv2d(x_q, w_q, scale, bias, *, stride=(1, 1), padding=(0, 0),
-            activation=None, out_scale=None, interpret=True):
+            activation=None, out_scale=None, interpret=None):
     """Quantized conv via im2col + qgemm (paper's conv+BN+ReLU6 fused op).
 
     x_q: (C, H, W) int8; w_q: (Cout, Cin, kh, kw) int8;

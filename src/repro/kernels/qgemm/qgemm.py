@@ -19,9 +19,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..backend import resolve_interpret
+
 
 def _qgemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
-                  *, n_k: int, activation: str | None, out_scale: float | None):
+                  *, n_k: int, activation: str | None, out_scale: float | None,
+                  int_bias: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -34,14 +37,21 @@ def _qgemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _epilogue():
-        acc = acc_ref[...].astype(jnp.float32)
-        y = acc * scale_ref[...][None, :] + bias_ref[...][None, :]
+        if int_bias:
+            # b_q added in exact int32; float steps are multiplies only so
+            # the result is bit-identical to the executors' jnp epilogue
+            # (no FMA-contraction sensitivity — see core.quantize).
+            acc = acc_ref[...] + bias_ref[...][None, :]
+            y = acc.astype(jnp.float32) * scale_ref[...][None, :]
+        else:
+            acc = acc_ref[...].astype(jnp.float32)
+            y = acc * scale_ref[...][None, :] + bias_ref[...][None, :]
         if activation == "relu":
             y = jnp.maximum(y, 0.0)
         elif activation == "relu6":
             y = jnp.clip(y, 0.0, 6.0)
         if out_scale is not None:
-            y = jnp.clip(jnp.round(y / out_scale), -127, 127)
+            y = jnp.clip(jnp.round(y * (1.0 / out_scale)), -127, 127)
             o_ref[...] = y.astype(jnp.int8)
         else:
             o_ref[...] = y.astype(o_ref.dtype)
@@ -52,21 +62,29 @@ def _qgemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
                                              "interpret"))
 def qgemm(x_q, w_q, scale, bias, *, activation: str | None = None,
           out_scale: float | None = None, block_m: int = 128,
-          block_n: int = 128, block_k: int = 128, interpret: bool = True):
-    """x_q: (M, K) int8; w_q: (K, N) int8; scale/bias: (N,) f32.
+          block_n: int = 128, block_k: int = 128,
+          interpret: bool | None = None):
+    """x_q: (M, K) int8; w_q: (K, N) int8; scale: (N,) f32.
+
+    ``bias``: (N,) float32 (BN-folded real-domain bias, added in the f32
+    epilogue) **or** int32 (the quantized ``b_q`` at accumulator scale,
+    added in exact int32 before dequant — the bit-exact path the split
+    executors use).
 
     Returns (M, N): int8 (requantized at ``out_scale``) or f32.
     Shapes must be multiples of the block sizes (ops.py pads).
-    ``interpret=True`` runs the kernel body on CPU (this container); on TPU
-    pass interpret=False.
+    ``interpret=None`` auto-detects the backend: the compiled kernel on TPU,
+    interpret mode (kernel body as plain jax ops) everywhere else.
     """
+    interpret = resolve_interpret(interpret)
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     n_k = k // block_k
     out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    int_bias = jnp.issubdtype(jnp.asarray(bias).dtype, jnp.integer)
     kernel = functools.partial(_qgemm_kernel, n_k=n_k, activation=activation,
-                               out_scale=out_scale)
+                               out_scale=out_scale, int_bias=int_bias)
     return pl.pallas_call(
         kernel,
         grid=(m // block_m, n // block_n, n_k),

@@ -115,3 +115,9 @@ def mobilenet_v2_smoke(seed: int = 0) -> ReinterpretedModel:
     cfg = [(1, 8, 1, 1), (6, 16, 2, 2), (6, 24, 2, 2)]
     return mobilenet_v2(input_hw=(32, 32), width_mult=0.25, num_classes=10,
                         seed=seed, cfg=cfg)
+
+
+def mobilenet_v2_paper(seed: int = 0) -> ReinterpretedModel:
+    """The paper's evaluation configuration: full MobileNetV2 at 112x112x3
+    (§VI) — the model the executor benchmark and serving examples target."""
+    return mobilenet_v2(input_hw=(112, 112), seed=seed)

@@ -1,7 +1,60 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device;
-only launch/dryrun.py (and the subprocess tests) force 512/8 host devices."""
+only launch/dryrun.py (and the subprocess tests) force 512/8 host devices.
+
+If ``hypothesis`` is not installed (it is an optional dev dependency — see
+requirements.txt) we install a minimal stand-in module so that test modules
+using ``@given``/``@settings`` still *collect*; every property test then
+skips with a clear reason instead of erroring the whole module at import.
+"""
+import sys
+import types
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _given(*_args, **_kwargs):
+        def deco(_fn):
+            # A signature-free wrapper: pytest sees no fixture params, so the
+            # test runs (and immediately skips) instead of failing to resolve
+            # the strategy arguments.
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed — property test skipped")
+            skipper.__name__ = getattr(_fn, "__name__", "property_test")
+            skipper.__doc__ = getattr(_fn, "__doc__", None)
+            return skipper
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Placeholder for strategy objects (never drawn from)."""
+
+        def __getattr__(self, name):
+            return _AnyStrategy()
+
+        def __call__(self, *a, **k):
+            return _AnyStrategy()
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                  "tuples", "just", "one_of", "text", "composite"):
+        setattr(_st, _name, _AnyStrategy())
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda *a, **k: True
+    _hyp.HealthCheck = _AnyStrategy()
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture
