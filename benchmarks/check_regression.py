@@ -1,0 +1,111 @@
+"""CI benchmark-regression gate: compare a freshly produced
+``BENCH_executor.json`` against the committed baseline and fail (exit 1) on
+a >20% regression:
+
+* ``speedup`` (compiled vs eager) — timing-based and noisy per row even with
+  best-of-N, so the 20% line is held on the **geometric mean** across all
+  overlapping {config, split, mode, batch} rows (a real engine regression
+  drags every row; single-row wobble does not).  Any single row collapsing
+  below half its baseline fails outright — that is a lost fast path, not
+  noise.
+* ``peaks`` (analytic max per-worker peak RAM per partitioning mode) —
+  deterministic, so each entry growing beyond 20% is a real memory
+  regression.
+
+Rows/modes present in only one file are reported but don't fail the gate
+(benchmarks may gain coverage); missing files or empty overlap DO fail — a
+gate that silently compares nothing holds no line.
+
+Run:  python benchmarks/check_regression.py --baseline BENCH_executor.json \
+          --fresh fresh/BENCH_executor.json [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+
+def _row_key(row: dict) -> tuple:
+    # older baselines predate the 'split' field — treat them as neuron-mode
+    return (row["config"], row.get("split", "neuron"), row["mode"],
+            row["batch"])
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], int]:
+    """Returns (failure messages, number of metrics actually compared)."""
+    failures: list[str] = []
+    compared = 0
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
+    fresh_rows = {_row_key(r): r for r in fresh.get("rows", [])}
+    ratios = []
+    for key in sorted(base_rows.keys() & fresh_rows.keys()):
+        b, f = base_rows[key]["speedup"], fresh_rows[key]["speedup"]
+        compared += 1
+        tag = "/".join(str(k) for k in key)
+        ratio = f / b if b > 0 else 1.0
+        ratios.append(ratio)
+        print(f"speedup {tag}: {f:.2f}x (baseline {b:.2f}x, {ratio:.0%})")
+        if ratio < 0.5:
+            failures.append(
+                f"speedup collapse {tag}: {f:.2f}x is below half of "
+                f"baseline {b:.2f}x — a lost fast path, not noise")
+    if ratios:
+        geomean = math.exp(sum(math.log(max(r, 1e-9)) for r in ratios)
+                           / len(ratios))
+        line = (f"geomean speedup ratio over {len(ratios)} rows: "
+                f"{geomean:.0%} of baseline")
+        if geomean < 1.0 - threshold:
+            failures.append(f"{line} (allowed: {1.0 - threshold:.0%})")
+        else:
+            print(f"ok {line}")
+    for key in sorted(base_rows.keys() ^ fresh_rows.keys()):
+        print(f"note: row {key} present in only one file — skipped")
+    base_peaks = baseline.get("peaks", {})
+    fresh_peaks = fresh.get("peaks", {})
+    for config in sorted(base_peaks.keys() & fresh_peaks.keys()):
+        for mode in sorted(base_peaks[config].keys()
+                           & fresh_peaks[config].keys()):
+            b, f = base_peaks[config][mode], fresh_peaks[config][mode]
+            compared += 1
+            if f > b * (1.0 + threshold):
+                failures.append(
+                    f"peak-RAM regression {config}/{mode}: "
+                    f"{f} B > {1.0 + threshold:.0%} of baseline {b} B")
+            else:
+                print(f"ok peak {config}/{mode}: {f} B (baseline {b} B)")
+    return failures, compared
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, type=pathlib.Path,
+                    help="committed BENCH_executor.json")
+    ap.add_argument("--fresh", required=True, type=pathlib.Path,
+                    help="freshly produced BENCH_executor.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args(argv)
+    try:
+        baseline = json.loads(args.baseline.read_text())
+        fresh = json.loads(args.fresh.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot load benchmark JSON: {e}")
+        return 1
+    failures, compared = compare(baseline, fresh, args.threshold)
+    if compared == 0:
+        print("FAIL: no overlapping benchmark metrics to compare")
+        return 1
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        return 1
+    print(f"benchmark gate passed: {compared} metrics within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,15 @@
 """Eager vs compiled split-executor benchmark (the engine perf trajectory).
 
 Measures wall-clock per batch for the eager reference ``SplitExecutor`` and
-the jitted ``CompiledSplitExecutor`` over {config} x {float, int8} x
-{batch 1, batch 8} on heterogeneous ratings, and writes the rows to
+the jitted ``CompiledSplitExecutor`` over {config} x {split mode} x
+{float, int8} x {batch 1, 8} on heterogeneous ratings, and writes the rows to
 ``BENCH_executor.json`` at the repo root:
 
-    {config, mode, batch, eager_s, compiled_s, speedup}
+    {config, split, mode, batch, eager_s, compiled_s, speedup}
+
+plus the analytic per-worker peak-RAM maxima per partitioning mode (the
+``peaks`` section — deterministic, used by the CI regression gate alongside
+the speedups).  The spatial split is benchmarked on the int8 deployment path.
 
 Compilation is excluded (one warmup per compiled entry); the eager executor
 is warmed once per mode so its per-op jit caches are hot too — the measured
@@ -29,11 +33,14 @@ RESULT_PATH = _REPO_ROOT / "BENCH_executor.json"
 
 BATCHES = (1, 8)
 RATINGS = (3.0, 1.0, 2.0, 0.5)          # heterogeneous 4-worker cluster
+PEAK_MODES = ("neuron", "kernel", "spatial")
 
 
 def _configs(quick: bool):
     from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
-    cfgs = [("smoke", mobilenet_v2_smoke, 32, 3)]
+    # best-of-5 on the smoke config: the CI regression gate compares the
+    # eager/compiled speedup ratio, so damp run-to-run timing noise
+    cfgs = [("smoke", mobilenet_v2_smoke, 32, 5)]
     if not quick:
         cfgs.append(("mnv2_112", mobilenet_v2_paper, 112, 2))
     return cfgs
@@ -48,13 +55,14 @@ def _time(fn, iters: int) -> float:
     return best
 
 
-def bench_rows(quick: bool = False) -> list[dict]:
+def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
     from repro.core import (CompiledSplitExecutor, SplitExecutor,
-                            calibrate_scales, quantize_model,
-                            reference_forward, split_model)
+                            calibrate_scales, peak_ram_per_worker,
+                            quantize_model, reference_forward, split_model)
 
     rng = np.random.default_rng(0)
     rows: list[dict] = []
+    peaks: dict[str, dict[str, int]] = {}
     for name, make_model, hw, iters in _configs(quick):
         model = make_model()
         x = rng.standard_normal((3, hw, hw)).astype(np.float32)
@@ -63,36 +71,45 @@ def bench_rows(quick: bool = False) -> list[dict]:
             lambda m, xx: reference_forward(m, xx,
                                             collect_activations=True)[1])
         qm = quantize_model(model, scales)
-        plan = split_model(model, np.asarray(RATINGS))
-        eager = SplitExecutor(plan, qm)
-        compiled = CompiledSplitExecutor(plan, qm)
+        plans = {split: split_model(model, np.asarray(RATINGS), mode=split)
+                 for split in PEAK_MODES}
+        peaks[name] = {split: int(peak_ram_per_worker(plan).max())
+                       for split, plan in plans.items()}
+        del plans["kernel"]       # timing rows cover neuron + spatial
         xs = {b: np.stack([rng.standard_normal((3, hw, hw)).astype(np.float32)
                            for _ in range(b)]) for b in BATCHES}
-        for mode in ("float", "int8"):
-            eager.run(x, mode=mode)                 # warm per-op jit caches
-            for batch in BATCHES:
-                data = xs[batch]
-                eager_s = _time(
-                    lambda: [eager.run(data[i], mode=mode)
-                             for i in range(batch)],
-                    iters)
-                compiled.warmup((3, hw, hw), batch=batch, mode=mode)
-                compiled_s = _time(
-                    lambda: compiled.run_batch(data, mode=mode), iters)
-                rows.append(dict(config=name, mode=mode, batch=batch,
-                                 eager_s=round(eager_s, 6),
-                                 compiled_s=round(compiled_s, 6),
-                                 speedup=round(eager_s / compiled_s, 2)))
-    return rows
+        for split, plan in plans.items():
+            eager = SplitExecutor(plan, qm)
+            compiled = CompiledSplitExecutor(plan, qm)
+            # spatial is benchmarked on the deployment path only (int8)
+            modes = ("int8",) if split == "spatial" else ("float", "int8")
+            for mode in modes:
+                eager.run(x, mode=mode)             # warm per-op jit caches
+                for batch in BATCHES:
+                    data = xs[batch]
+                    eager_s = _time(
+                        lambda: [eager.run(data[i], mode=mode)
+                                 for i in range(batch)],
+                        iters)
+                    compiled.warmup((3, hw, hw), batch=batch, mode=mode)
+                    compiled_s = _time(
+                        lambda: compiled.run_batch(data, mode=mode), iters)
+                    rows.append(dict(config=name, split=split, mode=mode,
+                                     batch=batch,
+                                     eager_s=round(eager_s, 6),
+                                     compiled_s=round(compiled_s, 6),
+                                     speedup=round(eager_s / compiled_s, 2)))
+    return rows, peaks
 
 
-def write_results(rows: list[dict]) -> dict:
+def write_results(rows: list[dict], peaks: dict) -> dict:
     import jax
     payload = dict(
         benchmark="executor_eager_vs_compiled",
         backend=jax.default_backend(),
         ratings=list(RATINGS),
         rows=rows,
+        peaks=peaks,
     )
     RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -100,13 +117,18 @@ def write_results(rows: list[dict]) -> dict:
 
 def bench_executor(quick: bool = False) -> list[tuple]:
     """run.py suite entry: benchmark, persist JSON, return CSV rows."""
-    rows = bench_rows(quick=quick)
-    write_results(rows)
+    rows, peaks = bench_rows(quick=quick)
+    write_results(rows, peaks)
     out = []
     for r in rows:
-        out.append((f"executor_{r['config']}_{r['mode']}_b{r['batch']}",
+        out.append((f"executor_{r['config']}_{r['split']}_{r['mode']}"
+                    f"_b{r['batch']}",
                     r["compiled_s"],
                     f"eager={r['eager_s']}s speedup={r['speedup']}x"))
+    for config, by_mode in peaks.items():
+        for split, peak in by_mode.items():
+            out.append((f"peak_{config}_{split}_kb", peak / 1024.0,
+                        "max per-worker peak RAM"))
     out.append(("executor_bench_json", 1.0, str(RESULT_PATH.name)))
     return out
 
@@ -116,8 +138,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke config only (CI)")
     args = ap.parse_args()
-    rows = bench_rows(quick=args.quick)
-    payload = write_results(rows)
+    rows, peaks = bench_rows(quick=args.quick)
+    payload = write_results(rows, peaks)
     print(json.dumps(payload, indent=2))
 
 

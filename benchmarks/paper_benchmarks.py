@@ -14,7 +14,8 @@ import numpy as np
 from repro.core.allocation import (WorkerParams, ratings_evenly, ratings_for,
                                    ratings_freq_only)
 from repro.core.memory import layerwise_peak, peak_ram_per_worker, single_device_peak
-from repro.core.simulator import SimConfig, measured_kc, simulate, simulated_k1
+from repro.core.simulator import (SimConfig, compare_modes, measured_kc,
+                                  simulate, simulated_k1)
 from repro.core.splitting import split_model
 from repro.models import mobilenet_v2
 
@@ -33,7 +34,7 @@ _D_EFF_T2 = 0.0006
 
 def calibrated_simconfig(model) -> SimConfig:
     macs = model.total_macs()
-    out_kb = sum(l.n_out for l in model.layers) / 1024.0
+    out_kb = sum(lyr.n_out for lyr in model.layers) / 1024.0
     # K1(f) = out_kb / (macs * (cpm + ns * f/1000) / 1e6)
     # ratio: (cpm + 0.6 ns) / (cpm + 0.15 ns) = K1_RATIO  ->  ns = a * cpm
     r = _K1_RATIO_TARGET
@@ -145,6 +146,28 @@ def fig10_fig11_layerwise() -> list[tuple]:
     late = res[8].layer_comm[-10:].sum()
     rows.append(("fig10_comm_concentrates_early", int(early > late),
                  f"first10={early:.1f}s last10={late:.1f}s"))
+    return rows
+
+
+def mode_tradeoff() -> list[tuple]:
+    """Beyond the paper: kernel/neuron vs spatial partitioning on 8
+    heterogeneous MCUs — the comm/peak-RAM tradeoff the spatial (patch+halo,
+    MCUNetV2-style) mode buys with weight replication + halo recompute."""
+    m = _model()
+    cfg = calibrated_simconfig(m)
+    freqs = (600, 600, 528, 450, 450, 396, 150, 150)
+    workers = [WorkerParams(f_mhz=f, d_s_per_kb=_D_EFF) for f in freqs]
+    k1 = simulated_k1(m, 600, cfg)
+    kc = measured_kc(m, 8, cfg)
+    ratings = ratings_for(workers, k1, kc)
+    rows = []
+    for mode, rep in compare_modes(m, workers, ratings, cfg).items():
+        rows.append((f"modes_{mode}",
+                     rep.total_time_s,
+                     f"comm={rep.comm_time_s:.2f}s "
+                     f"bytes={rep.total_bytes/1e6:.2f}MB "
+                     f"peak={rep.max_peak_ram/1024:.0f}KB "
+                     f"weights={rep.max_weight_bytes/1024:.0f}KB"))
     return rows
 
 

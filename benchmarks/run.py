@@ -1,50 +1,71 @@
 """Benchmark driver: one function per paper table/figure + kernel bench +
 the executor engine bench (which also writes BENCH_executor.json).
-Prints ``name,value,derived`` CSV (run: PYTHONPATH=src python -m benchmarks.run).
-Set REPRO_BENCH_QUICK=1 to restrict the executor bench to the smoke config
-(the CI smoke invocation).
+Prints ``name,value,derived`` CSV.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--smoke]
+  or  PYTHONPATH=src python benchmarks/run.py [--smoke]
+
+``--smoke`` (or REPRO_BENCH_QUICK=1) restricts the executor bench to the
+smoke config — the CI invocation.  Exits non-zero if ANY sub-benchmark
+raises: a failed suite prints an ``<title>,ERROR,...`` row, the remaining
+suites still run, and the failure is reported at exit so CI cannot go green
+on partial results.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import os
 import sys
 import time
 
 
-def main() -> None:
-    from . import executor_bench, kernel_bench, paper_benchmarks as pb
-    quick = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0", "false",
-                                                            "False")
-    suites = [
+def build_suites(quick: bool):
+    try:
+        from . import executor_bench, kernel_bench, paper_benchmarks as pb
+    except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+        import executor_bench, kernel_bench, paper_benchmarks as pb  # noqa: E401
+    return [
         ("Table I (K1 calibration)", pb.table1_k1),
         ("Table II (allocation strategies)", pb.table2_allocation),
         ("Fig 8 (layer-wise peak RAM)", pb.fig8_layer_peak_ram),
         ("Fig 9 (latency scaling)", pb.fig9_latency_scaling),
         ("Figs 10-11 (layer-wise comm/comp)", pb.fig10_fig11_layerwise),
         ("Fig 12 (memory scalability)", pb.fig12_scalability),
+        ("Partitioning modes (comm/peak tradeoff)", pb.mode_tradeoff),
         ("Kernels", kernel_bench.bench_kernels),
         ("Executor (eager vs compiled)",
          functools.partial(executor_bench.bench_executor, quick=quick)),
     ]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke configs only (CI; same as REPRO_BENCH_QUICK=1)")
+    args = ap.parse_args(argv)
+    quick = args.smoke or os.environ.get(
+        "REPRO_BENCH_QUICK", "") not in ("", "0", "false", "False")
     print("name,value,derived")
-    failures = 0
-    for title, fn in suites:
+    failed: list[str] = []
+    for title, fn in build_suites(quick):
         t0 = time.time()
         try:
             rows = fn()
         except Exception as e:  # noqa: BLE001
             print(f"{title},ERROR,{type(e).__name__}: {e}")
-            failures += 1
+            failed.append(title)
             continue
         for name, value, derived in rows:
             if isinstance(value, float):
                 value = f"{value:.4f}"
             print(f"{name},{value},{derived}")
         print(f"# {title}: {time.time()-t0:.1f}s", file=sys.stderr)
-    if failures:
-        sys.exit(1)
+    if failed:
+        print(f"# FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -16,10 +16,10 @@ import time
 import numpy as np
 
 from repro.core import (CompiledSplitExecutor, SplitExecutor, WorkerParams,
-                        calibrate_scales, measured_kc, peak_ram_per_worker,
-                        quantize_model, ratings_for, reference_forward,
-                        simulate, simulated_k1, single_device_peak,
-                        split_model)
+                        calibrate_scales, compare_modes, measured_kc,
+                        peak_ram_per_worker, quantize_model, ratings_for,
+                        reference_forward, simulate, simulated_k1,
+                        single_device_peak, split_model)
 from repro.models import mobilenet_v2
 
 
@@ -29,6 +29,11 @@ def main():
     ap.add_argument("--input-hw", type=int, default=56,
                     help="input resolution (56 keeps CPU latency low; the "
                          "paper uses 112)")
+    ap.add_argument("--mode", choices=("neuron", "kernel", "spatial"),
+                    default="neuron",
+                    help="partitioning mode: channel/neuron flat ranges "
+                         "(paper Alg. 1/2) or spatial bands + fused blocks "
+                         "(MCUNetV2-style patches)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -54,14 +59,23 @@ def main():
     k1 = simulated_k1(model, 600)
     kc = measured_kc(model, 8)
     ratings = ratings_for(workers, k1, kc)
-    plan = split_model(model, ratings)
+    plan = split_model(model, ratings, mode=args.mode)
     peaks = peak_ram_per_worker(plan)
+    print(f"partitioning mode: {args.mode}")
     print(f"ratings: {np.round(ratings, 1)}")
     print(f"per-MCU peak RAM: {np.round(peaks/1024,1)} KB (all < 512)")
 
-    sim = simulate(model, workers, ratings)
+    sim = simulate(model, workers, ratings, plan=plan)
     print(f"modeled on-testbed latency/request: {sim.total_time:.2f} s "
           f"(comp {sim.comp_time:.2f} / comm {sim.comm_time:.2f})")
+
+    print("\n== partitioning-mode tradeoff (simulator) ==")
+    for mode, rep in compare_modes(model, workers, ratings).items():
+        print(f"  {mode:8s} total={rep.total_time_s:6.2f}s "
+              f"comm={rep.comm_time_s:6.2f}s "
+              f"bytes={rep.total_bytes/1e6:5.2f}MB "
+              f"peak={rep.max_peak_ram/1024:4.0f}KB "
+              f"weights={rep.max_weight_bytes/1024:5.0f}KB")
 
     print("\n== compile the split plan (one jit per mode/batch) ==")
     engine = CompiledSplitExecutor(plan, qm)

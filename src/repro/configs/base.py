@@ -9,10 +9,6 @@ ShapeDtypeStructs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
-import numpy as np
-
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:

@@ -1,20 +1,23 @@
 """The paper's contribution: fine-grained split CNN inference for networked
 MCUs — reinterpretation, sub-layer splitting, cross-layer activation mapping,
 resource-aware allocation, split execution, and the scaling simulator."""
-from .allocation import (WorkerParams, allocate, capability_rating,
-                         execution_time, proportional_allocation,
-                         ratings_evenly, ratings_for, ratings_freq_only,
-                         redistribute_overflow)
+from .allocation import (WorkerParams, allocate, band_bounds, band_heights,
+                         capability_rating, execution_time,
+                         proportional_allocation, ratings_evenly, ratings_for,
+                         ratings_freq_only, redistribute_overflow)
 from .executor import CompiledSplitExecutor, SplitExecutor, reference_forward
-from .fusion import BatchNormParams, apply_activation, fold_batchnorm
+from .fusion import (BatchNormParams, FusedBlock, apply_activation,
+                     fold_batchnorm, group_blocks)
 from .mapping import (assignm_bruteforce, comm_volume, compile_shard_geometry,
                       routem_bruteforce, worker_input_regions)
 from .memory import layerwise_peak, peak_ram_per_worker, plan_memory, single_device_peak
 from .quantize import (QuantizedModel, calibrate_scales, epilogue_params,
                        quantize_model, requantize)
 from .reinterpret import LayerSpec, ReinterpretedModel, layer_macs, trace_sequential
-from .simulator import SimConfig, SimResult, measured_kc, simulate, simulated_k1
-from .splitting import (LayerSplit, ShardGeometry, SplitPlan, WorkerShard,
-                        partition_bounds, split_layer, split_model)
+from .simulator import (ModeReport, SimConfig, SimResult, compare_modes,
+                        measured_kc, simulate, simulated_k1)
+from .splitting import (LayerSplit, ShardGeometry, SpatialBandGeometry,
+                        SpatialShard, SplitPlan, WorkerShard, partition_bounds,
+                        spatial_band_geometry, split_layer, split_model)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -106,6 +106,37 @@ def allocate(workers: list[WorkerParams], k1: float, kc: float | np.ndarray,
     return r, proportional_allocation(r, model_bytes)
 
 
+# Spatial (patch) partitioning ------------------------------------------------
+
+def band_bounds(ratings: np.ndarray, n_rows: int) -> np.ndarray:
+    """Contiguous output-row bands proportional to capability ratings — Eq. 6
+    applied to the spatial axis instead of the neuron axis (the allocation
+    half of ``mode="spatial"``; splitting.py turns these bounds into per-layer
+    banded shards with halos).
+
+    Returns ``bounds`` of length N+1 with bounds[0]=0, bounds[-1]=n_rows,
+    within one unit of the exact proportional share.  This cumulative
+    rounding is the single partition rule for every axis —
+    ``splitting.partition_bounds`` delegates here for flat neuron/kernel
+    ranges too.
+    """
+    ratings = np.asarray(ratings, dtype=np.float64)
+    if np.any(ratings < 0):
+        raise ValueError("ratings must be non-negative")
+    s = ratings.sum()
+    if s <= 0:
+        raise ValueError("at least one rating must be positive")
+    cum = np.cumsum(ratings) / s
+    bounds = np.concatenate([[0], np.round(cum * n_rows).astype(np.int64)])
+    bounds[-1] = n_rows
+    return np.maximum.accumulate(bounds)
+
+
+def band_heights(ratings: np.ndarray, n_rows: int) -> np.ndarray:
+    """Per-worker band heights (rows) from capability ratings."""
+    return np.diff(band_bounds(ratings, n_rows))
+
+
 # Baselines used in Table II --------------------------------------------------
 
 def ratings_evenly(workers: list[WorkerParams]) -> np.ndarray:

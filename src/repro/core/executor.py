@@ -16,6 +16,14 @@ per-worker bounding-box slice of the padded input.  No worker ever holds a
 full layer's weights or activations, which is the paper's memory claim; the
 analytic accounting lives in core/memory.py.
 
+Spatial plans (``split_model(..., mode="spatial")``) change the unit of
+iteration from layers to *fused blocks* (``SplitPlan.block_groups``): each
+worker receives its block-input row window (band + halo), runs the whole
+expand→dwconv→project chain on the band locally — the expanded hidden
+activation only ever exists at band size — and only the block output is
+aggregated (a static row-axis concat, since bands tile the output rows).
+Residual adds and stashes stay coordinator-side at block boundaries.
+
 Two executors share those semantics:
 
 * :class:`SplitExecutor` — the **eager** reference oracle.  One Python-level
@@ -46,11 +54,12 @@ import jax
 import jax.numpy as jnp
 
 from .fusion import apply_activation
-from .mapping import compile_shard_geometry, worker_input_regions
+from .mapping import compile_shard_geometry
 from .quantize import (QuantizedModel, epilogue_params,
                        quantize_activation_jnp, requantize)
 from .reinterpret import LayerSpec
-from .splitting import LayerSplit, ShardGeometry, SplitPlan, WorkerShard
+from .splitting import (LayerSplit, ShardGeometry, SpatialBandGeometry,
+                        SplitPlan, WorkerShard, spatial_band_geometry)
 
 
 def _pad_chw(x, padding):
@@ -92,6 +101,19 @@ def _residual_add_int8(cur_q, cur_scale: float, other_q, other_scale: float):
     ratio = float(other_scale) / float(cur_scale)
     r = jnp.round(other_q.astype(jnp.float32) * ratio).astype(jnp.int32)
     return jnp.clip(cur_q.astype(jnp.int32) + r, -127, 127).astype(jnp.int8)
+
+
+def _spatial_stage_acc(layer: LayerSpec, geom: SpatialBandGeometry, band_in,
+                       weight, bias, int8: bool):
+    """One spatial-band stage: VALID conv over the explicitly padded input
+    window (interior bands carry halo rows instead of padding; bands touching
+    the tensor edge get real zero rows — both precomputed in ``geom``), plus
+    bias.  Returns the raw accumulator (C_out, n_rows, w_out): float32, or
+    exact int32 with the int32 bias already added."""
+    _, pw = layer.padding
+    x = jnp.pad(band_in, ((0, 0), (geom.pad_top, geom.pad_bot), (pw, pw)))
+    acc = _conv_chw(x, weight, layer.stride, int8)
+    return acc + bias[:, None, None]
 
 
 def _worker_compute(layer: LayerSpec, shard: WorkerShard, x_pad,
@@ -159,11 +181,77 @@ class SplitExecutor:
         self.plan = plan
         self.qmodel = qmodel
         self._epilogues: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._band_geoms: dict[int, list[SpatialBandGeometry | None]] = {}
 
     def _epilogue(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         if i not in self._epilogues:
             self._epilogues[i] = epilogue_params(self.qmodel.layers[i])
         return self._epilogues[i]
+
+    def _band_geometry(self, i: int) -> list[SpatialBandGeometry | None]:
+        if i not in self._band_geoms:
+            sp = self.plan.splits[i]
+            self._band_geoms[i] = spatial_band_geometry(sp.layer, sp)
+        return self._band_geoms[i]
+
+    # -- fused spatial block (band + halo per worker) ----------------------
+    def _run_block_spatial(self, idxs: tuple[int, ...], x, mode: str):
+        """Run one fused block: each worker receives its block-input window
+        (band + halo), executes every stage on the band locally (intermediate
+        activations never materialize at full resolution), and the block
+        output bands are concatenated along the row axis (bands partition the
+        output rows, so concat == aggregate)."""
+        model = self.plan.model
+        geoms = [self._band_geometry(i) for i in idxs]
+        # per-layer constants hoisted out of the worker loop (spatial mode
+        # replicates full weights, so materialize each tensor once per layer,
+        # not once per worker per stage)
+        consts = []
+        for i in idxs:
+            layer = model.layers[i]
+            if mode == "int8":
+                ql = self.qmodel.layers[i]
+                scale, b_q = self._epilogue(i)
+                consts.append((jnp.asarray(ql.w_q),
+                               jnp.asarray(scale)[:, None, None],
+                               jnp.asarray(b_q), float(ql.out_scale)))
+            else:
+                b = jnp.asarray(layer.bias if layer.bias is not None
+                                else np.zeros(layer.out_shape[0], np.float32))
+                consts.append((jnp.asarray(layer.weight), b))
+        parts = []
+        for w in range(self.plan.n_workers):
+            g_last = geoms[-1][w]
+            if g_last is None:
+                continue
+            band = None
+            for li, i in enumerate(idxs):
+                layer = model.layers[i]
+                g = geoms[li][w]
+                if g is None:
+                    # degenerate interior stage: downstream rows come entirely
+                    # from padding, so this stage's band is empty — emit a
+                    # zero-height band for the next stage to pad against.
+                    c_out, _, w_out = layer.out_shape
+                    dt = jnp.int8 if mode == "int8" else jnp.float32
+                    band = jnp.zeros((c_out, 0, w_out), dt)
+                    continue
+                if li == 0:
+                    # the coordinator routes the block-input window only
+                    band = x[:, g.in_lo:g.in_hi, :]
+                if mode == "int8":
+                    w_q, scale_b, b_j, out_scale = consts[li]
+                    acc = _spatial_stage_acc(layer, g, band, w_q, b_j,
+                                             int8=True)
+                    band = requantize(acc, scale_b, out_scale,
+                                      layer.activation)
+                else:
+                    wt, b = consts[li]
+                    acc = _spatial_stage_acc(layer, g, band, wt, b,
+                                             int8=False)
+                    band = apply_activation(acc, layer.activation)
+            parts.append(band)
+        return jnp.concatenate(parts, axis=1)
 
     # -- single-layer worker pass -----------------------------------------
     def _run_layer_float(self, layer: LayerSpec, split: LayerSplit, x):
@@ -207,6 +295,11 @@ class SplitExecutor:
         activations if requested — used for calibration)."""
         if mode not in ("float", "int8"):
             raise ValueError(f"unknown mode {mode!r} (want 'float' or 'int8')")
+        if collect_activations and self.plan.mode == "spatial":
+            raise ValueError(
+                "collect_activations is unsupported in spatial mode (fused "
+                "interior activations never materialize); calibrate with "
+                "reference_forward or a neuron/kernel-mode plan")
         model = self.plan.model
         stash: dict[str, jnp.ndarray] = {}
         acts = []
@@ -217,13 +310,18 @@ class SplitExecutor:
                                           self.qmodel.input_scale)
         else:
             cur = jnp.asarray(x, dtype=jnp.float32)
-        for i, (layer, split) in enumerate(zip(model.layers, self.plan.splits)):
-            cur = cur.reshape(layer.in_shape)
-            if mode == "int8":
-                cur = self._run_layer_int8(i, layer, split, cur)
+        for idxs in self.plan.block_groups:
+            i = idxs[-1]
+            layer = model.layers[i]
+            cur = cur.reshape(model.layers[idxs[0]].in_shape)
+            if self.plan.splits[idxs[0]].mode == "spatial":
+                cur = self._run_block_spatial(idxs, cur, mode)
+            elif mode == "int8":
+                cur = self._run_layer_int8(i, layer, self.plan.splits[i], cur)
             else:
-                cur = self._run_layer_float(layer, split, cur)
-            # coordinator-side residual bookkeeping (Alg. 4 line 9)
+                cur = self._run_layer_float(layer, self.plan.splits[i], cur)
+            # coordinator-side residual bookkeeping (Alg. 4 line 9) — fused
+            # blocks carry it only on their output layer (fusion.group_blocks)
             if layer.residual_from is not None:
                 other = stash[layer.residual_from]
                 if mode == "int8":
@@ -293,6 +391,10 @@ class CompiledSplitExecutor:
         self.interpret = interpret
         self._geometry: list[list[ShardGeometry | None]] = [
             compile_shard_geometry(sp.layer, sp) for sp in plan.splits]
+        self._band_geometry: dict[int, list[SpatialBandGeometry | None]] = {
+            i: spatial_band_geometry(sp.layer, sp)
+            for i, sp in enumerate(plan.splits) if sp.mode == "spatial"}
+        self._int8_cache: dict[int, tuple] = {}
         self._save_scale: dict[str, float] = {}
         if qmodel is not None:
             for i, layer in enumerate(plan.model.layers):
@@ -421,6 +523,92 @@ class CompiledSplitExecutor:
                        layer.activation)
         return y.reshape(layer.out_shape)
 
+    # -- traced fused spatial block ----------------------------------------
+    def _int8_consts(self, i: int):
+        """Per-layer int8 constants (replicated weights, epilogue scale/bias),
+        materialized once per layer — not per worker per stage — so the traced
+        jaxpr carries one copy of each."""
+        if i not in self._int8_cache:
+            ql = self.qmodel.layers[i]
+            scale, b_q = epilogue_params(ql)
+            self._int8_cache[i] = (jnp.asarray(ql.w_q), jnp.asarray(scale),
+                                   jnp.asarray(b_q), float(ql.out_scale))
+        return self._int8_cache[i]
+
+    def _spatial_stage_int8(self, i: int, layer: LayerSpec,
+                            g: SpatialBandGeometry, band):
+        """One int8 band stage: Pallas kernels when enabled (dwconv kernel for
+        eligible 3x3 depthwise, im2col+qgemm for dense conv), else the jnp
+        fallback — identical int32 accumulation and multiply-only epilogue, so
+        all paths agree bit-for-bit with the eager oracle."""
+        w_q, scale_j, b_j, out_scale = self._int8_consts(i)
+        c_out, _, w_out = layer.out_shape
+        _, pw = layer.padding
+        if self.use_pallas and _kernel_eligible_dwconv(layer):
+            from ..kernels.dwconv.ops import dwconv_window
+            xw = jnp.pad(band, ((0, 0), (g.pad_top, g.pad_bot), (1, 1)))
+            return dwconv_window(xw, w_q[:, 0], scale_j, b_j,
+                                 stride=layer.stride[0],
+                                 activation=layer.activation,
+                                 out_scale=out_scale,
+                                 interpret=self.interpret)
+        if self.use_pallas and layer.kind == "conv":
+            from ..kernels.qgemm.ops import im2col, qgemm_padded
+            xw = jnp.pad(band, ((0, 0), (g.pad_top, g.pad_bot), (pw, pw)))
+            patches, _ = im2col(xw, layer.kernel, layer.stride, (0, 0))
+            w2 = w_q.reshape(c_out, -1).T
+            y = qgemm_padded(patches, w2, scale_j, b_j,
+                             activation=layer.activation, out_scale=out_scale,
+                             interpret=self.interpret)
+            return y.T.reshape(c_out, g.n_rows, w_out)
+        acc = _spatial_stage_acc(layer, g, band, w_q, b_j, int8=True)
+        return requantize(acc, scale_j[:, None, None], out_scale,
+                          layer.activation)
+
+    def _block_spatial(self, idxs: tuple[int, ...], cur, mode: str):
+        """Fused spatial block inside the trace: static band slices in, per-
+        band stage chain (expanded hidden exists only at band size), static
+        row-axis concat out."""
+        model = self.plan.model
+        geoms = [self._band_geometry[i] for i in idxs]
+        float_consts = None
+        if mode != "int8":
+            # one copy of each replicated weight per layer in the trace,
+            # shared by every worker's band (int8 uses _int8_consts)
+            float_consts = [
+                (jnp.asarray(model.layers[i].weight),
+                 jnp.asarray(model.layers[i].bias
+                             if model.layers[i].bias is not None
+                             else np.zeros(model.layers[i].out_shape[0],
+                                           np.float32)))
+                for i in idxs]
+        parts = []
+        for w in range(self.plan.n_workers):
+            if geoms[-1][w] is None:
+                continue
+            band = None
+            for li, i in enumerate(idxs):
+                layer = model.layers[i]
+                g = geoms[li][w]
+                if g is None:
+                    # degenerate interior stage (empty band): see the eager
+                    # executor — emit a zero-height band to pad downstream
+                    c_out, _, w_out = layer.out_shape
+                    dt = jnp.int8 if mode == "int8" else jnp.float32
+                    band = jnp.zeros((c_out, 0, w_out), dt)
+                    continue
+                if li == 0:
+                    band = cur[:, g.in_lo:g.in_hi, :]
+                if mode == "int8":
+                    band = self._spatial_stage_int8(i, layer, g, band)
+                else:
+                    wt, b = float_consts[li]
+                    acc = _spatial_stage_acc(layer, g, band, wt, b,
+                                             int8=False)
+                    band = apply_activation(acc, layer.activation)
+            parts.append(band)
+        return jnp.concatenate(parts, axis=1)
+
     # -- plan lowering ------------------------------------------------------
     def _build(self, mode: str):
         if mode not in ("float", "int8"):
@@ -435,13 +623,16 @@ class CompiledSplitExecutor:
             else:
                 cur = jnp.asarray(x, jnp.float32)
             stash: dict[str, jnp.ndarray] = {}
-            for i, (layer, split) in enumerate(zip(model.layers,
-                                                   self.plan.splits)):
-                cur = cur.reshape(layer.in_shape)
-                if mode == "int8":
-                    cur = self._layer_int8(i, layer, split, cur)
+            for idxs in self.plan.block_groups:
+                i = idxs[-1]
+                layer = model.layers[i]
+                cur = cur.reshape(model.layers[idxs[0]].in_shape)
+                if self.plan.splits[idxs[0]].mode == "spatial":
+                    cur = self._block_spatial(idxs, cur, mode)
+                elif mode == "int8":
+                    cur = self._layer_int8(i, layer, self.plan.splits[i], cur)
                 else:
-                    cur = self._layer_float(i, layer, split, cur)
+                    cur = self._layer_float(i, layer, self.plan.splits[i], cur)
                 if layer.residual_from is not None:
                     if mode == "int8":
                         cur = _residual_add_int8(

@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from .reinterpret import LayerSpec
-from .splitting import LayerSplit, ShardGeometry
+from .splitting import LayerSplit, ShardGeometry, SpatialShard
 
 
 # ---------------------------------------------------------------------------
@@ -34,6 +34,9 @@ from .splitting import LayerSplit, ShardGeometry
 def assignm_bruteforce(layer: LayerSpec, split: LayerSplit) -> np.ndarray:
     """Stage 1 of Alg. 3: bitmask over *input* positions of ``layer`` marking
     which workers (computing ``layer``'s outputs) need each input activation."""
+    if split.mode == "spatial":
+        raise ValueError("assignm_bruteforce operates on flat-range shards; "
+                         "spatial bands are covered by worker_input_regions")
     ci, hi, wi = layer.in_shape
     assign_m = np.zeros((ci, hi, wi), dtype=np.int64)
     c_out, h_out, w_out = layer.out_shape
@@ -140,6 +143,19 @@ def worker_input_regions(layer: LayerSpec, split: LayerSplit) -> list[list[Input
     out: list[list[InputRegion]] = []
     for shard in split.shards:
         regions: list[InputRegion] = []
+        if isinstance(shard, SpatialShard):
+            # spatial band: all input channels x the band's receptive-field
+            # row window (band + halo) x full width.  For fused interior
+            # layers this window is produced locally rather than routed, but
+            # it is resident worker RAM either way — and it is where the halo
+            # duplication shows up in the peak-RAM accounting.
+            if shard.n_positions > 0 and shard.in_hi > shard.in_lo:
+                regions.append(InputRegion(
+                    0, ci,
+                    {r: [(0, wi_in)]
+                     for r in range(shard.in_lo, shard.in_hi)}))
+            out.append(regions)
+            continue
         if shard.n_positions > 0:
             if layer.kind in ("linear", "avgpool"):
                 regions.append(InputRegion(
@@ -185,8 +201,11 @@ def compile_shard_geometry(layer: LayerSpec,
     This is the host-side half of the compiled executor: everything here is
     data-independent, so the traced function consumes only the resulting
     Python ints (static slices) and constant index arrays.
+
+    Spatial-mode splits carry banded geometry instead — see
+    :func:`splitting.spatial_band_geometry`; entries here are ``None``.
     """
-    if layer.kind not in ("conv", "dwconv"):
+    if layer.kind not in ("conv", "dwconv") or split.mode == "spatial":
         return [None] * len(split.shards)
     c_out, h_out, w_out = layer.out_shape
     hw = h_out * w_out
@@ -246,16 +265,22 @@ def comm_volume(prev_split: LayerSplit | None, layer: LayerSpec,
     * download: each consumer receives exactly its input region (AssignM-
       driven); overlap across consumers is duplicated traffic — the effect
       that makes communication dominate at higher worker counts (Fig. 9/10).
+
+    Fused spatial blocks only exchange at block boundaries: a layer that is
+    not ``block_first`` downloads nothing (its input band is produced
+    locally by the previous fused stage) and a producer that is not
+    ``block_last`` uploads nothing (its output never leaves the worker).
     """
     n_workers = len(split.shards)
     up = np.zeros(n_workers, dtype=np.int64)
-    if prev_split is not None:
+    if prev_split is not None and prev_split.block_last:
         for shard in prev_split.shards:
             up[shard.worker] += shard.n_positions * itemsize
-    regions = worker_input_regions(layer, split)
     down = np.zeros(n_workers, dtype=np.int64)
-    for wkr, regs in enumerate(regions):
-        down[wkr] = sum(r.n_points for r in regs) * itemsize
+    if split.block_first:
+        regions = worker_input_regions(layer, split)
+        for wkr, regs in enumerate(regions):
+            down[wkr] = sum(r.n_points for r in regs) * itemsize
     unique = layer.n_in * itemsize
     dup = float(down.sum()) / unique if unique else 0.0
     return CommVolume(up, down, dup)

@@ -7,6 +7,13 @@ This is the analytic counterpart of the paper's on-device heap probe
 bytes, and the assigned output bytes.  Weight fragments live in flash on the
 real system, but during computation the active kernel is staged in RAM, so
 the paper's peak includes all three terms.
+
+Spatial mode: a banded shard's input term is its band's receptive-field row
+window (band + halo) across all channels — halo rows are therefore counted
+once per worker that holds them (halo duplication).  For layers inside a
+fused block the window is produced locally rather than routed, but it is
+resident worker RAM all the same, and the weight term is the *full* layer
+(spatial mode replicates weights instead of splitting them).
 """
 from __future__ import annotations
 
@@ -64,5 +71,5 @@ def layerwise_peak(plan: SplitPlan, itemsize: int = 1) -> np.ndarray:
 def single_device_peak(model, itemsize: int = 1) -> int:
     """Monolithic per-layer peak (full in + full weights + full out) — the
     'infeasible on a single MCU' baseline (§VII.B.1)."""
-    return max((l.n_in + l.n_out) * itemsize + l.weight_bytes(itemsize)
-               for l in model.layers)
+    return max((lyr.n_in + lyr.n_out) * itemsize + lyr.weight_bytes(itemsize)
+               for lyr in model.layers)

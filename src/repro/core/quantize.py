@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .fusion import apply_activation
-from .reinterpret import LayerSpec, ReinterpretedModel
+from .reinterpret import ReinterpretedModel
 
 
 @dataclasses.dataclass

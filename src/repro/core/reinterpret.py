@@ -159,10 +159,10 @@ class ReinterpretedModel:
         return self.layers[-1].out_shape
 
     def total_weight_bytes(self, itemsize: int = 1) -> int:
-        return sum(l.weight_bytes(itemsize) for l in self.layers)
+        return sum(lyr.weight_bytes(itemsize) for lyr in self.layers)
 
     def total_macs(self) -> int:
-        return sum(layer_macs(l) for l in self.layers)
+        return sum(layer_macs(lyr) for lyr in self.layers)
 
 
 def layer_macs(layer: LayerSpec) -> int:

@@ -135,13 +135,53 @@ def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
                      peak_ram=layerwise_peak(plan, itemsize=cfg.itemsize))
 
 
+@dataclasses.dataclass(frozen=True)
+class ModeReport:
+    """One partitioning mode's simulated cost profile (compare_modes)."""
+
+    mode: str
+    total_time_s: float
+    comp_time_s: float
+    comm_time_s: float
+    total_bytes: int
+    max_peak_ram: int        # max over layers x workers (Fig. 12's metric)
+    max_weight_bytes: int    # largest per-worker weight footprint
+
+
+def compare_modes(model: ReinterpretedModel, workers: list[WorkerParams],
+                  ratings: np.ndarray | None = None,
+                  cfg: SimConfig | None = None,
+                  modes: tuple[str, ...] = ("neuron", "kernel", "spatial"),
+                  ) -> dict[str, ModeReport]:
+    """Simulate the same deployment under each partitioning mode — the
+    comm/peak-RAM tradeoff report: spatial trades weight replication + halo
+    recompute for a smaller activation working set and less routed traffic in
+    the early high-resolution stages; the channel/neuron modes split weights
+    but route overlapping input regions to every worker."""
+    out: dict[str, ModeReport] = {}
+    for mode in modes:
+        plan = split_model(model, ratings if ratings is not None
+                           else np.ones(len(workers)), mode=mode)
+        res = simulate(model, workers, ratings, cfg, plan=plan)
+        out[mode] = ModeReport(
+            mode=mode,
+            total_time_s=res.total_time,
+            comp_time_s=res.comp_time,
+            comm_time_s=res.comm_time,
+            total_bytes=res.total_bytes,
+            max_peak_ram=int(res.peak_ram.max()),
+            max_weight_bytes=max(plan.worker_weight_bytes(w)
+                                 for w in range(plan.n_workers)))
+    return out
+
+
 def measured_kc(model: ReinterpretedModel, n_workers: int,
                 cfg: SimConfig | None = None) -> float:
     """Estimate Eq. 2's communication coefficient Kc by 'profiling or
     simulation' (§V.B): bytes exchanged per byte of output produced."""
     cfg = cfg or SimConfig()
     plan = split_model(model, np.ones(n_workers))
-    total_out = sum(l.n_out for l in model.layers) * cfg.itemsize
+    total_out = sum(lyr.n_out for lyr in model.layers) * cfg.itemsize
     total_comm = 0
     prev = None
     for split in plan.splits:
@@ -156,6 +196,6 @@ def simulated_k1(model: ReinterpretedModel, f_mhz: float,
     no transfers (the paper's dummy-input measurement)."""
     cfg = cfg or SimConfig()
     macs = model.total_macs()
-    out_kb = sum(l.n_out for l in model.layers) * cfg.itemsize / 1024.0
+    out_kb = sum(lyr.n_out for lyr in model.layers) * cfg.itemsize / 1024.0
     mcycles = macs * (cfg.cycles_per_mac + cfg.flash_ns_per_mac * f_mhz / 1000.0) / 1e6
     return out_kb / mcycles

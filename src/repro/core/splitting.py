@@ -1,12 +1,32 @@
-"""Fine-grained splitting strategy (paper §IV.B, Algorithms 1 and 2).
+"""Fine-grained splitting strategy (paper §IV.B, Algorithms 1 and 2) plus the
+spatial patch mode (MCUNetV2-style, beyond the paper).
 
-Output neurons of every layer are partitioned into contiguous flat-index
-ranges, one per worker, proportional to capability ratings.  For conv layers
-the flat order is CHW row-major, so a worker's range touches a channel span
-``[c_lo, c_hi]`` and the worker receives exactly the kernels ``W[c]`` for the
-channels it touches (Alg. 1 lines 6–10: kernel assignment + usage counting).
-For linear layers each column of the weight matrix is one output neuron
-(Alg. 2), so the worker receives the columns in its range.
+Three partitioning modes:
+
+* ``mode="neuron"`` (default, the paper's Algorithms 1/2): output neurons of
+  every layer are partitioned into contiguous flat-index ranges, one per
+  worker, proportional to capability ratings.  For conv layers the flat order
+  is CHW row-major, so a worker's range touches a channel span ``[c_lo,c_hi]``
+  and the worker receives exactly the kernels ``W[c]`` for the channels it
+  touches (Alg. 1 lines 6–10: kernel assignment + usage counting).  For
+  linear layers each column of the weight matrix is one output neuron
+  (Alg. 2), so the worker receives the columns in its range.
+
+* ``mode="kernel"``: conv/dwconv ranges are snapped to whole-channel
+  boundaries (the strict kernel-wise reading of Alg. 1 — no kernel is ever
+  duplicated, at the cost of coarser load balance).  Linear layers split
+  neuron-wise as in Alg. 2.
+
+* ``mode="spatial"``: conv/dwconv layers are partitioned along the output
+  *height* axis — each worker owns a contiguous band of output rows across
+  **all** channels, receiving the band's receptive-field input window (band +
+  halo rows) and holding the **full** layer weights.  Whole inverted-residual
+  blocks (``fusion.group_blocks``) execute fused per band, so intermediate
+  activations (e.g. MobileNetV2's 6x expanded hidden) exist only at band
+  size.  This trades weight replication + halo recompute for a much smaller
+  activation working set — the winning trade in early high-resolution /
+  low-channel stages where routed input regions dominate per-worker peak RAM.
+  Linear/avgpool layers fall back to their flat splits.
 """
 from __future__ import annotations
 
@@ -14,7 +34,11 @@ import dataclasses
 
 import numpy as np
 
+from .allocation import band_bounds
+from .fusion import group_blocks
 from .reinterpret import LayerSpec, ReinterpretedModel, macs_for_positions
+
+MODES = ("neuron", "kernel", "spatial")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,9 +60,50 @@ class WorkerShard:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpatialShard(WorkerShard):
+    """One worker's output-height band of one conv/dwconv layer
+    (``mode="spatial"``).
+
+    The worker computes output rows ``[row_lo, row_hi)`` of **every** channel
+    and needs (unpadded) input rows ``[in_lo, in_hi)`` — its band's receptive
+    field, i.e. band + halo rows, derived through the layer's row mapping.
+    For layers inside a fused block the band includes the halo rows demanded
+    by downstream stages, so ``n_positions`` over workers can exceed ``n_out``
+    (halo recompute).  ``start``/``stop`` are unused (the band is not a
+    contiguous CHW flat range); ``n_positions`` is overridden accordingly.
+    """
+
+    row_lo: int = 0                 # half-open output-row band
+    row_hi: int = 0
+    in_lo: int = 0                  # half-open unpadded input-row window
+    in_hi: int = 0                  # (band + halo) routed/held by the worker
+    out_channels: int = 0
+    out_width: int = 0
+
+    @property
+    def n_positions(self) -> int:  # type: ignore[override]
+        return (self.row_hi - self.row_lo) * self.out_width * self.out_channels
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_hi - self.row_lo
+
+    @property
+    def in_rows(self) -> int:
+        """Height of the routed/held input window (band + halo)."""
+        return max(self.in_hi - self.in_lo, 0)
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerSplit:
     layer: LayerSpec
     shards: list[WorkerShard]
+    mode: str = "neuron"            # "neuron" | "kernel" | "spatial"
+    # Fused-block position (spatial mode): only the first layer of a block
+    # downloads routed input and only the last uploads aggregated output;
+    # interior activations stay worker-local at band size.
+    block_first: bool = True
+    block_last: bool = True
 
     def shard_of(self, worker: int) -> WorkerShard:
         return self.shards[worker]
@@ -51,21 +116,11 @@ def partition_bounds(total: int, ratings: np.ndarray) -> np.ndarray:
     Uses cumulative rounding so the shares are within 1 of the exact
     proportional amount and the partition is exact (no gaps/overlap) — the
     paper's ``while i - s < n`` loop with the remainder landing on the last
-    worker, made deterministic.
+    worker, made deterministic.  One rounding rule for every axis:
+    delegates to :func:`allocation.band_bounds`, so flat neuron/kernel
+    ranges and spatial row bands can never diverge.
     """
-    ratings = np.asarray(ratings, dtype=np.float64)
-    if np.any(ratings < 0):
-        raise ValueError("ratings must be non-negative")
-    s = ratings.sum()
-    if s <= 0:
-        raise ValueError("at least one rating must be positive")
-    cum = np.cumsum(ratings) / s
-    bounds = np.round(cum * total).astype(np.int64)
-    bounds = np.concatenate([[0], bounds])
-    bounds[-1] = total  # guard rounding
-    # enforce monotonicity (rounding can momentarily tie)
-    bounds = np.maximum.accumulate(bounds)
-    return bounds
+    return band_bounds(ratings, total)
 
 
 def split_conv_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
@@ -108,15 +163,90 @@ def split_linear_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
     return LayerSplit(layer, shards)
 
 
-def split_layer(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
+def split_conv_layer_kernel(layer: LayerSpec, ratings: np.ndarray) -> LayerSplit:
+    """Strict kernel-wise split: contiguous *whole-channel* spans per worker
+    (Alg. 1 without mid-channel boundaries — no kernel duplication)."""
+    if layer.kind not in ("conv", "dwconv"):
+        raise ValueError(f"not a conv layer: {layer.kind}")
+    c, h, w = layer.out_shape
+    hw = h * w
+    c_bounds = partition_bounds(c, ratings)
+    per_kernel_params = int(np.prod(layer.weight.shape[1:])) if layer.weight is not None else 0
+    shards = []
+    for r in range(len(ratings)):
+        c_s, c_e = int(c_bounds[r]), int(c_bounds[r + 1])
+        usage = {c1: hw for c1 in range(c_s, c_e)}
+        wbytes = len(usage) * per_kernel_params + len(usage)
+        shards.append(WorkerShard(r, c_s * hw, c_e * hw, usage, wbytes))
+    return LayerSplit(layer, shards, mode="kernel")
+
+
+def split_layer(layer: LayerSpec, ratings: np.ndarray,
+                mode: str = "neuron") -> LayerSplit:
     if layer.kind in ("conv", "dwconv"):
+        if mode == "kernel":
+            return split_conv_layer_kernel(layer, ratings)
         return split_conv_layer(layer, ratings)
     if layer.kind == "linear":
         return split_linear_layer(layer, ratings)
     # avgpool & friends stay coordinator-side: zero-weight single "shard".
-    n = layer.n_out
     shards = [WorkerShard(r, 0, 0, {}, 0) for r in range(len(ratings))]
     return LayerSplit(layer, shards)
+
+
+def split_block_spatial(layers: list[LayerSpec],
+                        ratings: np.ndarray) -> list[LayerSplit]:
+    """Spatial split of one fused block (or singleton conv layer).
+
+    The *block output* height is banded proportionally to ratings
+    (``allocation.band_bounds``); each layer's per-worker band is then derived
+    backwards through the block with the receptive-field row mapping
+    (``LayerSpec.input_rows_for_output_rows``), so interior stages compute the
+    halo rows their consumers need and the block-input window is exactly the
+    band's receptive field (band + halo).
+    """
+    last = layers[-1]
+    if any(lyr.kind not in ("conv", "dwconv") for lyr in layers):
+        raise ValueError("spatial blocks must contain only conv/dwconv layers")
+    n = len(ratings)
+    h_out = last.out_shape[1]
+    bounds = band_bounds(np.asarray(ratings, dtype=np.float64), h_out)
+    # per layer, per worker: (row_lo, row_hi, in_lo, in_hi)
+    bands: list[list[tuple[int, int, int, int]]] = [
+        [None] * n for _ in layers]  # type: ignore[list-item]
+    for w in range(n):
+        r_lo, r_hi = int(bounds[w]), int(bounds[w + 1])
+        for li in reversed(range(len(layers))):
+            lyr = layers[li]
+            if r_hi > r_lo:
+                in_lo, in_hi = lyr.input_rows_for_output_rows(r_lo, r_hi - 1)
+            else:
+                in_lo = in_hi = 0
+            bands[li][w] = (r_lo, r_hi, in_lo, in_hi)
+            # the upstream stage must produce this stage's input window
+            r_lo, r_hi = in_lo, in_hi
+    splits: list[LayerSplit] = []
+    for li, lyr in enumerate(layers):
+        c_out, _, w_out = lyr.out_shape
+        per_kernel_params = int(np.prod(lyr.weight.shape[1:])) if lyr.weight is not None else 0
+        shards: list[WorkerShard] = []
+        for w in range(n):
+            r_lo, r_hi, in_lo, in_hi = bands[li][w]
+            band_pos = (r_hi - r_lo) * w_out
+            if band_pos > 0:
+                usage = {c1: band_pos for c1 in range(c_out)}
+                # full weights + per-channel bias replicated on active workers
+                wbytes = c_out * per_kernel_params + c_out
+            else:
+                usage, wbytes = {}, 0
+            shards.append(SpatialShard(w, 0, 0, usage, wbytes,
+                                       row_lo=r_lo, row_hi=r_hi,
+                                       in_lo=in_lo, in_hi=in_hi,
+                                       out_channels=c_out, out_width=w_out))
+        splits.append(LayerSplit(lyr, shards, mode="spatial",
+                                 block_first=(li == 0),
+                                 block_last=(li == len(layers) - 1)))
+    return splits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,16 +298,80 @@ class ShardGeometry:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpatialBandGeometry:
+    """Static band geometry of one spatial shard stage, precomputed host-side
+    (the spatial counterpart of :class:`ShardGeometry`): the output-row band,
+    the unpadded input-row window routed to / held by the worker (band +
+    halo), and the explicit zero-padding rows to apply above/below the window
+    so a VALID conv over ``pad(window)`` yields exactly rows
+    ``[row_lo, row_hi)``.  Interior bands get halo rows instead of padding;
+    bands touching the tensor edge get real zeros — both are plain Python
+    ints, so the traced executors contain only static slices.
+    """
+
+    worker: int
+    row_lo: int                     # half-open output-row band
+    row_hi: int
+    in_lo: int                      # half-open unpadded input-row window
+    in_hi: int
+    pad_top: int                    # zero rows above/below the window
+    pad_bot: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_hi - self.row_lo
+
+
+def spatial_band_geometry(layer: LayerSpec,
+                          split: LayerSplit) -> list[SpatialBandGeometry | None]:
+    """Per-worker :class:`SpatialBandGeometry` for one spatial LayerSplit
+    (``None`` for empty bands)."""
+    kh, _ = layer.kernel
+    sh, _ = layer.stride
+    ph, _ = layer.padding
+    out: list[SpatialBandGeometry | None] = []
+    for shard in split.shards:
+        if not isinstance(shard, SpatialShard):
+            raise ValueError("spatial_band_geometry needs SpatialShards")
+        if shard.row_hi <= shard.row_lo:
+            out.append(None)
+            continue
+        # padded-input window of the band: [row_lo*sh, (row_hi-1)*sh + kh)
+        win0 = shard.row_lo * sh
+        win_len = (shard.row_hi - 1 - shard.row_lo) * sh + kh
+        pad_top = max(0, ph - win0)
+        pad_bot = win_len - pad_top - (shard.in_hi - shard.in_lo)
+        assert pad_bot >= 0, "band window shorter than its padded extent"
+        out.append(SpatialBandGeometry(shard.worker, shard.row_lo,
+                                       shard.row_hi, shard.in_lo, shard.in_hi,
+                                       pad_top, pad_bot))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
 class SplitPlan:
-    """Full-model split: per-layer shards + per-worker totals."""
+    """Full-model split: per-layer shards + per-worker totals.
+
+    ``blocks`` holds the fused execution groups (tuples of layer indices) the
+    executors iterate over — singletons except in spatial mode, where whole
+    inverted-residual blocks run fused per band.
+    """
 
     model: ReinterpretedModel
     splits: list[LayerSplit]
     ratings: np.ndarray
+    mode: str = "neuron"
+    blocks: tuple[tuple[int, ...], ...] | None = None
 
     @property
     def n_workers(self) -> int:
         return len(self.ratings)
+
+    @property
+    def block_groups(self) -> tuple[tuple[int, ...], ...]:
+        if self.blocks is not None:
+            return self.blocks
+        return tuple((i,) for i in range(len(self.splits)))
 
     def worker_weight_bytes(self, worker: int) -> int:
         return sum(sp.shard_of(worker).weight_bytes for sp in self.splits)
@@ -188,9 +382,35 @@ class SplitPlan:
             for sp in self.splits)
 
 
-def split_model(model: ReinterpretedModel, ratings) -> SplitPlan:
+def split_model(model: ReinterpretedModel, ratings,
+                mode: str = "neuron") -> SplitPlan:
     """Split every layer with the same ratings vector (paper reuses R across
-    layers; per-layer ratings are supported by calling split_layer directly)."""
+    layers; per-layer ratings are supported by calling split_layer directly).
+
+    ``mode``: ``"neuron"`` (default, Alg. 1/2 flat ranges), ``"kernel"``
+    (whole-channel conv spans), or ``"spatial"`` (output-height bands + fused
+    blocks; see module docstring).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r} (want one of {MODES})")
     ratings = np.asarray(ratings, dtype=np.float64)
-    splits = [split_layer(l, ratings) for l in model.layers]
-    return SplitPlan(model=model, splits=splits, ratings=ratings)
+    if mode != "spatial":
+        splits = [split_layer(lyr, ratings, mode) for lyr in model.layers]
+        return SplitPlan(model=model, splits=splits, ratings=ratings, mode=mode)
+    splits_by_idx: dict[int, LayerSplit] = {}
+    blocks: list[tuple[int, ...]] = []
+    for block in group_blocks(model):
+        layers = [model.layers[i] for i in block.indices]
+        if all(lyr.kind in ("conv", "dwconv") for lyr in layers):
+            for idx, sp in zip(block.indices, split_block_spatial(layers, ratings)):
+                splits_by_idx[idx] = sp
+            blocks.append(tuple(block.indices))
+        else:
+            # linear / avgpool: spatial banding does not apply — flat split,
+            # one singleton block per layer.
+            for idx in block.indices:
+                splits_by_idx[idx] = split_layer(model.layers[idx], ratings)
+                blocks.append((idx,))
+    splits = [splits_by_idx[i] for i in range(len(model.layers))]
+    return SplitPlan(model=model, splits=splits, ratings=ratings,
+                     mode="spatial", blocks=tuple(blocks))

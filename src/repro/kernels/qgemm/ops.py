@@ -3,11 +3,7 @@ multiples, plus the im2col path that lowers the paper's quantized conv +
 folded-BN + ReLU6 onto the GEMM kernel."""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .qgemm import qgemm
 from .ref import qgemm_ref

@@ -22,15 +22,12 @@ import sys
 import time
 import traceback
 
-import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, LM_SHAPES, get_config, get_shape, shape_applicable
-from ..models import lm
 from ..train import serve as serve_lib
 from ..train import trainer as trainer_lib
 from ..train.optimizer import OptConfig
-from ..parallel.sharding import make_rules, use_rules
 from . import analysis
 from .mesh import make_production_mesh
 

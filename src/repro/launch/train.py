@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint

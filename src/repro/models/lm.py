@@ -18,7 +18,6 @@ precomputed frame/patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -26,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..nn.attention import gqa_attention, update_cache
+from ..nn.attention import gqa_attention
 from ..nn.layers import (ParamDef, abstract_params, apply_norm, apply_rope,
                          gelu, init_params, norm_defs, rmsnorm, spec_tree,
                          swish)
@@ -511,12 +510,10 @@ def forward(params, inputs: dict, cfg: ModelConfig, mode: str = "train",
         positions = None  # set after frontend concat below
 
     x = params["embed"].astype(dt)[tokens]
-    prefix = 0
     enc_out = None
     if cfg.family == "vlm" and mode != "decode":
         patches = inputs["patches"].astype(dt) @ params["mm_proj"].astype(dt)
         x = jnp.concatenate([patches, x], axis=1)
-        prefix = patches.shape[1]
     if cfg.family == "audio" and mode != "decode":
         f = inputs["frames"].shape[1]
         fpos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))

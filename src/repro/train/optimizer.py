@@ -5,8 +5,6 @@ cosine schedule — pure JAX, optimizer states sharded like their parameters
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -34,7 +32,8 @@ def schedule(step, cfg: OptConfig):
 
 
 def init_opt_state(params) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -7,7 +7,6 @@ compression, and donation of params/opt state.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

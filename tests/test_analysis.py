@@ -2,7 +2,6 @@
 validated against compiled oracles and synthetic HLO."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import analysis as A

@@ -1,0 +1,116 @@
+"""The benchmark driver's failure contract and the CI regression gate:
+a raising sub-benchmark must fail the run (non-zero exit), and
+check_regression must hold the >20% line in both directions."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))
+
+from benchmarks import check_regression, run as bench_run  # noqa: E402
+
+
+class TestRunExitCode:
+    def test_failing_suite_exits_nonzero(self, monkeypatch, capsys):
+        def boom():
+            raise RuntimeError("kaboom")
+
+        monkeypatch.setattr(bench_run, "build_suites",
+                            lambda quick: [("ok", lambda: [("a", 1.0, "")]),
+                                           ("broken", boom)])
+        assert bench_run.main([]) == 1
+        out = capsys.readouterr().out
+        assert "broken,ERROR,RuntimeError: kaboom" in out
+        assert "a,1.0" in out  # healthy suites still report
+
+    def test_all_green_exits_zero(self, monkeypatch):
+        monkeypatch.setattr(bench_run, "build_suites",
+                            lambda quick: [("ok", lambda: [("a", 1.0, "")])])
+        assert bench_run.main([]) == 0
+
+    def test_smoke_flag_parses(self, monkeypatch):
+        seen = {}
+
+        def suites(quick):
+            seen["quick"] = quick
+            return []
+
+        monkeypatch.setattr(bench_run, "build_suites", suites)
+        # no suites -> "compares nothing" is fine here; exit 0 (no failures)
+        assert bench_run.main(["--smoke"]) == 0
+        assert seen["quick"] is True
+
+
+def _payload(speedup=50.0, peak=10000, speedup2=None):
+    rows = [dict(config="smoke", split="neuron", mode="int8",
+                 batch=8, eager_s=1.0, compiled_s=1.0 / speedup,
+                 speedup=speedup)]
+    if speedup2 is not None:
+        rows.append(dict(config="smoke", split="spatial", mode="int8",
+                         batch=8, eager_s=1.0, compiled_s=1.0 / speedup2,
+                         speedup=speedup2))
+    return dict(rows=rows, peaks=dict(smoke=dict(neuron=peak)))
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return p
+
+
+class TestRegressionGate:
+    def test_within_threshold_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", _payload(speedup=50.0, peak=10000))
+        f = _write(tmp_path, "fresh.json", _payload(speedup=42.0, peak=11000))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_speedup_regression_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _payload(speedup=50.0))
+        f = _write(tmp_path, "fresh.json", _payload(speedup=30.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_single_row_wobble_passes_but_collapse_fails(self, tmp_path):
+        """One noisy row within the geomean budget passes; one row losing
+        its fast path (below half of baseline) fails outright."""
+        b = _write(tmp_path, "base.json",
+                   _payload(speedup=50.0, speedup2=40.0))
+        wobble = _write(tmp_path, "wobble.json",
+                        _payload(speedup=35.0, speedup2=40.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(wobble)]) == 0
+        collapse = _write(tmp_path, "collapse.json",
+                          _payload(speedup=20.0, speedup2=40.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(collapse)]) == 1
+
+    def test_peak_ram_regression_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _payload(peak=10000))
+        f = _write(tmp_path, "fresh.json", _payload(peak=12500))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_empty_overlap_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", dict(rows=[], peaks={}))
+        f = _write(tmp_path, "fresh.json", _payload())
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_missing_file_fails(self, tmp_path):
+        f = _write(tmp_path, "fresh.json", _payload())
+        assert check_regression.main(
+            ["--baseline", str(tmp_path / "nope.json"),
+             "--fresh", str(f)]) == 1
+
+    def test_committed_baseline_selfcompare_passes(self, capsys):
+        """The committed baseline must pass the gate against itself (the CI
+        invariant: identical results are never a regression)."""
+        baseline = _ROOT / "BENCH_executor.json"
+        if not baseline.exists():
+            pytest.skip("no committed baseline")
+        assert check_regression.main(["--baseline", str(baseline),
+                                      "--fresh", str(baseline)]) == 0

@@ -1,7 +1,6 @@
 """Split execution (Alg. 4) must match monolithic inference numerically —
 the core correctness claim of the system."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.executor import SplitExecutor, reference_forward

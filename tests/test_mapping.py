@@ -52,7 +52,6 @@ def test_regions_match_bruteforce(kind, c_in, c_out, hw, k, stride, pad,
 def test_routem_producers_cover_outputs():
     layer = _layer("conv", 3, 4, 6, 3, 1, 1)
     split = split_layer(layer, np.ones(3))
-    bf = assignm_bruteforce(layer, split)
     # RouteM over the *previous* layer's producers: use the same layer's
     # output split as producer of a same-shaped next layer input
     prev = split_layer(layer, np.ones(3))

@@ -1,7 +1,6 @@
 """Simulator + memory-model tests: Eq. 1 timing, paper-trend assertions
 (Table II orderings, Figs 8-12 qualitative claims)."""
 import numpy as np
-import pytest
 
 from repro.core.allocation import WorkerParams, ratings_evenly, ratings_for, ratings_freq_only
 from repro.core.memory import (layerwise_peak, peak_ram_per_worker,

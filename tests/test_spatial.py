@@ -1,0 +1,338 @@
+"""Spatial (patch + halo) partitioning mode: parity against the eager oracle
+and the unsplit model, fused-block semantics, memory/comm accounting.
+
+The parity contract mirrors the compiled-executor suite: float to 1e-5, int8
+bit-for-bit (same int32 accumulation + multiply-only epilogue on every path).
+Deterministic parametrized tests cover the grid directly; the hypothesis
+properties sweep strides, padding, halo widths, and worker mixes more widely
+(they skip cleanly when hypothesis is not installed — see conftest).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CompiledSplitExecutor, SplitExecutor, WorkerParams,
+                        band_heights, calibrate_scales, comm_volume,
+                        compare_modes, group_blocks, plan_memory,
+                        quantize_model, reference_forward, split_model,
+                        trace_sequential)
+from repro.core.reinterpret import ReinterpretedModel
+from repro.core.splitting import SpatialShard, spatial_band_geometry
+from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
+
+RATINGS = ([1.0], [1, 1, 1], list(np.ones(8)), [3, 1, 2, 0.5], [1, 0, 1])
+
+
+def _acts_fn(model, x):
+    return reference_forward(model, x, collect_activations=True)[1]
+
+
+def _quantized(model, rng, shape, n_calib=3):
+    calib = [rng.standard_normal(shape).astype(np.float32)
+             for _ in range(n_calib)]
+    scales = calibrate_scales(model, calib, _acts_fn)
+    return quantize_model(model, scales)
+
+
+def _conv_net(kernel, stride, padding, hw, cin=3, cout=5, depthwise=False,
+              seed=0):
+    """Single conv/dwconv + pointwise tail (the tail makes dwconv nets a
+    fusable dw->pw block, exercising fused halo execution)."""
+    spec = [dict(kind="dwconv" if depthwise else "conv",
+                 kernel=(kernel, kernel), stride=(stride, stride),
+                 padding=(padding, padding), activation="relu6",
+                 **({} if depthwise else {"out_channels": cout})),
+            dict(kind="conv", out_channels=4, kernel=(1, 1), stride=(1, 1),
+                 padding=(0, 0))]
+    return trace_sequential(spec, (cin, hw, hw),
+                            rng=np.random.default_rng(seed))
+
+
+class TestStructure:
+    def test_group_blocks_mobilenet(self):
+        m = mobilenet_v2_smoke()
+        blocks = [b.indices for b in group_blocks(m)]
+        # stem singleton, then dw+pw (t=1 block), then expand+dw+project
+        assert blocks[0] == (0,)
+        assert blocks[1] == (1, 2)
+        assert all(len(b) == 3 for b in blocks[2:6])
+        # head conv, avgpool, linear stay singletons
+        assert blocks[-3:] == [(15,), (16,), (17,)]
+        # interior layers never carry residual bookkeeping
+        for b in blocks:
+            for i in b[:-1]:
+                assert m.layers[i].save_as is None
+                assert m.layers[i].residual_from is None
+
+    def test_bands_partition_output_rows(self):
+        m = mobilenet_v2_smoke()
+        for ratings in RATINGS:
+            plan = split_model(m, ratings, mode="spatial")
+            for idxs in plan.block_groups:
+                split = plan.splits[idxs[-1]]
+                if split.mode != "spatial":
+                    continue
+                h_out = split.layer.out_shape[1]
+                rows = []
+                for sh in split.shards:
+                    assert isinstance(sh, SpatialShard)
+                    rows.extend(range(sh.row_lo, sh.row_hi))
+                # block-output bands tile [0, h_out) exactly, in order
+                assert rows == list(range(h_out))
+
+    def test_band_heights_proportional(self):
+        h = band_heights(np.array([3.0, 1.0]), 100)
+        assert h.sum() == 100 and h[0] == 75
+        assert band_heights(np.array([1, 0, 1]), 9).sum() == 9
+
+    def test_interior_band_includes_halo(self):
+        """A fused dwconv stage's input window must exceed its stride-mapped
+        band interior (the halo rows), and the geometry pads must close the
+        receptive-field window exactly."""
+        m = mobilenet_v2_smoke()
+        plan = split_model(m, [1, 1, 1], mode="spatial")
+        checked = 0
+        for idxs in plan.block_groups:
+            for i in idxs:
+                split = plan.splits[i]
+                layer = split.layer
+                if split.mode != "spatial" or layer.kind != "dwconv":
+                    continue
+                for g in spatial_band_geometry(layer, split):
+                    if g is None:
+                        continue
+                    kh = layer.kernel[0]
+                    sh = layer.stride[0]
+                    win = (g.n_rows - 1) * sh + kh
+                    assert (g.pad_top + (g.in_hi - g.in_lo)
+                            + g.pad_bot) == win
+                    checked += 1
+        assert checked > 0
+
+    def test_spatial_weight_replication(self):
+        m = mobilenet_v2_smoke()
+        plan = split_model(m, [1, 1, 1, 1], mode="spatial")
+        for split in plan.splits:
+            if split.mode != "spatial":
+                continue
+            full = split.layer.weight_bytes(1) + split.layer.out_shape[0]
+            for sh in split.shards:
+                assert sh.weight_bytes in (0, full)
+
+    def test_collect_activations_rejected(self, rng):
+        m = mobilenet_v2_smoke()
+        plan = split_model(m, [1, 1], mode="spatial")
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        with pytest.raises(ValueError, match="spatial"):
+            SplitExecutor(plan).run(x, collect_activations=True)
+
+
+class TestFloatParity:
+    def test_smoke_eager_matches_reference(self, rng):
+        m = mobilenet_v2_smoke()
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        ref = reference_forward(m, x)
+        for ratings in RATINGS:
+            plan = split_model(m, ratings, mode="spatial")
+            out = SplitExecutor(plan).run(x)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_smoke_compiled_matches_reference(self, rng):
+        m = mobilenet_v2_smoke()
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        ref = reference_forward(m, x)
+        for ratings in ([1, 1, 1], [3, 1, 2, 0.5]):
+            plan = split_model(m, ratings, mode="spatial")
+            out = CompiledSplitExecutor(plan).run(x)
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("kernel,stride,padding", [
+        (1, 1, 0), (1, 2, 0), (3, 1, 1), (3, 2, 1), (3, 3, 1), (3, 1, 0),
+        (5, 1, 2), (5, 2, 2), (5, 2, 0), (3, 2, 2),
+    ])
+    @pytest.mark.parametrize("depthwise", [False, True])
+    def test_conv_grid(self, rng, kernel, stride, padding, depthwise):
+        """Strides x paddings x halo widths, dense + depthwise."""
+        m = _conv_net(kernel, stride, padding, hw=13, depthwise=depthwise)
+        x = rng.standard_normal(m.input_shape).astype(np.float32)
+        ref = reference_forward(m, x)
+        for ratings in ([1.0], [2, 1, 1], list(np.ones(8))):
+            plan = split_model(m, ratings, mode="spatial")
+            out = SplitExecutor(plan).run(x)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestInt8Parity:
+    def test_smoke_bit_exact_vs_oracle(self, rng):
+        """Spatial int8 must agree bit-for-bit with the single-worker eager
+        oracle (the unsplit int8 model) on every path: eager, compiled-jnp,
+        compiled-Pallas, batched."""
+        m = mobilenet_v2_smoke()
+        qm = _quantized(m, rng, (3, 32, 32))
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+        for ratings in ([1, 1, 1], list(np.ones(8)), [3, 1, 2, 0.5]):
+            plan = split_model(m, ratings, mode="spatial")
+            eager = SplitExecutor(plan, qm).run(x, mode="int8")
+            np.testing.assert_array_equal(eager, oracle)
+            compiled = CompiledSplitExecutor(plan, qm)
+            np.testing.assert_array_equal(compiled.run(x, mode="int8"),
+                                          oracle)
+
+    def test_smoke_pallas_bit_exact(self, rng):
+        m = mobilenet_v2_smoke()
+        qm = _quantized(m, rng, (3, 32, 32))
+        x = rng.standard_normal((3, 32, 32)).astype(np.float32)
+        plan = split_model(m, [3, 1, 2, 0.5], mode="spatial")
+        eager = SplitExecutor(plan, qm).run(x, mode="int8")
+        out = CompiledSplitExecutor(plan, qm, use_pallas=True,
+                                    interpret=True).run(x, mode="int8")
+        np.testing.assert_array_equal(out, eager)
+
+    def test_batch_bit_exact(self, rng):
+        m = mobilenet_v2_smoke()
+        qm = _quantized(m, rng, (3, 32, 32))
+        plan = split_model(m, [2, 1, 1], mode="spatial")
+        xs = np.stack([rng.standard_normal((3, 32, 32)).astype(np.float32)
+                       for _ in range(4)])
+        eager = SplitExecutor(plan, qm)
+        outs = CompiledSplitExecutor(plan, qm).run_batch(xs, mode="int8")
+        for i in range(4):
+            np.testing.assert_array_equal(outs[i],
+                                          eager.run(xs[i], mode="int8"))
+
+
+class TestMemoryAndComm:
+    def test_first_five_mnv2_blocks_peak_below_channel_modes(self):
+        """Acceptance: at 8 workers, spatial max per-worker peak RAM beats
+        both channel-axis modes on the first five MobileNetV2 blocks (the
+        early high-resolution stages where routed inputs dominate)."""
+        full = mobilenet_v2_paper()
+        blocks = group_blocks(full)
+        end = blocks[5].last + 1          # stem + inverted residuals b0..b4
+        sub = ReinterpretedModel(layers=full.layers[:end],
+                                 input_shape=full.input_shape)
+        r8 = np.ones(8)
+        peaks = {}
+        for mode in ("neuron", "kernel", "spatial"):
+            mems = plan_memory(split_model(sub, r8, mode=mode))
+            peaks[mode] = max(m.per_worker_peak.max() for m in mems)
+        assert peaks["spatial"] < peaks["neuron"]
+        assert peaks["spatial"] < peaks["kernel"]
+
+    def test_fused_interior_layers_move_no_bytes(self):
+        m = mobilenet_v2_smoke()
+        plan = split_model(m, np.ones(4), mode="spatial")
+        prev = None
+        for idxs in plan.block_groups:
+            for i in idxs:
+                split = plan.splits[i]
+                vol = comm_volume(prev, split.layer, split)
+                if split.mode == "spatial" and not split.block_first:
+                    assert vol.download_bytes.sum() == 0
+                if prev is not None and not prev.block_last:
+                    assert vol.upload_bytes.sum() == 0
+                prev = split
+
+    def test_spatial_cuts_total_traffic_on_smoke(self):
+        m = mobilenet_v2_smoke()
+        total = {}
+        for mode in ("neuron", "spatial"):
+            plan = split_model(m, np.ones(4), mode=mode)
+            prev, t = None, 0
+            for split in plan.splits:
+                t += comm_volume(prev, split.layer, split).total_bytes
+                prev = split
+            total[mode] = t
+        assert total["spatial"] < total["neuron"]
+
+    def test_compare_modes_reports(self):
+        m = mobilenet_v2_smoke()
+        workers = [WorkerParams(f_mhz=f) for f in (600, 450, 150)]
+        reports = compare_modes(m, workers)
+        assert set(reports) == {"neuron", "kernel", "spatial"}
+        for rep in reports.values():
+            assert rep.total_time_s > 0 and rep.max_peak_ram > 0
+        assert reports["spatial"].total_bytes < reports["neuron"].total_bytes
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweeps (skip when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def conv_cases(draw):
+    kernel = draw(st.sampled_from([1, 3, 5]))
+    stride = draw(st.integers(1, 3))
+    padding = draw(st.integers(0, max(kernel // 2, 1)))
+    hw = draw(st.integers(7, 14))
+    depthwise = draw(st.booleans())
+    n_workers = draw(st.sampled_from([1, 3, 8]))
+    ratings = draw(st.lists(st.integers(0, 4), min_size=n_workers,
+                            max_size=n_workers).filter(lambda r: sum(r) > 0))
+    return kernel, stride, padding, hw, depthwise, ratings
+
+
+@given(conv_cases())
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_spatial_float_parity(case):
+    """Spatial-mode float output matches the unsplit reference to 1e-5 across
+    strides, padding, halo widths, and heterogeneous worker mixes."""
+    kernel, stride, padding, hw, depthwise, ratings = case
+    m = _conv_net(kernel, stride, padding, hw, depthwise=depthwise)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(m.input_shape).astype(np.float32)
+    ref = reference_forward(m, x)
+    out = SplitExecutor(split_model(m, ratings, mode="spatial")).run(x)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@given(conv_cases())
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_spatial_int8_exact(case):
+    """Spatial-mode int8 output is bit-identical to the single-worker eager
+    oracle (integer accumulation + multiply-only epilogue on both paths)."""
+    kernel, stride, padding, hw, depthwise, ratings = case
+    m = _conv_net(kernel, stride, padding, hw, depthwise=depthwise)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(m.input_shape).astype(np.float32)
+    qm = _quantized(m, rng, m.input_shape, n_calib=2)
+    oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+    out = SplitExecutor(split_model(m, ratings, mode="spatial"),
+                        qm).run(x, mode="int8")
+    np.testing.assert_array_equal(out, oracle)
+
+
+@given(st.sampled_from([1, 3, 8]), st.integers(1, 2), st.integers(0, 3))
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_fused_block_parity(n_workers, stride, seed):
+    """A full inverted-residual stack (expand->dw->project with residual)
+    executes fused per band and still matches the reference bit-for-bit in
+    int8 and to 1e-5 in float."""
+    rng = np.random.default_rng(seed)
+    spec = [
+        dict(kind="conv", out_channels=4, kernel=(3, 3), stride=(1, 1),
+             padding=(1, 1), activation="relu6", save_as="blk"),
+        dict(kind="conv", out_channels=12, kernel=(1, 1), stride=(1, 1),
+             padding=(0, 0), activation="relu6"),
+        dict(kind="dwconv", kernel=(3, 3), stride=(stride, stride),
+             padding=(1, 1), activation="relu6"),
+        dict(kind="conv", out_channels=4, kernel=(1, 1), stride=(1, 1),
+             padding=(0, 0),
+             residual_from="blk" if stride == 1 else None),
+    ]
+    m = trace_sequential(spec, (3, 12, 12), rng=rng)
+    x = rng.standard_normal((3, 12, 12)).astype(np.float32)
+    ref = reference_forward(m, x)
+    ratings = list(range(1, n_workers + 1))
+    plan = split_model(m, ratings, mode="spatial")
+    np.testing.assert_allclose(SplitExecutor(plan).run(x), ref,
+                               rtol=1e-5, atol=1e-5)
+    qm = _quantized(m, rng, (3, 12, 12), n_calib=2)
+    oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+    np.testing.assert_array_equal(
+        SplitExecutor(plan, qm).run(x, mode="int8"), oracle)

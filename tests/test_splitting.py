@@ -1,6 +1,5 @@
 """Unit + property tests for the fine-grained splitting (Alg. 1/2)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.reinterpret import LayerSpec, conv_out_hw
@@ -119,7 +118,7 @@ def test_split_model_worker_totals():
     plan = split_model(m, [2.0, 1.0, 1.0])
     total_macs = sum(plan.worker_macs(w) for w in range(3))
     # avgpool stays coordinator-side (zero worker shards) by design
-    expected = sum(layer_macs(l) for l in m.layers if l.kind != "avgpool")
+    expected = sum(layer_macs(lyr) for lyr in m.layers if lyr.kind != "avgpool")
     assert abs(total_macs - expected) <= len(m.layers) * 3
     # higher-rated worker gets more work
     assert plan.worker_macs(0) > plan.worker_macs(1) * 1.3

@@ -88,9 +88,10 @@ class TestFusion:
             var=rng.uniform(0.5, 2.0, 6).astype(np.float32))
         wf, bf = fold_batchnorm(w, b, bn)
         x = rng.standard_normal((4, 8, 8)).astype(np.float32)
-        conv = lambda wt: jax.lax.conv_general_dilated(
-            jnp.asarray(x)[None], jnp.asarray(wt), (1, 1), "SAME",
-            dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+        def conv(wt):
+            return jax.lax.conv_general_dilated(
+                jnp.asarray(x)[None], jnp.asarray(wt), (1, 1), "SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
         y_unfused = (np.asarray(conv(w)) + b[:, None, None] - bn.mean[:, None, None]) \
             / np.sqrt(bn.var + bn.eps)[:, None, None] * bn.gamma[:, None, None] \
             + bn.beta[:, None, None]
@@ -142,7 +143,6 @@ class TestData:
 
     def test_shards_disjoint_and_cover(self):
         d = SyntheticLM(1000, seed=3)
-        full = d.batch(2, 8, 16)
         shards = [d.batch(2, 8, 16, shard=i, n_shards=4) for i in range(4)]
         assert all(s["tokens"].shape == (2, 16) for s in shards)
         # different shards differ (PRNG keyed on shard)

@@ -2,9 +2,8 @@
 -> quantize -> execute across simulated MCUs), training convergence, and
 restart-from-checkpoint."""
 import numpy as np
-import pytest
 
-from repro.core import (SimConfig, SplitExecutor, WorkerParams,
+from repro.core import (SplitExecutor, WorkerParams,
                         calibrate_scales, measured_kc, peak_ram_per_worker,
                         quantize_model, ratings_for, reference_forward,
                         simulate, simulated_k1, single_device_peak,
