@@ -11,6 +11,10 @@ a >20% regression:
 * ``peaks`` (analytic max per-worker peak RAM per partitioning mode) —
   deterministic, so each entry growing beyond 20% is a real memory
   regression.
+* ``planner`` (plan-search outcomes per {config}@{workers}) — the chosen
+  plan's simulated latency and max peak RAM come from the analytic models,
+  so they are deterministic too: a >20% growth means the search now picks a
+  worse plan.  The recorded wall time is informational only (machine-bound).
 
 Rows/modes present in only one file are reported but don't fail the gate
 (benchmarks may gain coverage); missing files or empty overlap DO fail — a
@@ -76,6 +80,28 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], i
                     f"{f} B > {1.0 + threshold:.0%} of baseline {b} B")
             else:
                 print(f"ok peak {config}/{mode}: {f} B (baseline {b} B)")
+    base_planner = baseline.get("planner", {})
+    fresh_planner = fresh.get("planner", {})
+    for key in sorted(base_planner.keys() & fresh_planner.keys()):
+        b, f = base_planner[key], fresh_planner[key]
+        if b.get("feasible") != f.get("feasible"):
+            compared += 1
+            failures.append(
+                f"planner feasibility flip {key}: baseline "
+                f"feasible={b.get('feasible')} vs fresh "
+                f"feasible={f.get('feasible')}")
+            continue
+        for metric in ("plan_latency_s", "max_peak_ram"):
+            if metric not in b or metric not in f:
+                continue
+            compared += 1
+            if f[metric] > b[metric] * (1.0 + threshold):
+                failures.append(
+                    f"planner regression {key}/{metric}: {f[metric]} > "
+                    f"{1.0 + threshold:.0%} of baseline {b[metric]}")
+            else:
+                print(f"ok planner {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]})")
     return failures, compared
 
 

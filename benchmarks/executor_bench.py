@@ -7,6 +7,12 @@ the jitted ``CompiledSplitExecutor`` over {config} x {split mode} x
 
     {config, split, mode, batch, eager_s, compiled_s, speedup}
 
+plus one ``split="session"`` row per config measuring the serving facade:
+``repro.api.Session`` micro-batching (``submit_many`` over bucket-padded
+batches, ``compiled_s``) against per-request ``session.run()`` dispatches
+(``eager_s``) — the speedup is the micro-batching amortization the ISSUE's
+acceptance criterion requires to stay > 1,
+
 plus the analytic per-worker peak-RAM maxima per partitioning mode (the
 ``peaks`` section — deterministic, used by the CI regression gate alongside
 the speedups).  The spatial split is benchmarked on the int8 deployment path.
@@ -56,6 +62,7 @@ def _time(fn, iters: int) -> float:
 
 
 def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
+    from repro.api import Session
     from repro.core import (CompiledSplitExecutor, SplitExecutor,
                             calibrate_scales, peak_ram_per_worker,
                             quantize_model, reference_forward, split_model)
@@ -99,6 +106,21 @@ def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
                                      eager_s=round(eager_s, 6),
                                      compiled_s=round(compiled_s, 6),
                                      speedup=round(eager_s / compiled_s, 2)))
+        # serving-facade row: micro-batched submit_many vs per-request run()
+        # (both on the compiled engine — the gap is batch amortization)
+        bmax = max(BATCHES)
+        session = Session(plans["neuron"], precision="int8", qmodel=qm,
+                          max_batch=bmax, buckets=(1, bmax))
+        session.warmup()
+        data = xs[bmax]
+        per_request_s = _time(
+            lambda: [session.run(data[i]) for i in range(bmax)], iters)
+        micro_batched_s = _time(lambda: session.submit_many(data), iters)
+        rows.append(dict(config=name, split="session", mode="int8",
+                         batch=bmax,
+                         eager_s=round(per_request_s, 6),
+                         compiled_s=round(micro_batched_s, 6),
+                         speedup=round(per_request_s / micro_batched_s, 2)))
     return rows, peaks
 
 
@@ -111,6 +133,14 @@ def write_results(rows: list[dict], peaks: dict) -> dict:
         rows=rows,
         peaks=peaks,
     )
+    # preserve the planner_bench section (shared file, either order)
+    if RESULT_PATH.exists():
+        try:
+            old = json.loads(RESULT_PATH.read_text())
+        except json.JSONDecodeError:
+            old = {}
+        if "planner" in old:
+            payload["planner"] = old["planner"]
     RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return payload
 

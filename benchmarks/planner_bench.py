@@ -1,0 +1,102 @@
+"""Planner search benchmark: plan-search wall time for MobileNetV2 over
+1/3/8-worker heterogeneous clusters, plus the chosen plan's *deterministic*
+metrics (simulated latency, max per-worker peak RAM) — those two are
+analytic, machine-independent, and gated by ``check_regression.py`` against
+the committed baseline; the wall time is informational.
+
+Results merge into ``BENCH_executor.json`` under the ``planner`` key via
+read-modify-write, so this bench and ``executor_bench`` can run in either
+order (each preserves the other's sections).
+
+Run:  PYTHONPATH=src python -m benchmarks.planner_bench [--quick]
+(--quick: smoke model only — the CI smoke run.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULT_PATH = _REPO_ROOT / "BENCH_executor.json"
+
+WORKER_COUNTS = (1, 3, 8)
+RAM_CAP = 512 * 1024
+
+
+def planner_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
+    from repro.api import Cluster, InfeasibleError, Objective, Planner
+    from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
+
+    cfgs = [("smoke", mobilenet_v2_smoke)]
+    if not quick:
+        cfgs.append(("mnv2_112", mobilenet_v2_paper))
+    rows: list[tuple] = []
+    data: dict[str, dict] = {}
+    for name, make_model in cfgs:
+        model = make_model()
+        for k in WORKER_COUNTS:
+            cluster = Cluster.heterogeneous_demo(k)
+            planner = Planner(model, cluster)
+            objective = Objective(minimize="latency", ram_cap_bytes=RAM_CAP)
+            t0 = time.perf_counter()
+            try:
+                plan = planner.plan(objective)
+            except InfeasibleError as e:
+                wall = time.perf_counter() - t0
+                # the search still costs wall time; record the outcome so a
+                # feasibility flip vs baseline is visible in the artifact
+                data[f"{name}@{k}"] = dict(feasible=False, wall_s=round(wall, 4),
+                                           binding=e.binding_constraint)
+                rows.append((f"planner_{name}_w{k}", wall,
+                             f"INFEASIBLE ({e.binding_constraint})"))
+                continue
+            wall = time.perf_counter() - t0
+            data[f"{name}@{k}"] = dict(
+                feasible=True, wall_s=round(wall, 4),
+                plan_latency_s=round(plan.latency_s, 9),
+                max_peak_ram=int(plan.max_peak_ram),
+                mode=plan.mode, fusion=plan.fusion,
+                n_workers=plan.n_workers)
+            rows.append((f"planner_{name}_w{k}", wall,
+                         f"mode={plan.mode}/{plan.fusion} "
+                         f"workers={plan.n_workers} "
+                         f"latency={plan.latency_s:.4f}s "
+                         f"peak={plan.max_peak_ram / 1024:.0f}KB"))
+    return rows, data
+
+
+def merge_results(data: dict) -> dict:
+    """Read-modify-write the shared JSON: update only the planner section."""
+    payload: dict = {}
+    if RESULT_PATH.exists():
+        try:
+            payload = json.loads(RESULT_PATH.read_text())
+        except json.JSONDecodeError:
+            payload = {}
+    payload.setdefault("benchmark", "executor_eager_vs_compiled")
+    payload["planner"] = data
+    RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def bench_planner(quick: bool = False) -> list[tuple]:
+    """run.py suite entry: benchmark, merge JSON, return CSV rows."""
+    rows, data = planner_metrics(quick=quick)
+    merge_results(data)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke model only (CI)")
+    args = ap.parse_args()
+    rows, data = planner_metrics(quick=args.quick)
+    merge_results(data)
+    print(json.dumps(data, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,9 +22,11 @@ import time
 
 def build_suites(quick: bool):
     try:
-        from . import executor_bench, kernel_bench, paper_benchmarks as pb
+        from . import (executor_bench, kernel_bench, paper_benchmarks as pb,
+                       planner_bench)
     except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
-        import executor_bench, kernel_bench, paper_benchmarks as pb  # noqa: E401
+        import executor_bench, kernel_bench, planner_bench  # noqa: E401
+        import paper_benchmarks as pb
     return [
         ("Table I (K1 calibration)", pb.table1_k1),
         ("Table II (allocation strategies)", pb.table2_allocation),
@@ -36,6 +38,8 @@ def build_suites(quick: bool):
         ("Kernels", kernel_bench.bench_kernels),
         ("Executor (eager vs compiled)",
          functools.partial(executor_bench.bench_executor, quick=quick)),
+        ("Planner (plan-search)",
+         functools.partial(planner_bench.bench_planner, quick=quick)),
     ]
 
 

@@ -1,53 +1,54 @@
 """Quickstart: split a CNN's inference across simulated networked MCUs.
 
-Reproduces the paper's core claim in ~40 lines: a model whose per-layer peak
-RAM exceeds a single MCU becomes feasible when split at sub-layer
-granularity, and the split execution is numerically identical.
+Reproduces the paper's core claim through the coordinator facade in ~5 lines
+of API: a model whose per-layer peak RAM exceeds a single MCU becomes
+feasible when split at sub-layer granularity, the coordinator picks the
+split/placement automatically, and the split execution is numerically
+identical to the monolithic reference.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (SplitExecutor, WorkerParams, peak_ram_per_worker,
-                        ratings_for, reference_forward, simulate,
-                        single_device_peak, split_model, measured_kc,
-                        simulated_k1)
+from repro.api import Cluster, Objective, Planner
+from repro.core import WorkerParams, reference_forward, single_device_peak
 from repro.models import mobilenet_v2_smoke
 
 
 def main():
+    # the whole coordinator pipeline (rating -> splitting -> allocation ->
+    # feasibility -> placement) is these five lines:
     model = mobilenet_v2_smoke()
+    cluster = Cluster((WorkerParams(f_mhz=600), WorkerParams(f_mhz=450),
+                       WorkerParams(f_mhz=150, d_s_per_kb=0.002)))
+    plan = Planner(model, cluster).plan(
+        Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+    session = plan.compile(precision="float")
+    out = session.run(x := np.random.default_rng(0)
+                      .standard_normal(model.input_shape).astype(np.float32))
+
     print(f"model: {len(model.layers)} layers, "
-          f"{model.total_macs()/1e6:.2f}M MACs, "
-          f"{model.total_weight_bytes(1)/1024:.0f} KB int8 weights")
+          f"{model.total_macs() / 1e6:.2f}M MACs, "
+          f"{model.total_weight_bytes(1) / 1024:.0f} KB int8 weights")
 
     # 1. single-device peak RAM (the bottleneck the paper attacks)
     single = single_device_peak(model)
-    print(f"single-MCU peak RAM: {single/1024:.1f} KB")
+    print(f"single-MCU peak RAM: {single / 1024:.1f} KB")
 
-    # 2. heterogeneous workers -> capability ratings (Eq. 5)
-    workers = [WorkerParams(f_mhz=600), WorkerParams(f_mhz=450),
-               WorkerParams(f_mhz=150, d_s_per_kb=0.002)]
-    k1 = simulated_k1(model, 600)
-    ratings = ratings_for(workers, k1, measured_kc(model, len(workers)))
-    print(f"capability ratings: {np.round(ratings, 2)}")
+    # 2. the plan the coordinator chose (Eq. 5 ratings -> mode/subset search)
+    print(f"chosen split: mode={plan.mode}, "
+          f"{plan.n_workers}/{cluster.n_workers} workers, "
+          f"ratings {np.round(np.asarray(plan.ratings), 2)}")
+    print(f"per-worker peak RAM: {np.round(plan.peak_ram / 1024, 1)} KB "
+          f"({single / plan.max_peak_ram:.1f}x reduction)")
 
-    # 3. fine-grained split (Alg. 1/2) + peak RAM per worker
-    plan = split_model(model, ratings)
-    peaks = peak_ram_per_worker(plan)
-    print(f"per-worker peak RAM: {np.round(peaks/1024, 1)} KB "
-          f"({single/peaks.max():.1f}x reduction)")
-
-    # 4. split execution == monolithic reference
-    x = np.random.default_rng(0).standard_normal((3, 32, 32)).astype(np.float32)
+    # 3. split execution == monolithic reference
     ref = reference_forward(model, x)
-    out = SplitExecutor(plan).run(x)
-    print(f"split vs monolithic max|err|: {np.max(np.abs(out-ref)):.2e}")
+    print(f"split vs monolithic max|err|: {np.max(np.abs(out - ref)):.2e}")
 
-    # 5. end-to-end latency through the Eq. 1 timing model
-    res = simulate(model, workers, ratings)
-    print(f"simulated inference: total={res.total_time*1e3:.1f} ms "
-          f"(comp {res.comp_time*1e3:.1f} + comm {res.comm_time*1e3:.1f})")
+    # 4. end-to-end latency through the Eq. 1 timing model
+    print(f"simulated inference: total={plan.latency_s * 1e3:.1f} ms "
+          f"(comp {plan.comp_s * 1e3:.1f} + comm {plan.comm_s * 1e3:.1f})")
 
 
 if __name__ == "__main__":

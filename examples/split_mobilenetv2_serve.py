@@ -1,26 +1,27 @@
-"""End-to-end serving driver (the paper's deployment): serve int8 MobileNetV2
-classification over batched requests across 8 simulated heterogeneous MCUs,
-with rating-based allocation and per-request latency/memory accounting.
+"""End-to-end serving driver (the paper's deployment) on the coordinator
+facade: serve int8 MobileNetV2 classification over micro-batched requests
+across 8 simulated heterogeneous MCUs.
 
-Requests are served by the CompiledSplitExecutor: the whole SplitPlan is
-jitted once per (mode, batch shape) and ``run_batch`` executes a batch in a
-single fused dispatch, so compilation is amortized across all traffic.  The
-eager SplitExecutor runs one reference request to demonstrate the bit-exact
-int8 parity between the two engines.
+The coordinator is ``repro.api``: ``Cluster`` holds the measured workers,
+``Planner.plan`` searches partitioning mode x fusion x worker subsets under
+the 512 KB RAM budget with the paper's analytic cost models, and
+``plan.compile`` returns a ``Session`` that serves requests through the
+jitted ``CompiledSplitExecutor`` with bucket-padded micro-batching — each
+(precision, bucket) pair compiles once and is amortized over all traffic.
+One eager reference request demonstrates the bit-exact int8 parity between
+the serving engine and the step-for-step MCU protocol oracle.
 
-Run:  PYTHONPATH=src python examples/split_mobilenetv2_serve.py [--requests 12]
+Run:  PYTHONPATH=src python examples/split_mobilenetv2_serve.py [--requests 8]
+      (--smoke: reduced model + 4 requests — the CI examples job)
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core import (CompiledSplitExecutor, SplitExecutor, WorkerParams,
-                        calibrate_scales, compare_modes, measured_kc,
-                        peak_ram_per_worker, quantize_model, ratings_for,
-                        reference_forward, simulate, simulated_k1,
-                        single_device_peak, split_model)
-from repro.models import mobilenet_v2
+from repro.api import Cluster, Objective, Planner
+from repro.core import SplitExecutor, reference_forward, single_device_peak
+from repro.models import mobilenet_v2, mobilenet_v2_smoke
 
 
 def main():
@@ -29,87 +30,82 @@ def main():
     ap.add_argument("--input-hw", type=int, default=56,
                     help="input resolution (56 keeps CPU latency low; the "
                          "paper uses 112)")
-    ap.add_argument("--mode", choices=("neuron", "kernel", "spatial"),
-                    default="neuron",
-                    help="partitioning mode: channel/neuron flat ranges "
-                         "(paper Alg. 1/2) or spatial bands + fused blocks "
-                         "(MCUNetV2-style patches)")
+    ap.add_argument("--mode", choices=("auto", "neuron", "kernel", "spatial"),
+                    default="auto",
+                    help="partitioning mode: 'auto' lets the planner search "
+                         "all three axes; a named mode pins the search")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke model + 4 requests (CI examples job)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 4)
 
     rng = np.random.default_rng(0)
     print("== offline preprocessing (Fig. 2) ==")
-    model = mobilenet_v2(input_hw=(args.input_hw, args.input_hw))
-    print(f"MobileNetV2@{args.input_hw}: {len(model.layers)} layers, "
-          f"{model.total_macs()/1e6:.0f}M MACs")
-    print(f"single-MCU peak RAM {single_device_peak(model)/1024:.0f} KB "
-          f"(budget 512 KB) -> infeasible on one MCU")
+    if args.smoke:
+        model = mobilenet_v2_smoke()
+        print(f"MobileNetV2-smoke: {len(model.layers)} layers, "
+              f"{model.total_macs() / 1e6:.0f}M MACs")
+    else:
+        model = mobilenet_v2(input_hw=(args.input_hw, args.input_hw))
+        print(f"MobileNetV2@{args.input_hw}: {len(model.layers)} layers, "
+              f"{model.total_macs() / 1e6:.0f}M MACs")
+    single = single_device_peak(model)
+    verdict = ("-> infeasible on one MCU" if single > 512 * 1024
+               else "(smoke config fits; the full model does not)")
+    print(f"single-MCU peak RAM {single / 1024:.0f} KB "
+          f"(budget 512 KB) {verdict}")
 
-    calib = [rng.standard_normal((3, args.input_hw, args.input_hw))
-             .astype(np.float32) for _ in range(4)]
-    scales = calibrate_scales(
-        model, calib,
-        lambda m, x: reference_forward(m, x, collect_activations=True)[1])
-    qm = quantize_model(model, scales)
-
-    print("\n== deployment initialization (8 heterogeneous MCUs) ==")
-    freqs = [600, 600, 528, 450, 450, 396, 150, 150]
-    delays = [0, 0.001, 0, 0.002, 0, 0.004, 0.001, 0]
-    workers = [WorkerParams(f_mhz=f, d_s_per_kb=d)
-               for f, d in zip(freqs, delays)]
-    k1 = simulated_k1(model, 600)
-    kc = measured_kc(model, 8)
-    ratings = ratings_for(workers, k1, kc)
-    plan = split_model(model, ratings, mode=args.mode)
-    peaks = peak_ram_per_worker(plan)
-    print(f"partitioning mode: {args.mode}")
-    print(f"ratings: {np.round(ratings, 1)}")
-    print(f"per-MCU peak RAM: {np.round(peaks/1024,1)} KB (all < 512)")
-
-    sim = simulate(model, workers, ratings, plan=plan)
-    print(f"modeled on-testbed latency/request: {sim.total_time:.2f} s "
-          f"(comp {sim.comp_time:.2f} / comm {sim.comm_time:.2f})")
-
-    print("\n== partitioning-mode tradeoff (simulator) ==")
-    for mode, rep in compare_modes(model, workers, ratings).items():
-        print(f"  {mode:8s} total={rep.total_time_s:6.2f}s "
-              f"comm={rep.comm_time_s:6.2f}s "
-              f"bytes={rep.total_bytes/1e6:5.2f}MB "
-              f"peak={rep.max_peak_ram/1024:4.0f}KB "
-              f"weights={rep.max_weight_bytes/1024:5.0f}KB")
-
-    print("\n== compile the split plan (one jit per mode/batch) ==")
-    engine = CompiledSplitExecutor(plan, qm)
-    shape = (3, args.input_hw, args.input_hw)
+    print("\n== resource-aware planning (8 heterogeneous MCUs) ==")
+    cluster = Cluster.heterogeneous_demo(8)
+    modes = ("neuron", "kernel", "spatial") if args.mode == "auto" \
+        else (args.mode,)
     t0 = time.perf_counter()
-    engine.warmup(shape, batch=args.requests, mode="int8")
-    print(f"compiled int8 batch-{args.requests} plan in "
-          f"{time.perf_counter()-t0:.1f} s (amortized over all traffic)")
+    plan = Planner(model, cluster).plan(
+        Objective(minimize="latency", ram_cap_bytes=512 * 1024, modes=modes))
+    print(f"plan search took {time.perf_counter() - t0:.2f} s")
+    print(plan.report())
 
-    print("\n== split inference execution (batched requests) ==")
-    xs = np.stack([rng.standard_normal(shape).astype(np.float32)
+    print("\n== compile the plan into a serving session ==")
+    calib = [rng.standard_normal(model.input_shape).astype(np.float32)
+             for _ in range(4)]
+    session = plan.compile(precision="int8", calibration=calib,
+                           max_batch=max(args.requests, 1))
+    t0 = time.perf_counter()
+    session.warmup(buckets=(1, session.max_batch))
+    print(f"compiled int8 buckets (1, {session.max_batch}) in "
+          f"{time.perf_counter() - t0:.1f} s (amortized over all traffic)")
+
+    print("\n== split inference serving (micro-batched requests) ==")
+    xs = np.stack([rng.standard_normal(model.input_shape).astype(np.float32)
                    for _ in range(args.requests)])
-    t0 = time.perf_counter()
-    logits_q = engine.run_batch(xs, mode="int8")
-    batch_s = time.perf_counter() - t0
+    logits_q = session.submit_many(xs)
     preds_q = np.argmax(logits_q.reshape(args.requests, -1), axis=1)
     agree = 0
     for i in range(args.requests):
         pred_f = int(np.argmax(reference_forward(model, xs[i])))
         agree += int(preds_q[i]) == pred_f
         print(f"request {i}: class={int(preds_q[i])} (float model: {pred_f})")
+    stats = session.stats()
     print(f"\nint8-split vs float-monolithic top-1 agreement: "
           f"{agree}/{args.requests}")
-    print(f"host-side batch latency {batch_s*1e3:.0f} ms "
-          f"({batch_s/args.requests*1e3:.1f} ms/request amortized)")
+    print(f"served {stats.requests} requests in {stats.batches} dispatches "
+          f"({stats.padded} padded slots): "
+          f"{stats.wall_s * 1e3:.0f} ms total, "
+          f"{stats.throughput_rps:.1f} req/s, "
+          f"{stats.wall_s / stats.requests * 1e3:.1f} ms/request amortized")
 
-    # one eager reference request: the compiled engine must agree bit-for-bit
-    eager = SplitExecutor(plan, qm)
+    # one eager reference request: the serving engine must agree bit-for-bit
+    # with the step-for-step MCU protocol oracle
+    eager = SplitExecutor(plan.split, session.qmodel)
     t0 = time.perf_counter()
     eager_q = eager.run(xs[0], mode="int8")
     eager_s = time.perf_counter() - t0
     exact = np.array_equal(eager_q, logits_q[0])
-    print(f"eager reference request: {eager_s*1e3:.0f} ms, "
-          f"bit-exact vs compiled: {exact}")
+    print(f"eager reference request: {eager_s * 1e3:.0f} ms, "
+          f"bit-exact vs session: {exact}")
+    if not exact:
+        raise SystemExit("FAIL: session output diverged from the eager oracle")
 
 
 if __name__ == "__main__":

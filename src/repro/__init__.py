@@ -1,0 +1,42 @@
+"""repro — Split CNN Inference on Networked Microcontrollers (JAX/Pallas).
+
+The supported entry point is the coordinator facade in :mod:`repro.api`
+(``Cluster`` / ``Planner`` / ``Session``), re-exported lazily here::
+
+    from repro import Cluster, Objective, Planner
+
+Lazy on purpose (PEP 562): importing ``repro`` must stay free of jax so
+that ``repro.launch.dryrun`` (and the subprocess tests) can still set
+``XLA_FLAGS`` at module top *before* the first jax import — jax locks the
+device count on first init.
+"""
+from __future__ import annotations
+
+_API_NAMES = (
+    "Cluster",
+    "ClusterError",
+    "InfeasibleError",
+    "Objective",
+    "Plan",
+    "PlanCandidate",
+    "Planner",
+    "Session",
+    "SessionStats",
+    "Ticket",
+)
+
+__all__ = list(_API_NAMES) + ["api", "core", "models"]
+
+
+def __getattr__(name: str):
+    if name in _API_NAMES:
+        from . import api
+        return getattr(api, name)
+    if name in ("api", "core", "models"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,44 @@
+"""Coordinator-first facade: ``Cluster`` → ``Planner`` → ``Plan`` → ``Session``.
+
+The paper's central contribution is a *resource-aware coordinator*; this
+package is that coordinator as a stable three-noun API::
+
+    from repro.api import Cluster, Objective, Planner
+
+    cluster = Cluster.heterogeneous_demo(8)
+    plan = Planner(model, cluster).plan(
+        Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+    print(plan.report())
+    session = plan.compile(precision="int8")
+    outputs = session.submit_many(requests)
+
+``Cluster`` validates the measured worker set (presets, JSON round-trip);
+``Planner`` searches mode × fusion × worker subsets with the analytic cost
+models and raises :class:`InfeasibleError` (naming the binding constraint)
+instead of returning a bad plan; ``Plan`` is scored, serializable and
+reportable; ``Session`` serves micro-batched requests through the compiled
+engine with per-bucket compilation caching and rolling stats.
+
+The free functions in :mod:`repro.core` (``split_model``, ``simulate``,
+``ratings_for``, ...) remain the underlying engine and stay importable, but
+new code should go through this facade.
+"""
+from .cluster import Cluster, ClusterError
+from .plan import FUSIONS, Plan, build_split_plan
+from .planner import InfeasibleError, Objective, PlanCandidate, Planner
+from .session import Session, SessionStats, Ticket
+
+__all__ = [
+    "Cluster",
+    "ClusterError",
+    "FUSIONS",
+    "InfeasibleError",
+    "Objective",
+    "Plan",
+    "PlanCandidate",
+    "Planner",
+    "Session",
+    "SessionStats",
+    "Ticket",
+    "build_split_plan",
+]

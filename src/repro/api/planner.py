@@ -1,0 +1,338 @@
+"""`Planner`: the resource-aware coordinator's planning step as one call.
+
+The paper's coordinator measures the cluster, rates every worker (Eq. 5),
+splits the model proportionally (Eq. 6/7) and deploys.  ``Planner`` turns
+that pipeline — plus the partitioning-mode and fusion axes this repo grew
+beyond the paper — into a declarative search::
+
+    plan = Planner(model, cluster).plan(
+        Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+
+The search space is mode ∈ {neuron, kernel, spatial} × fusion granularity
+(fused blocks vs per-layer bands, spatial only) × worker subsets (top-k by
+capability rating, k = 1..max_workers).  Every candidate is costed with the
+existing analytic models (:func:`repro.core.simulator.simulate` for
+latency/communication, :func:`repro.core.memory.peak_ram_per_worker` for the
+per-worker peak) and checked against the RAM/flash budgets; neuron/kernel
+candidates run the Eq. 7 storage-overflow redistribution first, exactly as
+the paper's allocation does.  The best feasible candidate becomes a
+:class:`repro.api.Plan`; if nothing fits, :class:`InfeasibleError` reports
+the *binding* constraint (the one the closest candidate missed by the
+smallest margin) instead of returning a silently bad plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.allocation import ratings_for, redistribute_overflow
+from ..core.memory import peak_ram_per_worker
+from ..core.reinterpret import ReinterpretedModel
+from ..core.simulator import SimConfig, measured_kc, simulate, simulated_k1
+from ..core.splitting import MODES
+from .cluster import Cluster
+from .plan import Plan, build_split_plan
+
+
+class InfeasibleError(RuntimeError):
+    """No candidate satisfied the objective's constraints.
+
+    ``binding_constraint`` names the constraint the *closest* candidate
+    violated (``"ram_cap"`` / ``"flash_cap"``); ``details`` carries that
+    candidate's numbers (mode, workers, requirement vs cap, overshoot).
+    """
+
+    def __init__(self, message: str, binding_constraint: str, details: dict):
+        super().__init__(message)
+        self.binding_constraint = binding_constraint
+        self.details = details
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What the planner optimizes and what it must respect.
+
+    ``minimize``: ``"latency"`` (simulated end-to-end seconds),
+    ``"comm_bytes"`` (bytes moved per inference) or ``"peak_ram"`` (max
+    per-worker peak).  ``ram_cap_bytes``/``flash_cap_bytes`` tighten every
+    worker's own budget (``None`` keeps the per-worker values from the
+    cluster).  ``max_workers`` caps the subset size; ``modes`` restricts the
+    partitioning axes searched.
+    """
+
+    minimize: str = "latency"
+    ram_cap_bytes: int | None = None
+    flash_cap_bytes: int | None = None
+    max_workers: int | None = None
+    modes: tuple[str, ...] = MODES
+
+    def __post_init__(self) -> None:
+        if self.minimize not in ("latency", "comm_bytes", "peak_ram"):
+            raise ValueError(
+                f"unknown minimize={self.minimize!r} "
+                "(want 'latency', 'comm_bytes' or 'peak_ram')")
+        if not isinstance(self.modes, tuple):
+            object.__setattr__(self, "modes", tuple(self.modes))
+        if not self.modes:
+            raise ValueError("objective needs at least one mode")
+        for m in self.modes:
+            if m not in MODES:
+                raise ValueError(f"unknown mode {m!r} (want one of {MODES})")
+        if self.max_workers is not None and self.max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        for name in ("ram_cap_bytes", "flash_cap_bytes"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0")
+
+    def score(self, latency_s: float, comm_bytes: int,
+              max_peak_ram: int) -> float:
+        if self.minimize == "latency":
+            return float(latency_s)
+        if self.minimize == "comm_bytes":
+            return float(comm_bytes)
+        return float(max_peak_ram)
+
+    def to_dict(self) -> dict:
+        return {"minimize": self.minimize,
+                "ram_cap_bytes": self.ram_cap_bytes,
+                "flash_cap_bytes": self.flash_cap_bytes,
+                "max_workers": self.max_workers,
+                "modes": list(self.modes)}
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "Objective":
+        return cls(minimize=data.get("minimize", "latency"),
+                   ram_cap_bytes=data.get("ram_cap_bytes"),
+                   flash_cap_bytes=data.get("flash_cap_bytes"),
+                   max_workers=data.get("max_workers"),
+                   modes=tuple(data.get("modes", MODES)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One scored point of the search space (kept on the Plan for reporting
+    and for the 'prefers the best feasible candidate' property tests)."""
+
+    mode: str
+    fusion: str
+    worker_indices: tuple[int, ...]
+    feasible: bool
+    reason: str | None = None            # why infeasible (None when feasible)
+    latency_s: float = float("nan")
+    comp_s: float = float("nan")
+    comm_s: float = float("nan")
+    comm_bytes: int = 0
+    max_peak_ram: int = 0
+    max_weight_bytes: int = 0
+    score: float = float("nan")
+
+    _NAN_FIELDS = ("latency_s", "comp_s", "comm_s", "score")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["worker_indices"] = list(self.worker_indices)
+        # infeasible candidates carry NaN sentinels; map them to null so the
+        # payload stays strict RFC-8259 JSON (json.dumps would emit `NaN`)
+        for name in self._NAN_FIELDS:
+            if math.isnan(d[name]):
+                d[name] = None
+        return d
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "PlanCandidate":
+        data = dict(data)
+        data["worker_indices"] = tuple(int(i) for i in data["worker_indices"])
+        for name in cls._NAN_FIELDS:
+            if data.get(name) is None:
+                data[name] = float("nan")
+        return cls(**data)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Scored:
+    """A feasible candidate plus the heavy artifacts plan() needs."""
+
+    cand: PlanCandidate
+    ratings: np.ndarray
+    split: object                        # core SplitPlan
+    peak: np.ndarray
+    weights: np.ndarray
+
+
+class Planner:
+    """Searches split/placement space for a model over a cluster.
+
+    ``sim_cfg`` tunes the analytic timing model (defaults to the calibrated
+    :class:`~repro.core.simulator.SimConfig`).  K1 is simulated at the
+    cluster's fastest clock (the paper's reference measurement); Kc is
+    re-derived per subset size, since the communication coefficient depends
+    on how many workers share each layer.
+    """
+
+    def __init__(self, model: ReinterpretedModel, cluster: Cluster,
+                 sim_cfg: SimConfig | None = None):
+        self.model = model
+        self.cluster = cluster if isinstance(cluster, Cluster) else Cluster(tuple(cluster))
+        self.sim_cfg = sim_cfg or SimConfig()
+        self._k1 = simulated_k1(model, self.cluster.max_f_mhz, self.sim_cfg)
+        self._kc: dict[int, float] = {}
+
+    def _kc_for(self, n: int) -> float:
+        if n not in self._kc:
+            self._kc[n] = measured_kc(self.model, n, self.sim_cfg)
+        return self._kc[n]
+
+    def _worker_order(self) -> np.ndarray:
+        """Workers ranked by capability rating (desc, index tie-break) — the
+        subset ladder: the top-k prefix is the k-worker candidate."""
+        r = ratings_for(list(self.cluster.workers), self._k1,
+                        self._kc_for(self.cluster.n_workers))
+        return np.lexsort((np.arange(len(r)), -r))
+
+    # -- the search ----------------------------------------------------------
+    def _evaluate(self, objective: Objective) -> list[_Scored | PlanCandidate]:
+        """Score every (subset size x mode x fusion) candidate.  Returns
+        ``_Scored`` for feasible ones, bare ``PlanCandidate`` otherwise."""
+        order = self._worker_order()
+        n_max = self.cluster.n_workers
+        if objective.max_workers is not None:
+            n_max = min(n_max, objective.max_workers)
+        model_bytes = float(self.model.total_weight_bytes(1))
+        results: list[_Scored | PlanCandidate] = []
+        for k in range(1, n_max + 1):
+            idx = tuple(sorted(int(i) for i in order[:k]))
+            workers = [self.cluster[i] for i in idx]
+            base_ratings = ratings_for(workers, self._k1, self._kc_for(k))
+            ram_caps = np.array(
+                [min(w.ram_bytes, objective.ram_cap_bytes or w.ram_bytes)
+                 for w in workers], dtype=np.float64)
+            flash_caps = np.array(
+                [min(w.flash_bytes, objective.flash_cap_bytes or w.flash_bytes)
+                 for w in workers], dtype=np.float64)
+            for mode in objective.modes:
+                for fusion in (("block", "layer") if mode == "spatial"
+                               else ("block",)):
+                    results.append(self._score_one(
+                        objective, idx, workers, base_ratings, ram_caps,
+                        flash_caps, model_bytes, mode, fusion))
+        return results
+
+    def _score_one(self, objective, idx, workers, base_ratings, ram_caps,
+                   flash_caps, model_bytes, mode, fusion):
+        ratings = base_ratings
+        if mode in ("neuron", "kernel"):
+            # Eq. 7: shift rating mass away from storage-overflowed workers
+            # (weights are split in these modes, so shares track ratings)
+            if flash_caps.sum() < model_bytes:
+                return PlanCandidate(
+                    mode=mode, fusion=fusion, worker_indices=idx,
+                    feasible=False,
+                    reason=(f"flash_cap: total capacity "
+                            f"{flash_caps.sum():.0f} B < model "
+                            f"{model_bytes:.0f} B"))
+            ratings = redistribute_overflow(base_ratings, flash_caps,
+                                            model_bytes)
+        split = build_split_plan(self.model, ratings, mode, fusion)
+        peak = peak_ram_per_worker(split)
+        weights = np.array([split.worker_weight_bytes(w)
+                            for w in range(split.n_workers)], dtype=np.int64)
+        over_ram = peak > ram_caps
+        over_flash = weights > flash_caps
+        if over_ram.any() or over_flash.any():
+            terms = []
+            if over_ram.any():
+                w = int(np.argmax(peak / ram_caps))
+                terms.append(f"ram_cap: worker {idx[w]} peak {int(peak[w])} B "
+                             f"> cap {int(ram_caps[w])} B")
+            if over_flash.any():
+                w = int(np.argmax(weights / flash_caps))
+                terms.append(f"flash_cap: worker {idx[w]} weights "
+                             f"{int(weights[w])} B > cap {int(flash_caps[w])} B")
+            return PlanCandidate(mode=mode, fusion=fusion, worker_indices=idx,
+                                 feasible=False, reason="; ".join(terms),
+                                 max_peak_ram=int(peak.max()),
+                                 max_weight_bytes=int(weights.max()))
+        res = simulate(self.model, workers, ratings, self.sim_cfg, plan=split)
+        cand = PlanCandidate(
+            mode=mode, fusion=fusion, worker_indices=idx, feasible=True,
+            latency_s=res.total_time, comp_s=res.comp_time,
+            comm_s=res.comm_time, comm_bytes=res.total_bytes,
+            max_peak_ram=int(peak.max()), max_weight_bytes=int(weights.max()),
+            score=objective.score(res.total_time, res.total_bytes,
+                                  int(peak.max())))
+        return _Scored(cand=cand, ratings=ratings, split=split, peak=peak,
+                       weights=weights)
+
+    def candidates(self, objective: Objective | None = None) -> list[PlanCandidate]:
+        """The full scored candidate table (feasible and infeasible) the
+        search considers — what :meth:`plan` picks its winner from."""
+        objective = objective or Objective()
+        return [r.cand if isinstance(r, _Scored) else r
+                for r in self._evaluate(objective)]
+
+    def plan(self, objective: Objective | None = None) -> Plan:
+        """Search and return the best feasible :class:`Plan`; raise
+        :class:`InfeasibleError` naming the binding constraint if none fits."""
+        objective = objective or Objective()
+        results = self._evaluate(objective)
+        feasible = [r for r in results if isinstance(r, _Scored)]
+        if not feasible:
+            raise self._infeasible(objective, results)
+        # deterministic winner: best score, then fewer workers, then the
+        # objective's mode order, then fused before per-layer
+        mode_rank = {m: i for i, m in enumerate(objective.modes)}
+        best = min(feasible, key=lambda s: (
+            s.cand.score, len(s.cand.worker_indices),
+            mode_rank[s.cand.mode], s.cand.fusion))
+        c = best.cand
+        return Plan(
+            model=self.model, cluster=self.cluster, objective=objective,
+            mode=c.mode, fusion=c.fusion, worker_indices=c.worker_indices,
+            ratings=best.ratings, split=best.split,
+            latency_s=c.latency_s, comp_s=c.comp_s, comm_s=c.comm_s,
+            comm_bytes=c.comm_bytes, peak_ram=best.peak,
+            weight_bytes=best.weights, score=c.score,
+            candidates=tuple(r.cand if isinstance(r, _Scored) else r
+                             for r in results))
+
+    def _infeasible(self, objective: Objective, results) -> InfeasibleError:
+        """Build the error naming the constraint the closest candidate missed
+        by the smallest relative margin (the binding constraint)."""
+        best_cand, best_kind, best_margin = None, "ram_cap", float("inf")
+        for r in results:
+            cand = r.cand if isinstance(r, _Scored) else r
+            if cand.feasible or cand.reason is None:
+                continue
+            kind = "ram_cap" if cand.reason.startswith("ram_cap") else "flash_cap"
+            if kind == "ram_cap" and objective.ram_cap_bytes:
+                margin = cand.max_peak_ram / objective.ram_cap_bytes
+            elif kind == "flash_cap" and objective.flash_cap_bytes:
+                margin = (cand.max_weight_bytes / objective.flash_cap_bytes
+                          if cand.max_weight_bytes else float("inf"))
+            else:
+                margin = float("inf")
+            if margin < best_margin:
+                best_cand, best_kind, best_margin = cand, kind, margin
+        if best_cand is None:
+            # no candidate produced numbers (e.g. total flash < model bytes)
+            cands = [r.cand if isinstance(r, _Scored) else r for r in results]
+            best_cand = cands[0]
+            best_kind = ("flash_cap" if best_cand.reason
+                         and best_cand.reason.startswith("flash_cap")
+                         else "ram_cap")
+        details = {"mode": best_cand.mode, "fusion": best_cand.fusion,
+                   "worker_indices": list(best_cand.worker_indices),
+                   "reason": best_cand.reason,
+                   "max_peak_ram": best_cand.max_peak_ram,
+                   "max_weight_bytes": best_cand.max_weight_bytes,
+                   "ram_cap_bytes": objective.ram_cap_bytes,
+                   "flash_cap_bytes": objective.flash_cap_bytes}
+        return InfeasibleError(
+            f"no feasible split for the objective; binding constraint "
+            f"{best_kind} — closest candidate {best_cand.mode} over "
+            f"{len(best_cand.worker_indices)} workers failed with: "
+            f"{best_cand.reason}",
+            binding_constraint=best_kind, details=details)

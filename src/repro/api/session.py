@@ -1,0 +1,215 @@
+"""`Session`: a compiled serving handle over a plan (the facade's third noun).
+
+Wraps :class:`~repro.core.executor.CompiledSplitExecutor` with the serving
+conveniences every driver was hand-rolling: per-(mode, batch-bucket)
+compiled-function reuse (jit specializes per batch shape, so requests are
+padded to a small set of bucket sizes and every bucket compiles exactly
+once), a ``submit()``/``flush()`` micro-batching queue plus bulk
+``submit_many()``, ``warmup()`` and rolling latency/throughput stats.
+
+Padding is numerically free: the plan is vmapped over the sample axis, so a
+padded slot cannot influence real samples — ``submit_many`` output is
+bit-identical to ``run_batch`` over the same inputs (tested in int8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.executor import CompiledSplitExecutor, reference_forward
+from ..core.quantize import QuantizedModel, calibrate_scales, quantize_model
+from ..core.splitting import SplitPlan
+from .plan import Plan
+
+PRECISIONS = ("int8", "float")
+_DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionStats:
+    """Rolling serving statistics (engine dispatch time only)."""
+
+    requests: int                   # real requests served
+    batches: int                    # engine dispatches issued
+    padded: int                     # zero-padded slots executed
+    wall_s: float                   # total dispatch wall time
+    throughput_rps: float           # requests / wall_s
+    mean_latency_s: float           # wall_s / batches (per-dispatch latency)
+    per_bucket: dict[int, int]      # bucket size -> dispatch count
+
+
+class Ticket:
+    """Handle for one queued request; ``result()`` flushes if needed."""
+
+    __slots__ = ("_session", "_value", "_done")
+
+    def __init__(self, session: "Session"):
+        self._session = session
+        self._value = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            self._session.flush()
+        return self._value
+
+    def _fulfill(self, value: np.ndarray) -> None:
+        self._value = value
+        self._done = True
+
+
+class Session:
+    """Micro-batched serving over a compiled split plan.
+
+    Accepts a :class:`repro.api.Plan` (the normal path — carries cluster and
+    search context) or a bare core :class:`SplitPlan` (benchmarks/tests).
+
+    ``precision="int8"`` builds the W8A8 deployment: a supplied ``qmodel``
+    wins, else ``calibration`` activations (or ``calibration_samples`` seeded
+    random inputs) calibrate the scales.  ``precision="float"`` serves fp32.
+    ``buckets`` are the allowed padded batch sizes (ascending; the largest is
+    the micro-batch chunk size); each (precision, bucket) pair compiles once.
+    """
+
+    def __init__(self, plan: Plan | SplitPlan, *, precision: str = "int8",
+                 qmodel: QuantizedModel | None = None,
+                 calibration: list[np.ndarray] | None = None,
+                 calibration_samples: int = 4, seed: int = 0,
+                 use_pallas: bool | None = None, interpret: bool | None = None,
+                 max_batch: int = 32, buckets: tuple[int, ...] | None = None):
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {precision!r} (want one of {PRECISIONS})")
+        self.plan = plan if isinstance(plan, Plan) else None
+        self.split = plan.split if isinstance(plan, Plan) else plan
+        if not isinstance(self.split, SplitPlan):
+            raise TypeError("plan must be a repro.api.Plan or a core SplitPlan")
+        self.model = self.split.model
+        self.precision = precision
+        self._mode = "int8" if precision == "int8" else "float"
+        if precision == "int8" and qmodel is None:
+            qmodel = self._calibrate(calibration, calibration_samples, seed)
+        self.qmodel = qmodel if precision == "int8" else None
+        self.engine = CompiledSplitExecutor(self.split, self.qmodel,
+                                            use_pallas=use_pallas,
+                                            interpret=interpret)
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        bks = tuple(sorted({int(b) for b in (buckets or _DEFAULT_BUCKETS)
+                            if 1 <= int(b) <= max_batch} | {1, int(max_batch)}))
+        self.buckets = bks
+        self.max_batch = int(max_batch)
+        self._pending: list[tuple[np.ndarray, Ticket]] = []
+        self._requests = 0
+        self._batches = 0
+        self._padded = 0
+        self._wall_s = 0.0
+        self._per_bucket: dict[int, int] = {}
+
+    # -- calibration ---------------------------------------------------------
+    def _calibrate(self, calibration, n_samples: int, seed: int) -> QuantizedModel:
+        if calibration is None:
+            rng = np.random.default_rng(seed)
+            calibration = [rng.standard_normal(self.model.input_shape)
+                           .astype(np.float32) for _ in range(n_samples)]
+        scales = calibrate_scales(
+            self.model, calibration,
+            lambda m, x: reference_forward(m, x, collect_activations=True)[1])
+        return quantize_model(self.model, scales)
+
+    # -- compilation ---------------------------------------------------------
+    def warmup(self, buckets: tuple[int, ...] | None = None) -> None:
+        """Compile ahead of serving: one trace per bucket size."""
+        shape = tuple(self.model.input_shape)
+        for b in (buckets or self.buckets):
+            self.engine.run_batch(np.zeros((int(b), *shape), np.float32),
+                                  mode=self._mode)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    # -- serving -------------------------------------------------------------
+    def _check_input(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float32)
+        if x.shape != tuple(self.model.input_shape):
+            raise ValueError(f"request shape {x.shape} != model input "
+                             f"{tuple(self.model.input_shape)}")
+        return x
+
+    def _dispatch(self, xs: np.ndarray) -> np.ndarray:
+        """One padded engine dispatch for n <= max bucket requests."""
+        n = len(xs)
+        b = self._bucket(n)
+        if b > n:
+            pad = np.zeros((b - n, *xs.shape[1:]), np.float32)
+            batch = np.concatenate([xs, pad])
+        else:
+            batch = xs
+        t0 = time.perf_counter()
+        out = self.engine.run_batch(batch, mode=self._mode)
+        dt = time.perf_counter() - t0
+        self._requests += n
+        self._batches += 1
+        self._padded += b - n
+        self._wall_s += dt
+        self._per_bucket[b] = self._per_bucket.get(b, 0) + 1
+        return out[:n]
+
+    def submit_many(self, xs) -> np.ndarray:
+        """Serve a bulk of requests, micro-batched into padded buckets.
+        Returns outputs aligned with ``xs`` — bit-identical to
+        ``run_batch(xs)`` over the same compiled plan."""
+        xs = np.asarray(xs, dtype=np.float32)
+        if xs.ndim != 4 or xs.shape[1:] != tuple(self.model.input_shape):
+            raise ValueError(f"batch shape {xs.shape} != (n, "
+                             f"{', '.join(map(str, self.model.input_shape))})")
+        if len(xs) == 0:
+            dtype = np.int8 if self._mode == "int8" else np.float32
+            return np.zeros((0, *self.model.out_shape), dtype)
+        return np.concatenate([self._dispatch(xs[i:i + self.max_batch])
+                               for i in range(0, len(xs), self.max_batch)])
+
+    def run(self, x) -> np.ndarray:
+        """Serve one request now (bucket-1 compiled path)."""
+        return self.submit_many(self._check_input(x)[None])[0]
+
+    def submit(self, x) -> Ticket:
+        """Queue one request for the next :meth:`flush`; returns a
+        :class:`Ticket` whose ``result()`` flushes on demand."""
+        t = Ticket(self)
+        self._pending.append((self._check_input(x), t))
+        return t
+
+    def flush(self) -> int:
+        """Serve every queued request in bucket-padded micro-batches;
+        returns the number of requests served."""
+        if not self._pending:
+            return 0
+        pending, self._pending = self._pending, []
+        ys = self.submit_many(np.stack([x for x, _ in pending]))
+        for (_, ticket), y in zip(pending, ys):
+            ticket._fulfill(np.asarray(y))
+        return len(pending)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> SessionStats:
+        return SessionStats(
+            requests=self._requests, batches=self._batches,
+            padded=self._padded, wall_s=self._wall_s,
+            throughput_rps=(self._requests / self._wall_s
+                            if self._wall_s > 0 else 0.0),
+            mean_latency_s=(self._wall_s / self._batches
+                            if self._batches else 0.0),
+            per_bucket=dict(self._per_bucket))

@@ -1,6 +1,14 @@
 """The paper's contribution: fine-grained split CNN inference for networked
 MCUs — reinterpretation, sub-layer splitting, cross-layer activation mapping,
-resource-aware allocation, split execution, and the scaling simulator."""
+resource-aware allocation, split execution, and the scaling simulator.
+
+These free functions are the underlying engine; the supported entry point
+for planning + serving is the coordinator facade in :mod:`repro.api`
+(``Cluster`` / ``Planner`` / ``Session``).  Hand-wiring the pipeline
+(``simulated_k1`` → ``measured_kc`` → ``ratings_for`` → ``split_model`` →
+``peak_ram_per_worker`` → executor → ``simulate``) still works but is
+considered deprecated for application code — ``Planner.plan`` runs the same
+pipeline, adds feasibility checking, and returns a serializable plan."""
 from .allocation import (WorkerParams, allocate, band_bounds, band_heights,
                          capability_rating, execution_time,
                          proportional_allocation, ratings_evenly, ratings_for,
@@ -20,4 +28,71 @@ from .splitting import (LayerSplit, ShardGeometry, SpatialBandGeometry,
                         SpatialShard, SplitPlan, WorkerShard, partition_bounds,
                         spatial_band_geometry, split_layer, split_model)
 
-__all__ = [n for n in dir() if not n.startswith("_")]
+# Explicit public API only — a computed dir()-based __all__ also exported
+# the imported submodule objects (allocation, executor, ...), polluting
+# `from repro.core import *` and shadowing same-named locals downstream.
+__all__ = [
+    # allocation (paper §V, Eq. 1-7)
+    "WorkerParams",
+    "allocate",
+    "band_bounds",
+    "band_heights",
+    "capability_rating",
+    "execution_time",
+    "proportional_allocation",
+    "ratings_evenly",
+    "ratings_for",
+    "ratings_freq_only",
+    "redistribute_overflow",
+    # executors (Alg. 4)
+    "CompiledSplitExecutor",
+    "SplitExecutor",
+    "reference_forward",
+    # fusion (§V.D)
+    "BatchNormParams",
+    "FusedBlock",
+    "apply_activation",
+    "fold_batchnorm",
+    "group_blocks",
+    # cross-layer activation mapping (Alg. 3)
+    "assignm_bruteforce",
+    "comm_volume",
+    "compile_shard_geometry",
+    "routem_bruteforce",
+    "worker_input_regions",
+    # memory model (§IV.B, Fig. 8/12)
+    "layerwise_peak",
+    "peak_ram_per_worker",
+    "plan_memory",
+    "single_device_peak",
+    # quantization (§V.D)
+    "QuantizedModel",
+    "calibrate_scales",
+    "epilogue_params",
+    "quantize_model",
+    "requantize",
+    # reinterpretation (§IV.A)
+    "LayerSpec",
+    "ReinterpretedModel",
+    "layer_macs",
+    "trace_sequential",
+    # simulator (§VII.D)
+    "ModeReport",
+    "SimConfig",
+    "SimResult",
+    "compare_modes",
+    "measured_kc",
+    "simulate",
+    "simulated_k1",
+    # splitting (Alg. 1/2 + spatial bands)
+    "LayerSplit",
+    "ShardGeometry",
+    "SpatialBandGeometry",
+    "SpatialShard",
+    "SplitPlan",
+    "WorkerShard",
+    "partition_bounds",
+    "spatial_band_geometry",
+    "split_layer",
+    "split_model",
+]

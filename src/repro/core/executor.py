@@ -525,23 +525,27 @@ class CompiledSplitExecutor:
 
     # -- traced fused spatial block ----------------------------------------
     def _int8_consts(self, i: int):
-        """Per-layer int8 constants (replicated weights, epilogue scale/bias),
-        materialized once per layer — not per worker per stage — so the traced
-        jaxpr carries one copy of each."""
+        """Per-layer int8 constants (replicated weights, epilogue scale/bias).
+        The cache holds only host-side numpy values: jnp conversion must
+        happen freshly inside each trace, because an array materialized while
+        tracing one batch shape is a tracer-backed constant that poisons the
+        next shape's trace (UnexpectedTracerError on re-jit).  Callers hoist
+        the returned jnp arrays per layer, so each trace still carries one
+        copy per layer — not one per worker band."""
         if i not in self._int8_cache:
             ql = self.qmodel.layers[i]
             scale, b_q = epilogue_params(ql)
-            self._int8_cache[i] = (jnp.asarray(ql.w_q), jnp.asarray(scale),
-                                   jnp.asarray(b_q), float(ql.out_scale))
-        return self._int8_cache[i]
+            self._int8_cache[i] = (ql.w_q, scale, b_q, float(ql.out_scale))
+        w_q, scale, b_q, out_scale = self._int8_cache[i]
+        return jnp.asarray(w_q), jnp.asarray(scale), jnp.asarray(b_q), out_scale
 
     def _spatial_stage_int8(self, i: int, layer: LayerSpec,
-                            g: SpatialBandGeometry, band):
+                            g: SpatialBandGeometry, band, consts):
         """One int8 band stage: Pallas kernels when enabled (dwconv kernel for
         eligible 3x3 depthwise, im2col+qgemm for dense conv), else the jnp
         fallback — identical int32 accumulation and multiply-only epilogue, so
         all paths agree bit-for-bit with the eager oracle."""
-        w_q, scale_j, b_j, out_scale = self._int8_consts(i)
+        w_q, scale_j, b_j, out_scale = consts
         c_out, _, w_out = layer.out_shape
         _, pw = layer.padding
         if self.use_pallas and _kernel_eligible_dwconv(layer):
@@ -571,10 +575,13 @@ class CompiledSplitExecutor:
         row-axis concat out."""
         model = self.plan.model
         geoms = [self._band_geometry[i] for i in idxs]
+        # one copy of each replicated weight per layer in the trace, shared
+        # by every worker's band
         float_consts = None
-        if mode != "int8":
-            # one copy of each replicated weight per layer in the trace,
-            # shared by every worker's band (int8 uses _int8_consts)
+        int8_consts = None
+        if mode == "int8":
+            int8_consts = [self._int8_consts(i) for i in idxs]
+        else:
             float_consts = [
                 (jnp.asarray(model.layers[i].weight),
                  jnp.asarray(model.layers[i].bias
@@ -600,7 +607,8 @@ class CompiledSplitExecutor:
                 if li == 0:
                     band = cur[:, g.in_lo:g.in_hi, :]
                 if mode == "int8":
-                    band = self._spatial_stage_int8(i, layer, g, band)
+                    band = self._spatial_stage_int8(i, layer, g, band,
+                                                    int8_consts[li])
                 else:
                     wt, b = float_consts[li]
                     acc = _spatial_stage_acc(layer, g, band, wt, b,

@@ -35,7 +35,7 @@ import dataclasses
 import numpy as np
 
 from .allocation import band_bounds
-from .fusion import group_blocks
+from .fusion import FusedBlock, group_blocks
 from .reinterpret import LayerSpec, ReinterpretedModel, macs_for_positions
 
 MODES = ("neuron", "kernel", "spatial")
@@ -383,13 +383,19 @@ class SplitPlan:
 
 
 def split_model(model: ReinterpretedModel, ratings,
-                mode: str = "neuron") -> SplitPlan:
+                mode: str = "neuron", fused: bool = True) -> SplitPlan:
     """Split every layer with the same ratings vector (paper reuses R across
     layers; per-layer ratings are supported by calling split_layer directly).
 
     ``mode``: ``"neuron"`` (default, Alg. 1/2 flat ranges), ``"kernel"``
     (whole-channel conv spans), or ``"spatial"`` (output-height bands + fused
     blocks; see module docstring).
+
+    ``fused`` (spatial only): ``True`` bands whole inverted-residual blocks
+    (``fusion.group_blocks`` — interior activations stay at band size);
+    ``False`` bands every layer independently (singleton blocks: no
+    interior-halo recompute, more boundary traffic).  Ignored for the flat
+    modes, which have a single granularity.
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r} (want one of {MODES})")
@@ -397,9 +403,11 @@ def split_model(model: ReinterpretedModel, ratings,
     if mode != "spatial":
         splits = [split_layer(lyr, ratings, mode) for lyr in model.layers]
         return SplitPlan(model=model, splits=splits, ratings=ratings, mode=mode)
+    grouping = (group_blocks(model) if fused
+                else [FusedBlock((i,)) for i in range(len(model.layers))])
     splits_by_idx: dict[int, LayerSplit] = {}
     blocks: list[tuple[int, ...]] = []
-    for block in group_blocks(model):
+    for block in grouping:
         layers = [model.layers[i] for i in block.indices]
         if all(lyr.kind in ("conv", "dwconv") for lyr in layers):
             for idx, sp in zip(block.indices, split_block_spatial(layers, ratings)):

@@ -1,0 +1,336 @@
+"""Coordinator facade tests: Cluster validation/round-trip, Planner search
+properties (RAM-cap safety, best-feasible preference, InfeasibleError with
+the binding constraint), and Plan serialization round-trip.
+
+Planner calls on the conftest small_cnn are cheap (every candidate is costed
+analytically — no jit); the MobileNetV2-smoke acceptance test pins the
+planner against the hand-picked compare_modes baseline.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from conftest import small_cnn
+from repro.api import (Cluster, ClusterError, InfeasibleError, Objective,
+                       Plan, PlanCandidate, Planner)
+from repro.core import (WorkerParams, compare_modes, measured_kc,
+                        peak_ram_per_worker, ratings_for, simulated_k1)
+from repro.models import mobilenet_v2_smoke
+
+
+# ---------------------------------------------------------------------------
+# Cluster
+# ---------------------------------------------------------------------------
+
+class TestCluster:
+    def test_validates_workers(self):
+        with pytest.raises(ClusterError):
+            Cluster(())
+        with pytest.raises(ClusterError):
+            Cluster((WorkerParams(f_mhz=0),))
+        with pytest.raises(ClusterError):
+            Cluster((WorkerParams(b_kb_s=-1),))
+        with pytest.raises(ClusterError):
+            Cluster((WorkerParams(d_s_per_kb=-0.1),))
+        with pytest.raises(ClusterError):
+            Cluster((WorkerParams(ram_bytes=0),))
+
+    def test_container_protocol(self):
+        c = Cluster.homogeneous(3, f_mhz=450)
+        assert len(c) == c.n_workers == 3
+        assert all(w.f_mhz == 450 for w in c)
+        assert c[1].f_mhz == 450
+        assert c.max_f_mhz == 450
+
+    def test_accepts_list_and_freezes_to_tuple(self):
+        c = Cluster([WorkerParams(), WorkerParams(f_mhz=150)])
+        assert isinstance(c.workers, tuple) and len(c) == 2
+
+    def test_heterogeneous_demo_cycles(self):
+        c = Cluster.heterogeneous_demo(10)
+        assert len(c) == 10
+        assert c[8].f_mhz == c[0].f_mhz  # cycled
+
+    def test_subset(self):
+        c = Cluster.heterogeneous_demo(8)
+        s = c.subset([0, 3, 5])
+        assert len(s) == 3
+        assert s[1] == c[3]
+        with pytest.raises(ClusterError):
+            c.subset([11])
+
+    def test_json_round_trip(self, tmp_path):
+        c = Cluster.heterogeneous_demo(4)
+        # via string
+        assert Cluster.from_json(c.to_json()) == c
+        # via file
+        p = tmp_path / "cluster.json"
+        c.to_json(p)
+        assert Cluster.from_json(p) == c
+
+    def test_from_json_rejects_garbage(self):
+        with pytest.raises(ClusterError):
+            Cluster.from_json('{"workers": [{"nope": 1}]}')
+        with pytest.raises(ClusterError):
+            Cluster.from_json('{"not json')
+
+
+# ---------------------------------------------------------------------------
+# Objective
+# ---------------------------------------------------------------------------
+
+class TestObjective:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Objective(minimize="speed")
+        with pytest.raises(ValueError):
+            Objective(modes=())
+        with pytest.raises(ValueError):
+            Objective(modes=("banded",))
+        with pytest.raises(ValueError):
+            Objective(max_workers=0)
+        with pytest.raises(ValueError):
+            Objective(ram_cap_bytes=-5)
+
+    def test_round_trip(self):
+        o = Objective(minimize="peak_ram", ram_cap_bytes=4096,
+                      max_workers=3, modes=("neuron", "spatial"))
+        assert Objective.from_dict(o.to_dict()) == o
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cnn():
+    return small_cnn()
+
+
+@pytest.fixture(scope="module")
+def planner(cnn):
+    return Planner(cnn, Cluster.heterogeneous_demo(4))
+
+
+class TestPlanner:
+    def test_plan_is_feasible_and_scored(self, planner):
+        plan = planner.plan(Objective(ram_cap_bytes=512 * 1024))
+        assert plan.mode in ("neuron", "kernel", "spatial")
+        assert plan.max_peak_ram <= 512 * 1024
+        assert plan.latency_s > 0 and np.isfinite(plan.score)
+        assert len(plan.ratings) == plan.n_workers == len(plan.worker_indices)
+        # the stored peak matches a recomputation over the stored split
+        assert np.array_equal(plan.peak_ram, peak_ram_per_worker(plan.split))
+
+    def test_prefers_best_feasible_candidate(self, planner):
+        obj = Objective(ram_cap_bytes=512 * 1024)
+        plan = planner.plan(obj)
+        feasible = [c for c in planner.candidates(obj) if c.feasible]
+        assert feasible
+        assert plan.score == min(c.score for c in feasible)
+
+    def test_candidate_table_covers_search_space(self, planner):
+        cands = planner.candidates(Objective())
+        # 4 sizes x (neuron + kernel + spatial/block + spatial/layer)
+        assert len(cands) == 4 * 4
+        assert all(isinstance(c, PlanCandidate) for c in cands)
+
+    def test_max_workers_caps_subsets(self, planner):
+        obj = Objective(max_workers=2)
+        assert all(len(c.worker_indices) <= 2
+                   for c in planner.candidates(obj))
+        assert planner.plan(obj).n_workers <= 2
+
+    def test_modes_restrict_search(self, planner):
+        plan = planner.plan(Objective(modes=("kernel",)))
+        assert plan.mode == "kernel"
+
+    def test_minimize_peak_ram(self, planner):
+        obj = Objective(minimize="peak_ram")
+        plan = planner.plan(obj)
+        feasible = [c for c in planner.candidates(obj) if c.feasible]
+        assert plan.max_peak_ram == min(c.max_peak_ram for c in feasible)
+
+    def test_minimize_comm_bytes(self, planner):
+        obj = Objective(minimize="comm_bytes")
+        plan = planner.plan(obj)
+        feasible = [c for c in planner.candidates(obj) if c.feasible]
+        assert plan.comm_bytes == min(c.comm_bytes for c in feasible)
+
+    def test_infeasible_ram_cap_raises_with_binding_constraint(self, planner):
+        with pytest.raises(InfeasibleError) as ei:
+            planner.plan(Objective(ram_cap_bytes=64))
+        assert ei.value.binding_constraint == "ram_cap"
+        assert ei.value.details["ram_cap_bytes"] == 64
+        assert "ram_cap" in str(ei.value)
+
+    def test_infeasible_flash_cap_raises(self, cnn):
+        # tiny flash on every worker: weights cannot fit anywhere
+        cluster = Cluster.homogeneous(3, flash_bytes=8)
+        with pytest.raises(InfeasibleError) as ei:
+            Planner(cnn, cluster).plan(Objective())
+        assert ei.value.binding_constraint == "flash_cap"
+
+    def test_report_mentions_selection(self, planner):
+        plan = planner.plan(Objective(ram_cap_bytes=512 * 1024))
+        rep = plan.report()
+        assert "<- selected" in rep and plan.mode in rep
+        assert f"{plan.n_workers}/" in rep
+
+
+class TestPlannerAcceptance:
+    """ISSUE acceptance: over MobileNetV2-smoke with the 8-worker
+    heterogeneous cluster, the planner must be at least as good (simulated
+    latency) as the best hand-picked compare_modes row, and every plan must
+    pass the RAM-cap feasibility check."""
+
+    @pytest.fixture(scope="class")
+    def smoke_plan(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(8)
+        plan = Planner(model, cluster).plan(
+            Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+        return model, cluster, plan
+
+    def test_at_least_as_good_as_compare_modes(self, smoke_plan):
+        model, cluster, plan = smoke_plan
+        k1 = simulated_k1(model, cluster.max_f_mhz)
+        kc = measured_kc(model, len(cluster))
+        ratings = ratings_for(list(cluster.workers), k1, kc)
+        best_row = min(
+            r.total_time_s
+            for r in compare_modes(model, list(cluster.workers),
+                                   ratings).values())
+        assert plan.latency_s <= best_row + 1e-12
+
+    def test_plan_respects_ram_cap(self, smoke_plan):
+        _, _, plan = smoke_plan
+        assert peak_ram_per_worker(plan.split).max() <= 512 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Plan serialization
+# ---------------------------------------------------------------------------
+
+class TestPlanSerialization:
+    def test_json_round_trip(self, cnn, planner, tmp_path):
+        plan = planner.plan(Objective(ram_cap_bytes=512 * 1024))
+        text = plan.to_json(tmp_path / "plan.json")
+        loaded = Plan.from_json(tmp_path / "plan.json", cnn)
+        assert json.loads(text) == json.loads(loaded.to_json())
+        assert loaded.mode == plan.mode and loaded.fusion == plan.fusion
+        assert loaded.worker_indices == plan.worker_indices
+        assert np.allclose(loaded.ratings, plan.ratings)
+        assert loaded.latency_s == plan.latency_s
+        assert loaded.objective == plan.objective
+        assert np.array_equal(loaded.peak_ram, plan.peak_ram)
+        assert len(loaded.candidates) == len(plan.candidates)
+        # the re-derived split plan is usable: same per-worker peak
+        assert np.array_equal(peak_ram_per_worker(loaded.split),
+                              peak_ram_per_worker(plan.split))
+
+    def test_rejects_wrong_model(self, planner):
+        plan = planner.plan(Objective(ram_cap_bytes=512 * 1024))
+        other = small_cnn(seed=1)  # same shape but different weights is OK...
+        data = json.loads(plan.to_json())
+        data["model"]["n_layers"] += 1  # ...a structural mismatch is not
+        with pytest.raises(ValueError, match="mismatch"):
+            Plan.from_dict(data, other)
+
+    def test_rejects_non_plan_payload(self, cnn):
+        with pytest.raises(ValueError, match="not a serialized"):
+            Plan.from_dict({"kind": "something-else"}, cnn)
+
+    def test_json_is_strict_with_infeasible_candidates(self, cnn, planner):
+        """Infeasible candidates carry NaN sentinels internally; the JSON
+        payload must map them to null (strict RFC 8259 — no `NaN` tokens)."""
+        # a cap tight enough that some (small-subset) candidates are
+        # infeasible but at least one fits (small_cnn peaks are ~1-2 KB)
+        obj = Objective(ram_cap_bytes=1500)
+        plan = planner.plan(obj)
+        assert any(not c.feasible for c in plan.candidates)
+        text = plan.to_json()
+        assert "NaN" not in text
+        json.loads(text)  # strict-parses
+        loaded = Plan.from_json(text, cnn)
+        reloaded_infeasible = [c for c in loaded.candidates if not c.feasible]
+        assert reloaded_infeasible
+        assert all(np.isnan(c.score) for c in reloaded_infeasible)
+
+
+# ---------------------------------------------------------------------------
+# fusion granularity (build_split_plan -> core split_model(fused=...))
+# ---------------------------------------------------------------------------
+
+class TestFusionGranularity:
+    def test_layer_fusion_builds_singleton_blocks(self, cnn):
+        from repro.api import build_split_plan
+        ratings = np.asarray([2.0, 1.0, 1.5])
+        blocked = build_split_plan(cnn, ratings, "spatial", "block")
+        layered = build_split_plan(cnn, ratings, "spatial", "layer")
+        assert all(len(b) == 1 for b in layered.block_groups)
+        assert any(len(b) > 1 for b in blocked.block_groups)
+        with pytest.raises(ValueError, match="fusion"):
+            build_split_plan(cnn, ratings, "spatial", "banded")
+
+    def test_layer_fusion_plan_executes_bitexact(self, cnn, rng):
+        """An unfused spatial plan must execute like any other: compiled ==
+        eager bit-for-bit in int8, float matches the monolithic reference."""
+        from repro.api import Session, build_split_plan
+        from repro.core import (CompiledSplitExecutor, SplitExecutor,
+                                reference_forward)
+        split = build_split_plan(cnn, np.asarray([2.0, 1.0, 1.5]),
+                                 "spatial", "layer")
+        x = rng.standard_normal(cnn.input_shape).astype(np.float32)
+        session = Session(split, precision="int8", seed=0, max_batch=1)
+        out = session.run(x)
+        eager = SplitExecutor(split, session.qmodel).run(x, mode="int8")
+        compiled = CompiledSplitExecutor(split, session.qmodel).run(
+            x, mode="int8")
+        assert np.array_equal(out, eager)
+        assert np.array_equal(out, compiled)
+        ref = reference_forward(cnn, x)
+        flt = Session(split, precision="float", max_batch=1).run(x)
+        assert np.max(np.abs(flt - ref)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skip cleanly when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+@given(cap_kb=st.integers(min_value=1, max_value=64),
+       n_workers=st.integers(min_value=1, max_value=5))
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_plan_never_exceeds_ram_cap(cap_kb, n_workers):
+    """Planner.plan either respects the RAM cap on every worker or raises
+    InfeasibleError — never a silent over-budget plan."""
+    model = small_cnn()
+    planner = Planner(model, Cluster.heterogeneous_demo(n_workers))
+    cap = cap_kb * 1024
+    try:
+        plan = planner.plan(Objective(ram_cap_bytes=cap))
+    except InfeasibleError as e:
+        assert e.binding_constraint in ("ram_cap", "flash_cap")
+        return
+    peak = peak_ram_per_worker(plan.split)
+    assert peak.max() <= cap
+    assert plan.max_peak_ram <= cap
+
+
+@given(minimize=st.sampled_from(["latency", "comm_bytes", "peak_ram"]),
+       n_workers=st.integers(min_value=1, max_value=4))
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_plan_picks_min_score_feasible(minimize, n_workers):
+    """When several candidates fit, the planner returns the lowest-scoring
+    feasible one (e.g. prefers a lower-latency mode that also fits)."""
+    model = small_cnn()
+    planner = Planner(model, Cluster.heterogeneous_demo(n_workers))
+    obj = Objective(minimize=minimize, ram_cap_bytes=512 * 1024)
+    plan = planner.plan(obj)
+    feasible = [c for c in planner.candidates(obj) if c.feasible]
+    assert feasible and plan.score == min(c.score for c in feasible)

@@ -106,6 +106,50 @@ class TestRegressionGate:
             ["--baseline", str(tmp_path / "nope.json"),
              "--fresh", str(f)]) == 1
 
+    def test_planner_latency_regression_fails(self, tmp_path):
+        """The planner section's deterministic metrics hold the same line:
+        a >20% worse chosen-plan latency is a search regression."""
+        base = _payload()
+        base["planner"] = {"smoke@8": dict(feasible=True, wall_s=1.0,
+                                           plan_latency_s=0.05,
+                                           max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["planner"] = {"smoke@8": dict(feasible=True, wall_s=9.0,
+                                            plan_latency_s=0.07,
+                                            max_peak_ram=16000)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_planner_wall_time_not_gated(self, tmp_path):
+        """Wall time is machine-bound — only the analytic metrics gate."""
+        base = _payload()
+        base["planner"] = {"smoke@8": dict(feasible=True, wall_s=1.0,
+                                           plan_latency_s=0.05,
+                                           max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["planner"] = {"smoke@8": dict(feasible=True, wall_s=50.0,
+                                            plan_latency_s=0.05,
+                                            max_peak_ram=16000)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_planner_feasibility_flip_fails(self, tmp_path):
+        base = _payload()
+        base["planner"] = {"smoke@8": dict(feasible=True, wall_s=1.0,
+                                           plan_latency_s=0.05,
+                                           max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["planner"] = {"smoke@8": dict(feasible=False, wall_s=1.0,
+                                            binding="ram_cap")}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
     def test_committed_baseline_selfcompare_passes(self, capsys):
         """The committed baseline must pass the gate against itself (the CI
         invariant: identical results are never a regression)."""

@@ -1,0 +1,161 @@
+"""Session (micro-batched serving) tests: bucket-padded ``submit_many`` must
+be bit-identical to ``run_batch`` in int8, the submit/flush queue must
+fulfill tickets in order, compiled buckets must be reusable across shapes
+(the UnexpectedTracerError regression), and stats must account every
+request/pad."""
+import numpy as np
+import pytest
+
+from conftest import small_cnn
+from repro.api import Cluster, Objective, Planner, Session
+from repro.core import (CompiledSplitExecutor, SplitExecutor,
+                        calibrate_scales, quantize_model, reference_forward,
+                        split_model)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return small_cnn()
+
+
+@pytest.fixture(scope="module")
+def qmodel(model):
+    rng = np.random.default_rng(0)
+    calib = [rng.standard_normal(model.input_shape).astype(np.float32)
+             for _ in range(3)]
+    scales = calibrate_scales(
+        model, calib,
+        lambda m, x: reference_forward(m, x, collect_activations=True)[1])
+    return quantize_model(model, scales)
+
+
+@pytest.fixture(scope="module")
+def plan(model):
+    return Planner(model, Cluster.heterogeneous_demo(3)).plan(
+        Objective(ram_cap_bytes=512 * 1024))
+
+
+@pytest.fixture(scope="module")
+def xs(model):
+    rng = np.random.default_rng(1)
+    return np.stack([rng.standard_normal(model.input_shape).astype(np.float32)
+                     for _ in range(7)])
+
+
+class TestSessionServing:
+    def test_submit_many_matches_run_batch_bitexact_int8(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        out = session.submit_many(xs)          # 7 requests -> buckets 4 + 4(pad 1)
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs, mode="int8")
+        assert out.dtype == ref.dtype == np.int8
+        assert np.array_equal(out, ref)
+
+    def test_run_matches_eager_oracle_int8(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=2)
+        eager = SplitExecutor(plan.split, qmodel)
+        assert np.array_equal(session.run(xs[0]),
+                              eager.run(xs[0], mode="int8"))
+
+    def test_float_precision_close_to_reference(self, plan, model, xs):
+        session = Session(plan, precision="float", max_batch=4)
+        out = session.submit_many(xs[:3])
+        for i in range(3):
+            ref = reference_forward(model, xs[i])
+            assert np.max(np.abs(out[i] - ref)) < 1e-4
+
+    def test_bucket_reuse_across_shapes(self, plan, qmodel, xs):
+        """Regression: the compiled engine must survive serving at several
+        batch shapes (constants created inside one trace used to leak into
+        the next as tracers)."""
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4,
+                          buckets=(1, 2, 4))
+        a = session.submit_many(xs[:1])     # bucket 1
+        b = session.submit_many(xs[:3])     # bucket 4 (pad 1)
+        c = session.submit_many(xs[:2])     # bucket 2
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:3], mode="int8")
+        assert np.array_equal(a[0], ref[0])
+        assert np.array_equal(b, ref)
+        assert np.array_equal(c, ref[:2])
+
+    def test_submit_flush_tickets(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        tickets = [session.submit(x) for x in xs[:3]]
+        assert session.n_pending == 3
+        assert not tickets[0].done()
+        served = session.flush()
+        assert served == 3 and session.n_pending == 0
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:3], mode="int8")
+        for t, r in zip(tickets, ref):
+            assert t.done() and np.array_equal(t.result(), r)
+
+    def test_ticket_result_flushes_on_demand(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        t = session.submit(xs[0])
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:1], mode="int8")[0]
+        assert np.array_equal(t.result(), ref)   # implicit flush
+        assert session.n_pending == 0
+
+    def test_stats_account_requests_and_padding(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4,
+                          buckets=(1, 2, 4))
+        session.submit_many(xs)                  # 7 -> dispatches of 4 and 4(pad 1)
+        s = session.stats()
+        assert s.requests == 7
+        assert s.batches == 2
+        assert s.padded == 1
+        assert s.wall_s > 0 and s.throughput_rps > 0
+        assert sum(s.per_bucket.values()) == s.batches
+
+    def test_auto_calibration_path(self, plan, xs):
+        """int8 without an explicit qmodel: Session calibrates itself and
+        still serves deterministically."""
+        s1 = Session(plan, precision="int8", seed=7)
+        s2 = Session(plan, precision="int8", seed=7)
+        assert np.array_equal(s1.run(xs[0]), s2.run(xs[0]))
+
+
+class TestSessionValidation:
+    def test_rejects_bad_precision(self, plan):
+        with pytest.raises(ValueError, match="precision"):
+            Session(plan, precision="fp16")
+
+    def test_rejects_bad_shapes(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel)
+        with pytest.raises(ValueError, match="shape"):
+            session.run(xs[0][:, :4, :])
+        with pytest.raises(ValueError, match="shape"):
+            session.submit_many(xs[:, :, :4, :])
+
+    def test_rejects_bad_plan_type(self):
+        with pytest.raises(TypeError):
+            Session(object(), precision="float")
+
+    def test_accepts_bare_split_plan(self, model, qmodel, xs):
+        """Benchmarks/tests can wrap a core SplitPlan directly."""
+        split = split_model(model, np.asarray([2.0, 1.0]))
+        session = Session(split, precision="int8", qmodel=qmodel, max_batch=2)
+        ref = CompiledSplitExecutor(split, qmodel).run_batch(xs[:2],
+                                                             mode="int8")
+        assert np.array_equal(session.submit_many(xs[:2]), ref)
+
+    def test_empty_batch_keeps_output_shape_and_dtype(self, plan, qmodel,
+                                                      model, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=2)
+        empty = session.submit_many(xs[:0])
+        assert empty.shape == (0, *model.out_shape)
+        assert empty.dtype == np.int8
+        # concatenates cleanly with real outputs
+        real = session.submit_many(xs[:1])
+        assert np.concatenate([empty, real]).shape == (1, *model.out_shape)
+        sf = Session(plan, precision="float", max_batch=2)
+        assert sf.submit_many(xs[:0]).dtype == np.float32
+
+    def test_warmup_compiles_buckets(self, plan, qmodel):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=2,
+                          buckets=(1, 2))
+        session.warmup()
+        assert session.stats().requests == 0  # warmup is not traffic
