@@ -15,13 +15,23 @@ a >20% regression:
   plan's simulated latency and max peak RAM come from the analytic models,
   so they are deterministic too: a >20% growth means the search now picks a
   worse plan.  The recorded wall time is informational only (machine-bound).
+* ``transport`` (async-transport rows per {config}@{workers}/{mode}) —
+  serial total and pipelined makespan are both analytic: either growing
+  >20% is a cost-model regression, and a pipelined makespan exceeding its
+  serial total breaks the overlap invariant outright.
+
+``--sections`` restricts which sections are compared — the pinned-min jax
+CI cell regenerates only the analytic sections (``peaks,planner,transport``)
+and gates those, catching cost-model drift the latest-jax bench job can
+mask.
 
 Rows/modes present in only one file are reported but don't fail the gate
 (benchmarks may gain coverage); missing files or empty overlap DO fail — a
 gate that silently compares nothing holds no line.
 
 Run:  python benchmarks/check_regression.py --baseline BENCH_executor.json \
-          --fresh fresh/BENCH_executor.json [--threshold 0.2]
+          --fresh fresh/BENCH_executor.json [--threshold 0.2] \
+          [--sections rows,peaks,planner,transport]
 """
 from __future__ import annotations
 
@@ -38,12 +48,18 @@ def _row_key(row: dict) -> tuple:
             row["batch"])
 
 
-def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], int]:
+SECTIONS = ("rows", "peaks", "planner", "transport")
+
+
+def compare(baseline: dict, fresh: dict, threshold: float,
+            sections: tuple[str, ...] = SECTIONS) -> tuple[list[str], int]:
     """Returns (failure messages, number of metrics actually compared)."""
     failures: list[str] = []
     compared = 0
-    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
-    fresh_rows = {_row_key(r): r for r in fresh.get("rows", [])}
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])
+                 if "rows" in sections}
+    fresh_rows = {_row_key(r): r for r in fresh.get("rows", [])
+                  if "rows" in sections}
     ratios = []
     for key in sorted(base_rows.keys() & fresh_rows.keys()):
         b, f = base_rows[key]["speedup"], fresh_rows[key]["speedup"]
@@ -67,8 +83,8 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], i
             print(f"ok {line}")
     for key in sorted(base_rows.keys() ^ fresh_rows.keys()):
         print(f"note: row {key} present in only one file — skipped")
-    base_peaks = baseline.get("peaks", {})
-    fresh_peaks = fresh.get("peaks", {})
+    base_peaks = baseline.get("peaks", {}) if "peaks" in sections else {}
+    fresh_peaks = fresh.get("peaks", {}) if "peaks" in sections else {}
     for config in sorted(base_peaks.keys() & fresh_peaks.keys()):
         for mode in sorted(base_peaks[config].keys()
                            & fresh_peaks[config].keys()):
@@ -80,8 +96,8 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], i
                     f"{f} B > {1.0 + threshold:.0%} of baseline {b} B")
             else:
                 print(f"ok peak {config}/{mode}: {f} B (baseline {b} B)")
-    base_planner = baseline.get("planner", {})
-    fresh_planner = fresh.get("planner", {})
+    base_planner = baseline.get("planner", {}) if "planner" in sections else {}
+    fresh_planner = fresh.get("planner", {}) if "planner" in sections else {}
     for key in sorted(base_planner.keys() & fresh_planner.keys()):
         b, f = base_planner[key], fresh_planner[key]
         if b.get("feasible") != f.get("feasible"):
@@ -102,6 +118,29 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], i
             else:
                 print(f"ok planner {key}/{metric}: {f[metric]} "
                       f"(baseline {b[metric]})")
+    base_tp = baseline.get("transport", {}) if "transport" in sections else {}
+    fresh_tp = fresh.get("transport", {}) if "transport" in sections else {}
+    for key in sorted(base_tp.keys() & fresh_tp.keys()):
+        b, f = base_tp[key], fresh_tp[key]
+        for metric in ("serial_s", "pipelined_s"):
+            if metric not in b or metric not in f:
+                continue
+            compared += 1
+            if f[metric] > b[metric] * (1.0 + threshold):
+                failures.append(
+                    f"transport regression {key}/{metric}: {f[metric]} > "
+                    f"{1.0 + threshold:.0%} of baseline {b[metric]}")
+            else:
+                print(f"ok transport {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]})")
+        # the overlap invariant is machine-independent: pipelined may never
+        # be slower than the serial schedule it relaxes
+        if ("serial_s" in f and "pipelined_s" in f
+                and f["pipelined_s"] > f["serial_s"] * (1.0 + 1e-9)):
+            compared += 1
+            failures.append(
+                f"transport invariant broken {key}: pipelined "
+                f"{f['pipelined_s']} s exceeds serial {f['serial_s']} s")
     return failures, compared
 
 
@@ -113,14 +152,22 @@ def main(argv: list[str] | None = None) -> int:
                     help="freshly produced BENCH_executor.json")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional regression (default 0.20)")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help="comma-separated sections to compare "
+                         f"(default: {','.join(SECTIONS)})")
     args = ap.parse_args(argv)
+    sections = tuple(s.strip() for s in args.sections.split(",") if s.strip())
+    for s in sections:
+        if s not in SECTIONS:
+            print(f"FAIL: unknown section {s!r} (want one of {SECTIONS})")
+            return 1
     try:
         baseline = json.loads(args.baseline.read_text())
         fresh = json.loads(args.fresh.read_text())
     except (OSError, json.JSONDecodeError) as e:
         print(f"FAIL: cannot load benchmark JSON: {e}")
         return 1
-    failures, compared = compare(baseline, fresh, args.threshold)
+    failures, compared = compare(baseline, fresh, args.threshold, sections)
     if compared == 0:
         print("FAIL: no overlapping benchmark metrics to compare")
         return 1

@@ -61,11 +61,30 @@ def _time(fn, iters: int) -> float:
     return best
 
 
+def build_plans(model) -> dict:
+    """One SplitPlan per peak mode on the bench's heterogeneous ratings."""
+    from repro.core import split_model
+
+    return {mode: split_model(model, np.asarray(RATINGS), mode=mode)
+            for mode in PEAK_MODES}
+
+
+def peaks_for(model, plans: dict | None = None) -> dict[str, int]:
+    """The analytic per-mode max per-worker peak for one config — the single
+    definition of the ``peaks`` section, shared with ``planner_bench`` so the
+    two writers of the shared JSON cannot drift apart."""
+    from repro.core import peak_ram_per_worker
+
+    plans = plans if plans is not None else build_plans(model)
+    return {mode: int(peak_ram_per_worker(plan).max())
+            for mode, plan in plans.items()}
+
+
 def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
     from repro.api import Session
     from repro.core import (CompiledSplitExecutor, SplitExecutor,
-                            calibrate_scales, peak_ram_per_worker,
-                            quantize_model, reference_forward, split_model)
+                            calibrate_scales, quantize_model,
+                            reference_forward)
 
     rng = np.random.default_rng(0)
     rows: list[dict] = []
@@ -78,11 +97,10 @@ def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
             lambda m, xx: reference_forward(m, xx,
                                             collect_activations=True)[1])
         qm = quantize_model(model, scales)
-        plans = {split: split_model(model, np.asarray(RATINGS), mode=split)
-                 for split in PEAK_MODES}
-        peaks[name] = {split: int(peak_ram_per_worker(plan).max())
-                       for split, plan in plans.items()}
-        del plans["kernel"]       # timing rows cover neuron + spatial
+        all_plans = build_plans(model)
+        peaks[name] = peaks_for(model, all_plans)
+        plans = {split: all_plans[split]
+                 for split in ("neuron", "spatial")}  # timing rows
         xs = {b: np.stack([rng.standard_normal((3, hw, hw)).astype(np.float32)
                            for _ in range(b)]) for b in BATCHES}
         for split, plan in plans.items():
@@ -133,14 +151,20 @@ def write_results(rows: list[dict], peaks: dict) -> dict:
         rows=rows,
         peaks=peaks,
     )
-    # preserve the planner_bench section (shared file, either order)
+    # preserve the planner_bench sections (shared file, either order), and
+    # merge peaks per config so a --quick run doesn't erase the committed
+    # full-model entries
     if RESULT_PATH.exists():
         try:
             old = json.loads(RESULT_PATH.read_text())
         except json.JSONDecodeError:
             old = {}
-        if "planner" in old:
-            payload["planner"] = old["planner"]
+        for section in ("planner", "transport"):
+            if section in old:
+                payload[section] = old[section]
+        merged_peaks = dict(old.get("peaks", {}))
+        merged_peaks.update(payload["peaks"])
+        payload["peaks"] = merged_peaks
     RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return payload
 

@@ -1,12 +1,20 @@
 """Planner search benchmark: plan-search wall time for MobileNetV2 over
 1/3/8-worker heterogeneous clusters, plus the chosen plan's *deterministic*
-metrics (simulated latency, max per-worker peak RAM) — those two are
-analytic, machine-independent, and gated by ``check_regression.py`` against
-the committed baseline; the wall time is informational.
+metrics (simulated latency, max per-worker peak RAM, chosen transport and
+its predicted overlap savings) — the analytic ones are machine-independent
+and gated by ``check_regression.py`` against the committed baseline; the
+wall time is informational.
 
-Results merge into ``BENCH_executor.json`` under the ``planner`` key via
-read-modify-write, so this bench and ``executor_bench`` can run in either
-order (each preserves the other's sections).
+Three sections merge into ``BENCH_executor.json`` via read-modify-write
+(so this bench and ``executor_bench`` can run in either order — each
+preserves the other's sections):
+
+* ``planner`` — plan-search outcomes per {config}@{workers};
+* ``transport`` — the async-transport rows: serial (Eq. 5-6) total vs
+  pipelined makespan per {config}@{workers}/{mode}, all analytic;
+* ``peaks`` — the analytic per-worker peak-RAM maxima (same computation as
+  ``executor_bench``), so the fully-analytic CI cell (pinned-min jax) can
+  regenerate and gate planner/peaks/transport without timing anything.
 
 Run:  PYTHONPATH=src python -m benchmarks.planner_bench [--quick]
 (--quick: smoke model only — the CI smoke run.)
@@ -18,23 +26,35 @@ import json
 import pathlib
 import time
 
+import numpy as np
+
+try:
+    from benchmarks.executor_bench import peaks_for
+except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+    from executor_bench import peaks_for
+
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 RESULT_PATH = _REPO_ROOT / "BENCH_executor.json"
 
 WORKER_COUNTS = (1, 3, 8)
 RAM_CAP = 512 * 1024
+TRANSPORT_MODES = ("neuron", "spatial")
+
+
+def _configs(quick: bool):
+    from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
+    cfgs = [("smoke", mobilenet_v2_smoke)]
+    if not quick:
+        cfgs.append(("mnv2_112", mobilenet_v2_paper))
+    return cfgs
 
 
 def planner_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
     from repro.api import Cluster, InfeasibleError, Objective, Planner
-    from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
 
-    cfgs = [("smoke", mobilenet_v2_smoke)]
-    if not quick:
-        cfgs.append(("mnv2_112", mobilenet_v2_paper))
     rows: list[tuple] = []
     data: dict[str, dict] = {}
-    for name, make_model in cfgs:
+    for name, make_model in _configs(quick):
         model = make_model()
         for k in WORKER_COUNTS:
             cluster = Cluster.heterogeneous_demo(k)
@@ -58,17 +78,71 @@ def planner_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
                 plan_latency_s=round(plan.latency_s, 9),
                 max_peak_ram=int(plan.max_peak_ram),
                 mode=plan.mode, fusion=plan.fusion,
+                transport=plan.transport,
+                overlap_saved_s=round(plan.overlap_saved_s, 9),
                 n_workers=plan.n_workers)
             rows.append((f"planner_{name}_w{k}", wall,
                          f"mode={plan.mode}/{plan.fusion} "
+                         f"transport={plan.transport} "
                          f"workers={plan.n_workers} "
                          f"latency={plan.latency_s:.4f}s "
                          f"peak={plan.max_peak_ram / 1024:.0f}KB"))
     return rows, data
 
 
-def merge_results(data: dict) -> dict:
-    """Read-modify-write the shared JSON: update only the planner section."""
+def transport_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
+    """Deterministic async-transport rows: serial (Eq. 5-6) total vs
+    pipelined makespan for the heterogeneous demo cluster, per mode.  All
+    analytic — gated by ``check_regression.py``'s ``transport`` section."""
+    import dataclasses
+
+    from repro.api import Cluster
+    from repro.core import SimConfig, simulate, split_model
+
+    rows: list[tuple] = []
+    data: dict[str, dict] = {}
+    cfg = SimConfig()
+    for name, make_model in _configs(quick):
+        model = make_model()
+        for k in WORKER_COUNTS:
+            if k < 2:
+                continue        # single link: the transports coincide
+            workers = list(Cluster.heterogeneous_demo(k).workers)
+            for mode in TRANSPORT_MODES:
+                plan = split_model(model, np.ones(k), mode=mode)
+                serial = simulate(model, workers, cfg=cfg, plan=plan)
+                piped = simulate(
+                    model, workers,
+                    cfg=dataclasses.replace(cfg, transport="pipelined"),
+                    plan=plan)
+                key = f"{name}@{k}/{mode}"
+                data[key] = dict(
+                    serial_s=round(serial.total_time, 9),
+                    pipelined_s=round(piped.total_time, 9),
+                    overlap_saved_s=round(piped.overlap_saved_s, 9),
+                    mean_link_utilization=round(
+                        float(piped.timeline.link_utilization.mean()), 6),
+                    max_idle_s=round(float(piped.timeline.idle_s.max()), 9))
+                rows.append((f"transport_{name}_w{k}_{mode}",
+                             piped.total_time,
+                             f"serial={serial.total_time:.4f}s "
+                             f"saved={piped.overlap_saved_s:.4f}s"))
+    return rows, data
+
+
+def analytic_peaks(quick: bool = False) -> dict:
+    """The ``peaks`` section via the same :func:`executor_bench.peaks_for`
+    the timed bench uses — here so the analytic-only CI cell can refresh it
+    without running any timed benchmark."""
+    return {name: peaks_for(make_model())
+            for name, make_model in _configs(quick)}
+
+
+def merge_results(planner: dict, transport: dict, peaks: dict) -> dict:
+    """Read-modify-write the shared JSON: update only our sections, and
+    merge each of them per key — a ``--quick`` run refreshes the smoke
+    entries without erasing the committed full-model (mnv2_112) coverage
+    the analytic CI gate compares against."""
     payload: dict = {}
     if RESULT_PATH.exists():
         try:
@@ -76,15 +150,26 @@ def merge_results(data: dict) -> dict:
         except json.JSONDecodeError:
             payload = {}
     payload.setdefault("benchmark", "executor_eager_vs_compiled")
-    payload["planner"] = data
+    for section, fresh in (("planner", planner), ("transport", transport),
+                           ("peaks", peaks)):
+        merged = dict(payload.get(section, {}))
+        merged.update(fresh)
+        payload[section] = merged
     RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return payload
 
 
+def _collect(quick: bool) -> tuple[list[tuple], dict]:
+    rows, planner = planner_metrics(quick=quick)
+    t_rows, transport = transport_metrics(quick=quick)
+    peaks = analytic_peaks(quick=quick)
+    payload = merge_results(planner, transport, peaks)
+    return rows + t_rows, payload
+
+
 def bench_planner(quick: bool = False) -> list[tuple]:
     """run.py suite entry: benchmark, merge JSON, return CSV rows."""
-    rows, data = planner_metrics(quick=quick)
-    merge_results(data)
+    rows, _ = _collect(quick)
     return rows
 
 
@@ -93,9 +178,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke model only (CI)")
     args = ap.parse_args()
-    rows, data = planner_metrics(quick=args.quick)
-    merge_results(data)
-    print(json.dumps(data, indent=2))
+    _, payload = _collect(args.quick)
+    print(json.dumps({k: payload[k] for k in ("planner", "transport")},
+                     indent=2))
 
 
 if __name__ == "__main__":

@@ -46,9 +46,13 @@ def main():
     ref = reference_forward(model, x)
     print(f"split vs monolithic max|err|: {np.max(np.abs(out - ref)):.2e}")
 
-    # 4. end-to-end latency through the Eq. 1 timing model
+    # 4. end-to-end latency through the Eq. 1 timing model; the planner also
+    # searched the transport axis (serial coordinator vs per-link pipelining)
     print(f"simulated inference: total={plan.latency_s * 1e3:.1f} ms "
           f"(comp {plan.comp_s * 1e3:.1f} + comm {plan.comm_s * 1e3:.1f})")
+    saved = (f", overlap saves {plan.overlap_saved_s * 1e3:.1f} ms vs serial"
+             if plan.transport == "pipelined" else "")
+    print(f"chosen transport: {plan.transport}{saved}")
 
 
 if __name__ == "__main__":

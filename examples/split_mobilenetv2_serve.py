@@ -94,6 +94,13 @@ def main():
           f"{stats.wall_s * 1e3:.0f} ms total, "
           f"{stats.throughput_rps:.1f} req/s, "
           f"{stats.wall_s / stats.requests * 1e3:.1f} ms/request amortized")
+    if stats.transport == "pipelined":
+        print(f"planned transport: pipelined (per-link async queues; "
+              f"predicted overlap saving "
+              f"{stats.predicted_overlap_saved_s * 1e3:.1f} ms/inference "
+              f"vs the serial coordinator)")
+    else:
+        print("planned transport: serial (Eq. 5-6 coordinator)")
 
     # one eager reference request: the serving engine must agree bit-for-bit
     # with the step-for-step MCU protocol oracle

@@ -13,11 +13,13 @@ package is that coordinator as a stable three-noun API::
     outputs = session.submit_many(requests)
 
 ``Cluster`` validates the measured worker set (presets, JSON round-trip);
-``Planner`` searches mode × fusion × worker subsets with the analytic cost
-models and raises :class:`InfeasibleError` (naming the binding constraint)
-instead of returning a bad plan; ``Plan`` is scored, serializable and
-reportable; ``Session`` serves micro-batched requests through the compiled
-engine with per-bucket compilation caching and rolling stats.
+``Planner`` searches mode × fusion × worker subsets × transport (the serial
+Eq. 5-6 coordinator vs the event-driven per-link async transport) with the
+analytic cost models and raises :class:`InfeasibleError` (naming the
+binding constraint) instead of returning a bad plan; ``Plan`` is scored,
+serializable and reportable; ``Session`` serves micro-batched requests
+through the compiled engine with per-bucket compilation caching and
+rolling stats.
 
 The free functions in :mod:`repro.core` (``split_model``, ``simulate``,
 ``ratings_for``, ...) remain the underlying engine and stay importable, but

@@ -75,6 +75,12 @@ class Plan:
     peak_ram: np.ndarray                 # per selected worker, bytes (int8)
     weight_bytes: np.ndarray             # per selected worker, bytes (int8)
     score: float
+    # transport policy the winning candidate was costed under ("serial" is
+    # the Eq. 5-6 coordinator-serialized model; "pipelined" the per-link
+    # async transport) and the seconds pipelining saved vs serial (0 when
+    # transport == "serial")
+    transport: str = "serial"
+    overlap_saved_s: float = 0.0
     candidates: tuple = ()
 
     # -- derived views -------------------------------------------------------
@@ -102,12 +108,15 @@ class Plan:
         lines = [
             f"Plan: mode={self.mode}"
             + (f"/{self.fusion}" if self.mode == "spatial" else "")
+            + f", transport={self.transport}"
             + f", {self.n_workers}/{self.cluster.n_workers} workers "
             f"{list(self.worker_indices)} of {self.cluster.name!r}",
             f"  objective: minimize {getattr(self.objective, 'minimize', '?')}"
             f"  score={self.score:.6g}",
             f"  simulated latency: {self.latency_s * 1e3:.1f} ms "
-            f"(comp {self.comp_s * 1e3:.1f} + comm {self.comm_s * 1e3:.1f})",
+            f"(comp {self.comp_s * 1e3:.1f} + comm {self.comm_s * 1e3:.1f})"
+            + (f", overlap saves {self.overlap_saved_s * 1e3:.1f} ms "
+               "vs serial" if self.transport == "pipelined" else ""),
             f"  bytes moved/inference: {self.comm_bytes / 1e6:.2f} MB",
             f"  max per-worker peak RAM: {self.max_peak_ram / 1024:.1f} KB",
             f"  max per-worker weights:  {self.max_weight_bytes / 1024:.1f} KB",
@@ -117,21 +126,23 @@ class Plan:
             lines.append("  search ({} candidates):".format(len(self.candidates)))
             for c in self.candidates:
                 tag = f"{c.mode}" + (f"/{c.fusion}" if c.mode == "spatial" else "")
+                tag += f"/{getattr(c, 'transport', 'serial')}"
                 if c.feasible:
                     lines.append(
-                        f"    {tag:14s} workers={len(c.worker_indices)} "
+                        f"    {tag:24s} workers={len(c.worker_indices)} "
                         f"latency={c.latency_s * 1e3:8.1f}ms "
                         f"peak={c.max_peak_ram / 1024:7.1f}KB "
                         f"score={c.score:.6g}"
                         + ("   <- selected" if self._is_selected(c) else ""))
                 else:
                     lines.append(
-                        f"    {tag:14s} workers={len(c.worker_indices)} "
+                        f"    {tag:24s} workers={len(c.worker_indices)} "
                         f"INFEASIBLE ({c.reason})")
         return "\n".join(lines)
 
     def _is_selected(self, cand) -> bool:
         return (cand.mode == self.mode and cand.fusion == self.fusion
+                and cand.transport == self.transport
                 and tuple(cand.worker_indices) == tuple(self.worker_indices))
 
     # -- serialization -------------------------------------------------------
@@ -144,6 +155,7 @@ class Plan:
             "objective": self.objective.to_dict(),
             "mode": self.mode,
             "fusion": self.fusion,
+            "transport": self.transport,
             "worker_indices": list(self.worker_indices),
             "ratings": [float(r) for r in np.asarray(self.ratings)],
             "metrics": {
@@ -151,6 +163,7 @@ class Plan:
                 "comp_s": float(self.comp_s),
                 "comm_s": float(self.comm_s),
                 "comm_bytes": int(self.comm_bytes),
+                "overlap_saved_s": float(self.overlap_saved_s),
                 "score": float(self.score),
             },
             "peak_ram": [int(b) for b in np.asarray(self.peak_ram)],
@@ -194,6 +207,7 @@ class Plan:
             model=model, cluster=cluster,
             objective=Objective.from_dict(data["objective"]),
             mode=data["mode"], fusion=data["fusion"],
+            transport=data.get("transport", "serial"),
             worker_indices=tuple(int(i) for i in data["worker_indices"]),
             ratings=ratings, split=split,
             latency_s=float(m["latency_s"]), comp_s=float(m["comp_s"]),
@@ -201,6 +215,7 @@ class Plan:
             peak_ram=stored_peak,
             weight_bytes=np.asarray(data["weight_bytes"], dtype=np.int64),
             score=float(m["score"]),
+            overlap_saved_s=float(m.get("overlap_saved_s", 0.0)),
             candidates=tuple(PlanCandidate.from_dict(c)
                              for c in data.get("candidates", ())))
 

@@ -10,7 +10,9 @@ beyond the paper — into a declarative search::
 
 The search space is mode ∈ {neuron, kernel, spatial} × fusion granularity
 (fused blocks vs per-layer bands, spatial only) × worker subsets (top-k by
-capability rating, k = 1..max_workers).  Every candidate is costed with the
+capability rating, k = 1..max_workers) × transport ∈ {serial, pipelined}
+(the Eq. 5-6 coordinator-serialized model vs the event-driven per-link
+async transport).  Every candidate is costed with the
 existing analytic models (:func:`repro.core.simulator.simulate` for
 latency/communication, :func:`repro.core.memory.peak_ram_per_worker` for the
 per-worker peak) and checked against the RAM/flash budgets; neuron/kernel
@@ -30,7 +32,8 @@ import numpy as np
 from ..core.allocation import ratings_for, redistribute_overflow
 from ..core.memory import peak_ram_per_worker
 from ..core.reinterpret import ReinterpretedModel
-from ..core.simulator import SimConfig, measured_kc, simulate, simulated_k1
+from ..core.simulator import (TRANSPORTS, SimConfig, measured_kc, simulate,
+                              simulated_k1)
 from ..core.splitting import MODES
 from .cluster import Cluster
 from .plan import Plan, build_split_plan
@@ -59,7 +62,9 @@ class Objective:
     per-worker peak).  ``ram_cap_bytes``/``flash_cap_bytes`` tighten every
     worker's own budget (``None`` keeps the per-worker values from the
     cluster).  ``max_workers`` caps the subset size; ``modes`` restricts the
-    partitioning axes searched.
+    partitioning axes searched; ``transports`` restricts the transport
+    policies searched (the tuple order doubles as the tie-break preference,
+    so the default prefers serial when pipelining buys nothing).
     """
 
     minimize: str = "latency"
@@ -67,6 +72,7 @@ class Objective:
     flash_cap_bytes: int | None = None
     max_workers: int | None = None
     modes: tuple[str, ...] = MODES
+    transports: tuple[str, ...] = TRANSPORTS
 
     def __post_init__(self) -> None:
         if self.minimize not in ("latency", "comm_bytes", "peak_ram"):
@@ -80,6 +86,14 @@ class Objective:
         for m in self.modes:
             if m not in MODES:
                 raise ValueError(f"unknown mode {m!r} (want one of {MODES})")
+        if not isinstance(self.transports, tuple):
+            object.__setattr__(self, "transports", tuple(self.transports))
+        if not self.transports:
+            raise ValueError("objective needs at least one transport")
+        for t in self.transports:
+            if t not in TRANSPORTS:
+                raise ValueError(
+                    f"unknown transport {t!r} (want one of {TRANSPORTS})")
         if self.max_workers is not None and self.max_workers < 1:
             raise ValueError("max_workers must be >= 1")
         for name in ("ram_cap_bytes", "flash_cap_bytes"):
@@ -100,15 +114,19 @@ class Objective:
                 "ram_cap_bytes": self.ram_cap_bytes,
                 "flash_cap_bytes": self.flash_cap_bytes,
                 "max_workers": self.max_workers,
-                "modes": list(self.modes)}
+                "modes": list(self.modes),
+                "transports": list(self.transports)}
 
     @classmethod
     def from_dict(cls, data: dict) -> "Objective":
+        # plans serialized before the transport axis carry no "transports"
+        # key: they were searched under the serial model only
         return cls(minimize=data.get("minimize", "latency"),
                    ram_cap_bytes=data.get("ram_cap_bytes"),
                    flash_cap_bytes=data.get("flash_cap_bytes"),
                    max_workers=data.get("max_workers"),
-                   modes=tuple(data.get("modes", MODES)))
+                   modes=tuple(data.get("modes", MODES)),
+                   transports=tuple(data.get("transports", ("serial",))))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,12 +139,16 @@ class PlanCandidate:
     worker_indices: tuple[int, ...]
     feasible: bool
     reason: str | None = None            # why infeasible (None when feasible)
+    # "*" on infeasible candidates: RAM/flash feasibility is
+    # transport-independent, so one entry covers every transport searched
+    transport: str = "serial"
     latency_s: float = float("nan")
     comp_s: float = float("nan")
     comm_s: float = float("nan")
     comm_bytes: int = 0
     max_peak_ram: int = 0
     max_weight_bytes: int = 0
+    overlap_saved_s: float = 0.0
     score: float = float("nan")
 
     _NAN_FIELDS = ("latency_s", "comp_s", "comm_s", "score")
@@ -215,28 +237,40 @@ class Planner:
             for mode in objective.modes:
                 for fusion in (("block", "layer") if mode == "spatial"
                                else ("block",)):
-                    results.append(self._score_one(
+                    results.extend(self._score_one(
                         objective, idx, workers, base_ratings, ram_caps,
                         flash_caps, model_bytes, mode, fusion))
         return results
 
     def _score_one(self, objective, idx, workers, base_ratings, ram_caps,
                    flash_caps, model_bytes, mode, fusion):
+        """Score one (subset, mode, fusion) point: a single infeasible
+        candidate (feasibility is transport-independent), or one scored
+        candidate per transport searched — the split/peak/weights artifacts
+        are built once and only the timing model re-runs per transport."""
         ratings = base_ratings
         if mode in ("neuron", "kernel"):
             # Eq. 7: shift rating mass away from storage-overflowed workers
             # (weights are split in these modes, so shares track ratings)
             if flash_caps.sum() < model_bytes:
-                return PlanCandidate(
+                return [PlanCandidate(
                     mode=mode, fusion=fusion, worker_indices=idx,
-                    feasible=False,
+                    feasible=False, transport="*",
                     reason=(f"flash_cap: total capacity "
                             f"{flash_caps.sum():.0f} B < model "
-                            f"{model_bytes:.0f} B"))
-            ratings = redistribute_overflow(base_ratings, flash_caps,
-                                            model_bytes)
-        split = build_split_plan(self.model, ratings, mode, fusion)
-        peak = peak_ram_per_worker(split)
+                            f"{model_bytes:.0f} B"))]
+        try:
+            if mode in ("neuron", "kernel"):
+                ratings = redistribute_overflow(base_ratings, flash_caps,
+                                                model_bytes)
+            split = build_split_plan(self.model, ratings, mode, fusion)
+            peak = peak_ram_per_worker(split)
+        except (ValueError, RuntimeError) as e:
+            # a mode that cannot even build a split for these workers is an
+            # explicit infeasible candidate, not a search-aborting crash
+            return [PlanCandidate(
+                mode=mode, fusion=fusion, worker_indices=idx, feasible=False,
+                transport="*", reason=f"split_error: {type(e).__name__}: {e}")]
         weights = np.array([split.worker_weight_bytes(w)
                             for w in range(split.n_workers)], dtype=np.int64)
         over_ram = peak > ram_caps
@@ -251,20 +285,28 @@ class Planner:
                 w = int(np.argmax(weights / flash_caps))
                 terms.append(f"flash_cap: worker {idx[w]} weights "
                              f"{int(weights[w])} B > cap {int(flash_caps[w])} B")
-            return PlanCandidate(mode=mode, fusion=fusion, worker_indices=idx,
-                                 feasible=False, reason="; ".join(terms),
-                                 max_peak_ram=int(peak.max()),
-                                 max_weight_bytes=int(weights.max()))
-        res = simulate(self.model, workers, ratings, self.sim_cfg, plan=split)
-        cand = PlanCandidate(
-            mode=mode, fusion=fusion, worker_indices=idx, feasible=True,
-            latency_s=res.total_time, comp_s=res.comp_time,
-            comm_s=res.comm_time, comm_bytes=res.total_bytes,
-            max_peak_ram=int(peak.max()), max_weight_bytes=int(weights.max()),
-            score=objective.score(res.total_time, res.total_bytes,
-                                  int(peak.max())))
-        return _Scored(cand=cand, ratings=ratings, split=split, peak=peak,
-                       weights=weights)
+            return [PlanCandidate(mode=mode, fusion=fusion, worker_indices=idx,
+                                  feasible=False, reason="; ".join(terms),
+                                  transport="*",
+                                  max_peak_ram=int(peak.max()),
+                                  max_weight_bytes=int(weights.max()))]
+        out = []
+        for transport in objective.transports:
+            cfg = dataclasses.replace(self.sim_cfg, transport=transport)
+            res = simulate(self.model, workers, ratings, cfg, plan=split)
+            cand = PlanCandidate(
+                mode=mode, fusion=fusion, worker_indices=idx, feasible=True,
+                transport=transport,
+                latency_s=res.total_time, comp_s=res.comp_time,
+                comm_s=res.comm_time, comm_bytes=res.total_bytes,
+                max_peak_ram=int(peak.max()),
+                max_weight_bytes=int(weights.max()),
+                overlap_saved_s=res.overlap_saved_s,
+                score=objective.score(res.total_time, res.total_bytes,
+                                      int(peak.max())))
+            out.append(_Scored(cand=cand, ratings=ratings, split=split,
+                               peak=peak, weights=weights))
+        return out
 
     def candidates(self, objective: Objective | None = None) -> list[PlanCandidate]:
         """The full scored candidate table (feasible and infeasible) the
@@ -282,11 +324,15 @@ class Planner:
         if not feasible:
             raise self._infeasible(objective, results)
         # deterministic winner: best score, then fewer workers, then the
-        # objective's mode order, then fused before per-layer
+        # objective's mode order, then fused before per-layer, then the
+        # objective's transport order (serial first by default, so the async
+        # transport only wins when it actually lowers the score)
         mode_rank = {m: i for i, m in enumerate(objective.modes)}
+        transport_rank = {t: i for i, t in enumerate(objective.transports)}
         best = min(feasible, key=lambda s: (
             s.cand.score, len(s.cand.worker_indices),
-            mode_rank[s.cand.mode], s.cand.fusion))
+            mode_rank[s.cand.mode], s.cand.fusion,
+            transport_rank[s.cand.transport]))
         c = best.cand
         return Plan(
             model=self.model, cluster=self.cluster, objective=objective,
@@ -295,6 +341,7 @@ class Planner:
             latency_s=c.latency_s, comp_s=c.comp_s, comm_s=c.comm_s,
             comm_bytes=c.comm_bytes, peak_ram=best.peak,
             weight_bytes=best.weights, score=c.score,
+            transport=c.transport, overlap_saved_s=c.overlap_saved_s,
             candidates=tuple(r.cand if isinstance(r, _Scored) else r
                              for r in results))
 
@@ -306,7 +353,11 @@ class Planner:
             cand = r.cand if isinstance(r, _Scored) else r
             if cand.feasible or cand.reason is None:
                 continue
-            kind = "ram_cap" if cand.reason.startswith("ram_cap") else "flash_cap"
+            if cand.reason.startswith("split_error"):
+                kind = "split_error"
+            else:
+                kind = ("ram_cap" if cand.reason.startswith("ram_cap")
+                        else "flash_cap")
             if kind == "ram_cap" and objective.ram_cap_bytes:
                 margin = cand.max_peak_ram / objective.ram_cap_bytes
             elif kind == "flash_cap" and objective.flash_cap_bytes:
@@ -320,9 +371,13 @@ class Planner:
             # no candidate produced numbers (e.g. total flash < model bytes)
             cands = [r.cand if isinstance(r, _Scored) else r for r in results]
             best_cand = cands[0]
-            best_kind = ("flash_cap" if best_cand.reason
-                         and best_cand.reason.startswith("flash_cap")
-                         else "ram_cap")
+            reason = best_cand.reason or ""
+            if reason.startswith("flash_cap"):
+                best_kind = "flash_cap"
+            elif reason.startswith("split_error"):
+                best_kind = "split_error"
+            else:
+                best_kind = "ram_cap"
         details = {"mode": best_cand.mode, "fusion": best_cand.fusion,
                    "worker_indices": list(best_cand.worker_indices),
                    "reason": best_cand.reason,

@@ -38,6 +38,11 @@ class SessionStats:
     throughput_rps: float           # requests / wall_s
     mean_latency_s: float           # wall_s / batches (per-dispatch latency)
     per_bucket: dict[int, int]      # bucket size -> dispatch count
+    # deployment context from the plan (defaults when serving a bare
+    # core SplitPlan): the transport policy the plan was costed under and
+    # the seconds/inference the planner predicts pipelining saves vs serial
+    transport: str = "serial"
+    predicted_overlap_saved_s: float = 0.0
 
 
 class Ticket:
@@ -87,6 +92,7 @@ class Session:
                 f"unknown precision {precision!r} (want one of {PRECISIONS})")
         self.plan = plan if isinstance(plan, Plan) else None
         self.split = plan.split if isinstance(plan, Plan) else plan
+        self.transport = self.plan.transport if self.plan is not None else "serial"
         if not isinstance(self.split, SplitPlan):
             raise TypeError("plan must be a repro.api.Plan or a core SplitPlan")
         self.model = self.split.model
@@ -212,4 +218,7 @@ class Session:
                             if self._wall_s > 0 else 0.0),
             mean_latency_s=(self._wall_s / self._batches
                             if self._batches else 0.0),
-            per_bucket=dict(self._per_bucket))
+            per_bucket=dict(self._per_bucket),
+            transport=self.transport,
+            predicted_overlap_saved_s=(self.plan.overlap_saved_s
+                                       if self.plan is not None else 0.0))

@@ -22,8 +22,9 @@ from .memory import layerwise_peak, peak_ram_per_worker, plan_memory, single_dev
 from .quantize import (QuantizedModel, calibrate_scales, epilogue_params,
                        quantize_model, requantize)
 from .reinterpret import LayerSpec, ReinterpretedModel, layer_macs, trace_sequential
-from .simulator import (ModeReport, SimConfig, SimResult, compare_modes,
-                        measured_kc, simulate, simulated_k1)
+from .simulator import (TRANSPORTS, ModeReport, SimConfig, SimResult,
+                        Timeline, TimelineEvent, compare_modes, measured_kc,
+                        simulate, simulated_k1)
 from .splitting import (LayerSplit, ShardGeometry, SpatialBandGeometry,
                         SpatialShard, SplitPlan, WorkerShard, partition_bounds,
                         spatial_band_geometry, split_layer, split_model)
@@ -76,10 +77,13 @@ __all__ = [
     "ReinterpretedModel",
     "layer_macs",
     "trace_sequential",
-    # simulator (§VII.D)
+    # simulator (§VII.D + async transport)
+    "TRANSPORTS",
     "ModeReport",
     "SimConfig",
     "SimResult",
+    "Timeline",
+    "TimelineEvent",
     "compare_modes",
     "measured_kc",
     "simulate",

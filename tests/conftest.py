@@ -5,7 +5,16 @@ If ``hypothesis`` is not installed (it is an optional dev dependency — see
 requirements.txt) we install a minimal stand-in module so that test modules
 using ``@given``/``@settings`` still *collect*; every property test then
 skips with a clear reason instead of erroring the whole module at import.
+
+When hypothesis *is* available, two profiles are registered and selected
+via ``HYPOTHESIS_PROFILE`` (the CI test job exports ``ci``):
+
+* ``ci`` — derandomized (fixed seed: a matrix cell cannot flake on a fresh
+  random draw), ``deadline=None`` (shared runners stall unpredictably), and
+  a bumped ``max_examples`` so the extra determinism is spent on coverage;
+* ``dev`` (default) — hypothesis defaults minus the deadline.
 """
+import os
 import sys
 import types
 
@@ -14,6 +23,12 @@ import pytest
 
 try:
     import hypothesis  # noqa: F401
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", derandomize=True, deadline=None,
+                                   max_examples=200, print_blob=True)
+    _hyp_settings.register_profile("dev", deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ImportError:
     def _given(*_args, **_kwargs):
         def deco(_fn):

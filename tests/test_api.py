@@ -135,7 +135,12 @@ class TestPlanner:
     def test_candidate_table_covers_search_space(self, planner):
         cands = planner.candidates(Objective())
         # 4 sizes x (neuron + kernel + spatial/block + spatial/layer)
-        assert len(cands) == 4 * 4
+        #         x (serial + pipelined), infeasible points collapsed to one
+        # transport-independent entry each
+        feasible = [c for c in cands if c.feasible]
+        infeasible = [c for c in cands if not c.feasible]
+        assert len(feasible) + 2 * len(infeasible) == 4 * 4 * 2
+        assert all(c.transport == "*" for c in infeasible)
         assert all(isinstance(c, PlanCandidate) for c in cands)
 
     def test_max_workers_caps_subsets(self, planner):

@@ -150,6 +150,52 @@ class TestRegressionGate:
         assert check_regression.main(["--baseline", str(b),
                                       "--fresh", str(f)]) == 1
 
+    def test_transport_regression_fails(self, tmp_path):
+        """The async-transport rows are analytic: a >20% slower pipelined
+        makespan is a cost-model regression."""
+        base = _payload()
+        base["transport"] = {"smoke@8/neuron": dict(serial_s=0.25,
+                                                    pipelined_s=0.11)}
+        fresh = _payload()
+        fresh["transport"] = {"smoke@8/neuron": dict(serial_s=0.25,
+                                                     pipelined_s=0.15)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_transport_overlap_invariant_fails(self, tmp_path):
+        """A pipelined makespan above its own serial total breaks the
+        machine-independent overlap invariant regardless of the baseline."""
+        base = _payload()
+        base["transport"] = {"smoke@8/neuron": dict(serial_s=0.25,
+                                                    pipelined_s=0.11)}
+        fresh = _payload()
+        fresh["transport"] = {"smoke@8/neuron": dict(serial_s=0.10,
+                                                     pipelined_s=0.12)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_sections_flag_restricts_comparison(self, tmp_path):
+        """--sections lets the analytic-only CI cell gate planner/peaks/
+        transport while ignoring timing rows it never produced."""
+        b = _write(tmp_path, "base.json", _payload(speedup=50.0, peak=10000))
+        f = _write(tmp_path, "fresh.json", _payload(speedup=10.0, peak=10000))
+        # the speedup collapse fails a full comparison...
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+        # ...but is out of scope when only the analytic sections are gated
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "peaks,planner,transport"
+                                      ]) == 0
+        # an unknown section name is a hard configuration error
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "vibes"]) == 1
+
     def test_committed_baseline_selfcompare_passes(self, capsys):
         """The committed baseline must pass the gate against itself (the CI
         invariant: identical results are never a regression)."""

@@ -109,6 +109,16 @@ class TestSessionServing:
         assert s.padded == 1
         assert s.wall_s > 0 and s.throughput_rps > 0
         assert sum(s.per_bucket.values()) == s.batches
+        # deployment context flows from the plan into the stats
+        assert s.transport == plan.transport
+        assert s.predicted_overlap_saved_s == plan.overlap_saved_s
+
+    def test_bare_splitplan_session_defaults_to_serial(self, model, qmodel):
+        session = Session(split_model(model, np.ones(2)), precision="int8",
+                          qmodel=qmodel)
+        s = session.stats()
+        assert s.transport == "serial"
+        assert s.predicted_overlap_saved_s == 0.0
 
     def test_auto_calibration_path(self, plan, xs):
         """int8 without an explicit qmodel: Session calibrates itself and

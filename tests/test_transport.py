@@ -1,0 +1,289 @@
+"""Async transport simulator tests: serial bit-compatibility, the pipelined
+event model (timeline consistency, overlap savings, single-link degeneracy,
+zero-bandwidth validation), the planner's transport axis, and the explicit
+infeasible entries in compare_modes."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from conftest import small_cnn
+from repro.api import Cluster, Objective, Plan, Planner
+from repro.core import (SimConfig, WorkerParams, compare_modes, simulate,
+                        split_model)
+from repro.models import mobilenet_v2_smoke
+
+
+def _demo_workers(n=8):
+    return list(Cluster.heterogeneous_demo(n).workers)
+
+
+# ---------------------------------------------------------------------------
+# SimConfig / validation
+# ---------------------------------------------------------------------------
+
+class TestConfig:
+    def test_default_transport_is_serial(self):
+        assert SimConfig().transport == "serial"
+
+    def test_unknown_transport_rejected(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            SimConfig(transport="warp")
+
+    def test_zero_bandwidth_link_raises(self):
+        m = small_cnn()
+        for bad in (0.0, -1.0):
+            with pytest.raises(ValueError, match="zero-bandwidth"):
+                simulate(m, [WorkerParams(), WorkerParams(b_kb_s=bad)])
+
+
+# ---------------------------------------------------------------------------
+# serial transport: bit-compatible with the pre-transport model
+# ---------------------------------------------------------------------------
+
+# pinned from the model this PR inherited: SimConfig() defaults over
+# mobilenet_v2_smoke on Cluster.heterogeneous_demo(8), uniform ratings.
+# (total_s, comp_s, comm_s, total_bytes, max_peak_ram, max_weight_bytes)
+_PINNED_SERIAL = {
+    "neuron": (0.2539466285252525, 0.04144629785858587,
+               0.21250033066666665, 215296, 4128, 4701),
+    "kernel": (0.2539466285252525, 0.04144629785858587,
+               0.21250033066666665, 215296, 4128, 4701),
+    "spatial": (0.12684274093104964, 0.06834187119191919,
+                0.05850086973913045, 49184, 16672, 19674),
+}
+
+
+class TestSerialBitCompat:
+    def test_compare_modes_reproduces_pinned_numbers(self):
+        reports = compare_modes(mobilenet_v2_smoke(), _demo_workers())
+        assert set(reports) == set(_PINNED_SERIAL)
+        for mode, (total, comp, comm, nbytes, peak, weights) in \
+                _PINNED_SERIAL.items():
+            rep = reports[mode]
+            assert rep.feasible and rep.transport == "serial"
+            assert rep.total_time_s == pytest.approx(total, rel=1e-12)
+            assert rep.comp_time_s == pytest.approx(comp, rel=1e-12)
+            assert rep.comm_time_s == pytest.approx(comm, rel=1e-12)
+            assert rep.total_bytes == nbytes
+            assert rep.max_peak_ram == peak
+            assert rep.max_weight_bytes == weights
+            assert rep.overlap_saved_s == 0.0
+
+    def test_serial_result_has_no_timeline(self):
+        res = simulate(small_cnn(), [WorkerParams()] * 3)
+        assert res.transport == "serial" and res.timeline is None
+        assert res.overlap_saved_s == 0.0
+        assert res.total_time == res.serial_total_time
+
+
+# ---------------------------------------------------------------------------
+# pipelined transport
+# ---------------------------------------------------------------------------
+
+class TestPipelined:
+    def setup_method(self):
+        self.m = mobilenet_v2_smoke()
+        self.cfg = SimConfig(transport="pipelined")
+
+    def test_single_worker_equals_serial(self):
+        """One link: nothing to overlap with — the transports coincide."""
+        for p in (WorkerParams(), WorkerParams(f_mhz=150, d_s_per_kb=0.01)):
+            serial = simulate(self.m, [p])
+            piped = simulate(self.m, [p], cfg=self.cfg)
+            assert piped.total_time == serial.total_time
+            assert piped.overlap_saved_s == 0.0
+            assert piped.timeline is not None
+            assert piped.timeline.makespan_s == serial.total_time
+
+    def test_strictly_faster_on_heterogeneous_demo(self):
+        """Acceptance: pipelining strictly lowers the 8-MCU demo makespan."""
+        ws = _demo_workers()
+        for mode in ("neuron", "kernel", "spatial"):
+            plan = split_model(self.m, np.ones(8), mode=mode)
+            serial = simulate(self.m, ws, plan=plan)
+            piped = simulate(self.m, ws, cfg=self.cfg, plan=plan)
+            assert piped.total_time < serial.total_time
+            assert piped.overlap_saved_s == pytest.approx(
+                serial.total_time - piped.total_time, rel=1e-12)
+
+    def test_timeline_consistency(self):
+        ws = _demo_workers(4)
+        res = simulate(self.m, ws, cfg=self.cfg)
+        tl = res.timeline
+        assert tl.n_workers == 4
+        assert tl.makespan_s == pytest.approx(
+            max(e.end_s for e in tl.events), rel=1e-12)
+        per_kind: dict[tuple[int, str], list] = {}
+        for e in res.timeline.events:
+            assert e.kind in ("download", "compute", "upload")
+            assert 0.0 <= e.start_s <= e.end_s <= tl.makespan_s + 1e-12
+            assert (e.nbytes > 0) == (e.kind != "compute")
+            per_kind.setdefault((e.worker, e.kind), []).append(e)
+        # each link direction and the core are FIFO resources: same-kind
+        # events on one worker never overlap
+        for evs in per_kind.values():
+            evs.sort(key=lambda e: e.start_s)
+            for a, b in zip(evs, evs[1:]):
+                assert a.end_s <= b.start_s + 1e-12
+
+    def test_timeline_stats(self):
+        res = simulate(self.m, _demo_workers(4), cfg=self.cfg)
+        tl = res.timeline
+        assert tl.compute_busy_s.shape == (4,)
+        assert np.all(tl.idle_s >= 0)
+        assert np.all(tl.link_utilization >= 0)
+        assert np.all(tl.link_utilization <= 1.0 + 1e-12)
+        # comp/comm decomposition: busiest core + exposed (non-overlapped)
+        # communication adds up to the makespan
+        assert res.comp_time == pytest.approx(tl.compute_busy_s.max())
+        assert res.comm_time >= 0
+        assert res.comp_time + res.comm_time == pytest.approx(res.total_time)
+
+    def test_downloads_overlap_across_workers(self):
+        """The point of per-link queues: transfers to different workers run
+        concurrently instead of serializing through the coordinator."""
+        res = simulate(self.m, _demo_workers(4), cfg=self.cfg)
+        downloads = [e for e in res.timeline.events if e.kind == "download"
+                     and e.segment == 0]
+        assert len(downloads) > 1
+        starts = {e.start_s for e in downloads}
+        assert len(starts) == 1  # all first downloads start at t=0, in parallel
+
+    def test_compare_modes_carries_transport_stats(self):
+        reports = compare_modes(self.m, _demo_workers(), cfg=self.cfg)
+        for rep in reports.values():
+            assert rep.transport == "pipelined"
+            assert rep.overlap_saved_s > 0
+            assert 0 < rep.mean_link_utilization <= 1
+            assert rep.max_idle_s >= 0
+
+
+# ---------------------------------------------------------------------------
+# compare_modes: explicit infeasible entries
+# ---------------------------------------------------------------------------
+
+class TestCompareModesInfeasible:
+    def test_unbuildable_split_yields_infeasible_entry(self):
+        m = mobilenet_v2_smoke()
+        reports = compare_modes(m, _demo_workers(2), ratings=np.zeros(2))
+        assert set(reports) == {"neuron", "kernel", "spatial"}
+        for rep in reports.values():
+            assert not rep.feasible
+            assert "rating" in rep.reason
+            assert np.isnan(rep.total_time_s)
+
+    def test_surviving_modes_not_dropped_by_a_failing_one(self, monkeypatch):
+        import repro.core.simulator as sim
+        m = mobilenet_v2_smoke()
+        real = sim.split_model
+
+        def flaky(model, ratings, mode="neuron", **kw):
+            if mode == "spatial":
+                raise ValueError("synthetic spatial failure")
+            return real(model, ratings, mode=mode, **kw)
+
+        monkeypatch.setattr(sim, "split_model", flaky)
+        reports = sim.compare_modes(m, _demo_workers(2))
+        assert reports["neuron"].feasible and reports["kernel"].feasible
+        assert not reports["spatial"].feasible
+        assert "synthetic spatial failure" in reports["spatial"].reason
+
+
+# ---------------------------------------------------------------------------
+# planner: transport as the fourth search axis
+# ---------------------------------------------------------------------------
+
+class TestPlannerTransportAxis:
+    def test_objective_validates_transports(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            Objective(transports=("warp",))
+        with pytest.raises(ValueError, match="at least one transport"):
+            Objective(transports=())
+        o = Objective(transports=["pipelined"])
+        assert o.transports == ("pipelined",)
+
+    def test_objective_round_trip_and_legacy_default(self):
+        o = Objective(minimize="latency", transports=("pipelined", "serial"))
+        assert Objective.from_dict(o.to_dict()) == o
+        legacy = {k: v for k, v in o.to_dict().items() if k != "transports"}
+        assert Objective.from_dict(legacy).transports == ("serial",)
+
+    def test_planner_selects_pipelined_for_latency(self):
+        """Acceptance: minimizing latency over the 8-MCU demo picks the
+        async transport, and its candidate table shows both policies."""
+        plan = Planner(mobilenet_v2_smoke(), Cluster.heterogeneous_demo(8)) \
+            .plan(Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+        assert plan.transport == "pipelined"
+        assert plan.overlap_saved_s > 0
+        transports = {c.transport for c in plan.candidates if c.feasible}
+        assert transports == {"serial", "pipelined"}
+        # the pipelined twin of every feasible candidate is never slower
+        by_key = {(c.mode, c.fusion, c.worker_indices, c.transport): c
+                  for c in plan.candidates if c.feasible}
+        for (mode, fusion, idx, t), c in by_key.items():
+            if t == "serial":
+                twin = by_key[(mode, fusion, idx, "pipelined")]
+                assert twin.latency_s <= c.latency_s + 1e-12
+        assert "transport=pipelined" in plan.report()
+
+    def test_serial_only_objective_matches_legacy_search(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(3)
+        plan = Planner(model, cluster).plan(
+            Objective(minimize="latency", ram_cap_bytes=512 * 1024,
+                      transports=("serial",)))
+        assert plan.transport == "serial"
+        assert plan.overlap_saved_s == 0.0
+        assert all(c.transport in ("serial", "*") for c in plan.candidates)
+
+    def test_transport_tiebreak_prefers_serial(self):
+        """When transport cannot change the score (minimize=peak_ram), the
+        objective's order breaks the tie — serial first by default."""
+        plan = Planner(mobilenet_v2_smoke(), Cluster.heterogeneous_demo(2)) \
+            .plan(Objective(minimize="peak_ram"))
+        assert plan.transport == "serial"
+
+    def test_plan_json_round_trip_carries_transport(self):
+        model = mobilenet_v2_smoke()
+        plan = Planner(model, Cluster.heterogeneous_demo(3)).plan(
+            Objective(minimize="latency", ram_cap_bytes=512 * 1024))
+        loaded = Plan.from_json(plan.to_json(), model)
+        assert loaded.transport == plan.transport
+        assert loaded.overlap_saved_s == pytest.approx(plan.overlap_saved_s)
+        assert loaded.objective.transports == plan.objective.transports
+        cands = {(c.mode, c.transport) for c in loaded.candidates}
+        assert cands == {(c.mode, c.transport) for c in plan.candidates}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: savings are monotone non-negative on heterogeneous
+# clusters (the pipelined schedule only relaxes serialization constraints)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def het_clusters(draw):
+    n = draw(st.integers(2, 6))
+    workers = [WorkerParams(
+        f_mhz=draw(st.floats(50.0, 1000.0)),
+        d_s_per_kb=draw(st.floats(0.0, 0.05)),
+        b_kb_s=draw(st.floats(100.0, 200000.0))) for _ in range(n)]
+    ratings = np.array([draw(st.floats(0.01, 5.0)) for _ in range(n)])
+    mode = draw(st.sampled_from(["neuron", "kernel", "spatial"]))
+    overlap = draw(st.booleans())
+    return workers, ratings, mode, overlap
+
+
+@given(het_clusters())
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_overlap_savings_nonnegative(case):
+    workers, ratings, mode, overlap = case
+    m = small_cnn()
+    plan = split_model(m, ratings, mode=mode)
+    res = simulate(m, workers, ratings,
+                   SimConfig(transport="pipelined", overlap=overlap),
+                   plan=plan)
+    assert res.overlap_saved_s >= -1e-9
+    assert res.total_time > 0
+    assert res.total_time <= res.serial_total_time + 1e-9
