@@ -19,11 +19,17 @@ a >20% regression:
   serial total and pipelined makespan are both analytic: either growing
   >20% is a cost-model regression, and a pipelined makespan exceeding its
   serial total breaks the overlap invariant outright.
+* ``mixed`` (mode-mixing rows per {config}@{workers}) — the best uniform
+  candidate's score and the score of the plan chosen with the DP-mixed axis
+  enabled are analytic: either growing >20% is a regression, and a chosen
+  score exceeding the best uniform score breaks the mixing invariant
+  outright (enabling mixing may never yield a worse plan — the winner is
+  the min over a superset of the uniform candidates).
 
 ``--sections`` restricts which sections are compared — the pinned-min jax
-CI cell regenerates only the analytic sections (``peaks,planner,transport``)
-and gates those, catching cost-model drift the latest-jax bench job can
-mask.
+CI cell regenerates only the analytic sections
+(``peaks,planner,transport,mixed``) and gates those, catching cost-model
+drift the latest-jax bench job can mask.
 
 Rows/modes present in only one file are reported but don't fail the gate
 (benchmarks may gain coverage); missing files or empty overlap DO fail — a
@@ -48,7 +54,7 @@ def _row_key(row: dict) -> tuple:
             row["batch"])
 
 
-SECTIONS = ("rows", "peaks", "planner", "transport")
+SECTIONS = ("rows", "peaks", "planner", "transport", "mixed")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -141,6 +147,40 @@ def compare(baseline: dict, fresh: dict, threshold: float,
             failures.append(
                 f"transport invariant broken {key}: pipelined "
                 f"{f['pipelined_s']} s exceeds serial {f['serial_s']} s")
+    base_mx = baseline.get("mixed", {}) if "mixed" in sections else {}
+    fresh_mx = fresh.get("mixed", {}) if "mixed" in sections else {}
+    for key in sorted(base_mx.keys() & fresh_mx.keys()):
+        b, f = base_mx[key], fresh_mx[key]
+        if b.get("feasible") != f.get("feasible"):
+            compared += 1
+            failures.append(
+                f"mixed feasibility flip {key}: baseline "
+                f"feasible={b.get('feasible')} vs fresh "
+                f"feasible={f.get('feasible')}")
+            continue
+        for metric in ("best_uniform_s", "mixed_s", "max_peak_ram"):
+            if metric not in b or metric not in f:
+                continue
+            compared += 1
+            if f[metric] > b[metric] * (1.0 + threshold):
+                failures.append(
+                    f"mixed regression {key}/{metric}: {f[metric]} > "
+                    f"{1.0 + threshold:.0%} of baseline {b[metric]}")
+            else:
+                print(f"ok mixed {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]})")
+    for key in sorted(fresh_mx.keys()):
+        f = fresh_mx[key]
+        # machine-independent: enabling the mixed axis may never pick a
+        # plan scoring worse than the best uniform candidate of the same
+        # search (the winner is a min over a superset)
+        if ("best_uniform_s" in f and "mixed_s" in f
+                and f["mixed_s"] > f["best_uniform_s"] * (1.0 + 1e-9)):
+            compared += 1
+            failures.append(
+                f"mixed invariant broken {key}: chosen score "
+                f"{f['mixed_s']} exceeds best uniform "
+                f"{f['best_uniform_s']}")
     return failures, compared
 
 

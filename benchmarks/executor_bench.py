@@ -151,17 +151,19 @@ def write_results(rows: list[dict], peaks: dict) -> dict:
         rows=rows,
         peaks=peaks,
     )
-    # preserve the planner_bench sections (shared file, either order), and
-    # merge peaks per config so a --quick run doesn't erase the committed
-    # full-model entries
+    # preserve every section this bench does not own (planner_bench's
+    # planner/transport/mixed — and anything future, so a new shared
+    # section can never be silently erased by this write), and merge peaks
+    # per config so a --quick run doesn't erase the committed full-model
+    # entries
     if RESULT_PATH.exists():
         try:
             old = json.loads(RESULT_PATH.read_text())
         except json.JSONDecodeError:
             old = {}
-        for section in ("planner", "transport"):
-            if section in old:
-                payload[section] = old[section]
+        for section, value in old.items():
+            if section not in payload:
+                payload[section] = value
         merged_peaks = dict(old.get("peaks", {}))
         merged_peaks.update(payload["peaks"])
         payload["peaks"] = merged_peaks

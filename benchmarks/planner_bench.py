@@ -5,16 +5,22 @@ its predicted overlap savings) — the analytic ones are machine-independent
 and gated by ``check_regression.py`` against the committed baseline; the
 wall time is informational.
 
-Three sections merge into ``BENCH_executor.json`` via read-modify-write
+Four sections merge into ``BENCH_executor.json`` via read-modify-write
 (so this bench and ``executor_bench`` can run in either order — each
 preserves the other's sections):
 
 * ``planner`` — plan-search outcomes per {config}@{workers};
 * ``transport`` — the async-transport rows: serial (Eq. 5-6) total vs
   pipelined makespan per {config}@{workers}/{mode}, all analytic;
+* ``mixed`` — the mode-mixing rows per {config}@{workers}: the best
+  *uniform*-mode candidate vs the plan chosen when the DP-mixed axis is
+  enabled (``Objective(modes=SEARCH_MODES)``), from one shared search — the
+  chosen plan may never score worse than the best uniform candidate
+  (gated invariant);
 * ``peaks`` — the analytic per-worker peak-RAM maxima (same computation as
   ``executor_bench``), so the fully-analytic CI cell (pinned-min jax) can
-  regenerate and gate planner/peaks/transport without timing anything.
+  regenerate and gate planner/peaks/transport/mixed without timing
+  anything.
 
 Run:  PYTHONPATH=src python -m benchmarks.planner_bench [--quick]
 (--quick: smoke model only — the CI smoke run.)
@@ -39,6 +45,9 @@ RESULT_PATH = _REPO_ROOT / "BENCH_executor.json"
 WORKER_COUNTS = (1, 3, 8)
 RAM_CAP = 512 * 1024
 TRANSPORT_MODES = ("neuron", "spatial")
+# the mixed section covers the acceptance regime: 7/8-worker heterogeneous
+# demo clusters are where per-block mixing beats the best uniform plan
+MIXED_WORKER_COUNTS = (3, 7, 8)
 
 
 def _configs(quick: bool):
@@ -130,6 +139,62 @@ def transport_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
     return rows, data
 
 
+def mixed_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
+    """Deterministic mode-mixing rows: one latency search per config@k with
+    the DP-mixed axis enabled; the best *uniform* candidate and the chosen
+    plan both come from that single candidate table, so the comparison is
+    internally consistent.  The chosen score can never exceed the best
+    uniform score (the winner is the min over a superset) — gated as an
+    invariant by ``check_regression.py``'s ``mixed`` section."""
+    from repro.api import (Cluster, InfeasibleError, Objective, Planner,
+                           SEARCH_MODES)
+
+    rows: list[tuple] = []
+    data: dict[str, dict] = {}
+    for name, make_model in _configs(quick):
+        model = make_model()
+        for k in MIXED_WORKER_COUNTS:
+            cluster = Cluster.heterogeneous_demo(k)
+            planner = Planner(model, cluster)
+            objective = Objective(minimize="latency", ram_cap_bytes=RAM_CAP,
+                                  modes=SEARCH_MODES)
+            t0 = time.perf_counter()
+            try:
+                plan = planner.plan(objective)
+            except InfeasibleError as e:
+                wall = time.perf_counter() - t0
+                data[f"{name}@{k}"] = dict(feasible=False,
+                                           wall_s=round(wall, 4),
+                                           binding=e.binding_constraint)
+                rows.append((f"mixed_{name}_w{k}", wall,
+                             f"INFEASIBLE ({e.binding_constraint})"))
+                continue
+            wall = time.perf_counter() - t0
+            uniform = [c for c in plan.candidates
+                       if c.feasible and c.mode != "mixed"]
+            entry = dict(
+                feasible=True, wall_s=round(wall, 4),
+                mixed_s=round(plan.score, 9),
+                mode=plan.mode, transport=plan.transport,
+                max_peak_ram=int(plan.max_peak_ram),
+                n_workers=plan.n_workers)
+            # only a mixed assignment may fit where no uniform plan does
+            # (mixing strictly widens feasibility); the gate's metric and
+            # invariant checks both tolerate the missing key
+            tag = "no feasible uniform"
+            if uniform:
+                best_uniform_s = min(c.score for c in uniform)
+                entry["best_uniform_s"] = round(best_uniform_s, 9)
+                tag = f"best_uniform={best_uniform_s:.4f}s"
+            if plan.assignment is not None:
+                entry["assignment"] = list(plan.assignment)
+            data[f"{name}@{k}"] = entry
+            rows.append((f"mixed_{name}_w{k}", plan.latency_s,
+                         f"mode={plan.mode} {tag} "
+                         f"chosen={plan.score:.4f}s"))
+    return rows, data
+
+
 def analytic_peaks(quick: bool = False) -> dict:
     """The ``peaks`` section via the same :func:`executor_bench.peaks_for`
     the timed bench uses — here so the analytic-only CI cell can refresh it
@@ -138,7 +203,8 @@ def analytic_peaks(quick: bool = False) -> dict:
             for name, make_model in _configs(quick)}
 
 
-def merge_results(planner: dict, transport: dict, peaks: dict) -> dict:
+def merge_results(planner: dict, transport: dict, mixed: dict,
+                  peaks: dict) -> dict:
     """Read-modify-write the shared JSON: update only our sections, and
     merge each of them per key — a ``--quick`` run refreshes the smoke
     entries without erasing the committed full-model (mnv2_112) coverage
@@ -151,7 +217,7 @@ def merge_results(planner: dict, transport: dict, peaks: dict) -> dict:
             payload = {}
     payload.setdefault("benchmark", "executor_eager_vs_compiled")
     for section, fresh in (("planner", planner), ("transport", transport),
-                           ("peaks", peaks)):
+                           ("mixed", mixed), ("peaks", peaks)):
         merged = dict(payload.get(section, {}))
         merged.update(fresh)
         payload[section] = merged
@@ -162,9 +228,10 @@ def merge_results(planner: dict, transport: dict, peaks: dict) -> dict:
 def _collect(quick: bool) -> tuple[list[tuple], dict]:
     rows, planner = planner_metrics(quick=quick)
     t_rows, transport = transport_metrics(quick=quick)
+    m_rows, mixed = mixed_metrics(quick=quick)
     peaks = analytic_peaks(quick=quick)
-    payload = merge_results(planner, transport, peaks)
-    return rows + t_rows, payload
+    payload = merge_results(planner, transport, mixed, peaks)
+    return rows + t_rows + m_rows, payload
 
 
 def bench_planner(quick: bool = False) -> list[tuple]:
@@ -179,7 +246,8 @@ def main() -> None:
                     help="smoke model only (CI)")
     args = ap.parse_args()
     _, payload = _collect(args.quick)
-    print(json.dumps({k: payload[k] for k in ("planner", "transport")},
+    print(json.dumps({k: payload[k]
+                      for k in ("planner", "transport", "mixed")},
                      indent=2))
 
 

@@ -19,7 +19,7 @@ import time
 
 import numpy as np
 
-from repro.api import Cluster, Objective, Planner
+from repro.api import Cluster, Objective, Planner, SEARCH_MODES
 from repro.core import SplitExecutor, reference_forward, single_device_peak
 from repro.models import mobilenet_v2, mobilenet_v2_smoke
 
@@ -30,10 +30,12 @@ def main():
     ap.add_argument("--input-hw", type=int, default=56,
                     help="input resolution (56 keeps CPU latency low; the "
                          "paper uses 112)")
-    ap.add_argument("--mode", choices=("auto", "neuron", "kernel", "spatial"),
+    ap.add_argument("--mode",
+                    choices=("auto", "neuron", "kernel", "spatial", "mixed"),
                     default="auto",
                     help="partitioning mode: 'auto' lets the planner search "
-                         "all three axes; a named mode pins the search")
+                         "all axes including the DP per-block 'mixed' "
+                         "assignment; a named mode pins the search")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced smoke model + 4 requests (CI examples job)")
     args = ap.parse_args()
@@ -58,8 +60,7 @@ def main():
 
     print("\n== resource-aware planning (8 heterogeneous MCUs) ==")
     cluster = Cluster.heterogeneous_demo(8)
-    modes = ("neuron", "kernel", "spatial") if args.mode == "auto" \
-        else (args.mode,)
+    modes = SEARCH_MODES if args.mode == "auto" else (args.mode,)
     t0 = time.perf_counter()
     plan = Planner(model, cluster).plan(
         Objective(minimize="latency", ram_cap_bytes=512 * 1024, modes=modes))

@@ -15,11 +15,13 @@ package is that coordinator as a stable three-noun API::
 ``Cluster`` validates the measured worker set (presets, JSON round-trip);
 ``Planner`` searches mode × fusion × worker subsets × transport (the serial
 Eq. 5-6 coordinator vs the event-driven per-link async transport) with the
-analytic cost models and raises :class:`InfeasibleError` (naming the
-binding constraint) instead of returning a bad plan; ``Plan`` is scored,
-serializable and reportable; ``Session`` serves micro-batched requests
-through the compiled engine with per-bucket compilation caching and
-rolling stats.
+analytic cost models — include ``"mixed"`` in ``Objective.modes`` (or pass
+:data:`SEARCH_MODES`) to also search heterogeneous per-block mode
+assignments via dynamic programming — and raises :class:`InfeasibleError`
+(naming the binding constraint) instead of returning a bad plan; ``Plan``
+is scored, serializable and reportable; ``Session`` serves micro-batched
+requests through the compiled engine with per-bucket compilation caching
+and rolling stats.
 
 The free functions in :mod:`repro.core` (``split_model``, ``simulate``,
 ``ratings_for``, ...) remain the underlying engine and stay importable, but
@@ -27,7 +29,8 @@ new code should go through this facade.
 """
 from .cluster import Cluster, ClusterError
 from .plan import FUSIONS, Plan, build_split_plan
-from .planner import InfeasibleError, Objective, PlanCandidate, Planner
+from .planner import (SEARCH_MODES, InfeasibleError, Objective, PlanCandidate,
+                      Planner)
 from .session import Session, SessionStats, Ticket
 
 __all__ = [
@@ -39,6 +42,7 @@ __all__ = [
     "Plan",
     "PlanCandidate",
     "Planner",
+    "SEARCH_MODES",
     "Session",
     "SessionStats",
     "Ticket",

@@ -19,14 +19,15 @@ import numpy as np
 
 from ..core.memory import peak_ram_per_worker
 from ..core.reinterpret import ReinterpretedModel
-from ..core.splitting import SplitPlan, split_model
+from ..core.splitting import SplitPlan, split_model, split_model_mixed
 from .cluster import Cluster, json_source_text
 
 FUSIONS = ("block", "layer")
 
 
 def build_split_plan(model: ReinterpretedModel, ratings, mode: str,
-                     fusion: str = "block") -> SplitPlan:
+                     fusion: str = "block",
+                     assignment=None) -> SplitPlan:
     """Build the concrete :class:`SplitPlan` for one (mode, fusion) candidate.
 
     ``fusion`` selects the execution granularity of spatial plans:
@@ -36,9 +37,17 @@ def build_split_plan(model: ReinterpretedModel, ratings, mode: str,
     traffic, no interior-halo recompute).  Neuron/kernel plans have a single
     granularity; ``fusion`` is ignored for them.  Delegates to core
     :func:`split_model` — the splitting semantics live in one place.
+
+    ``mode="mixed"`` builds a heterogeneous plan from ``assignment`` (the
+    per-fused-block mode vector, required; always block-fused granularity) —
+    core :func:`split_model_mixed`.
     """
     if fusion not in FUSIONS:
         raise ValueError(f"unknown fusion {fusion!r} (want one of {FUSIONS})")
+    if mode == "mixed":
+        if assignment is None:
+            raise ValueError("mode='mixed' needs a per-block assignment")
+        return split_model_mixed(model, ratings, assignment)
     return split_model(model, ratings, mode=mode, fused=(fusion == "block"))
 
 
@@ -81,6 +90,9 @@ class Plan:
     # transport == "serial")
     transport: str = "serial"
     overlap_saved_s: float = 0.0
+    # mixed plans only: per-fused-block mode vector (group_blocks
+    # granularity) the DP search chose; None for uniform plans
+    assignment: tuple[str, ...] | None = None
     candidates: tuple = ()
 
     # -- derived views -------------------------------------------------------
@@ -102,6 +114,18 @@ class Plan:
         return int(np.max(self.weight_bytes))
 
     # -- reporting -----------------------------------------------------------
+    @staticmethod
+    def _rle(assignment) -> str:
+        """Run-length-encode a per-block mode vector for display:
+        ('spatial',)*5 + ('kernel',)*3 -> 'spatial*5 kernel*3'."""
+        runs: list[tuple[str, int]] = []
+        for m in assignment:
+            if runs and runs[-1][0] == m:
+                runs[-1] = (m, runs[-1][1] + 1)
+            else:
+                runs.append((m, 1))
+        return " ".join(m if k == 1 else f"{m}*{k}" for m, k in runs)
+
     def report(self) -> str:
         """Human-readable summary: the decision, its cost profile, and the
         scored candidate table the search considered."""
@@ -122,6 +146,8 @@ class Plan:
             f"  max per-worker weights:  {self.max_weight_bytes / 1024:.1f} KB",
             f"  ratings: {np.round(np.asarray(self.ratings), 2).tolist()}",
         ]
+        if self.assignment is not None:
+            lines.insert(1, "  per-block modes: " + self._rle(self.assignment))
         if self.candidates:
             lines.append("  search ({} candidates):".format(len(self.candidates)))
             for c in self.candidates:
@@ -143,12 +169,16 @@ class Plan:
     def _is_selected(self, cand) -> bool:
         return (cand.mode == self.mode and cand.fusion == self.fusion
                 and cand.transport == self.transport
-                and tuple(cand.worker_indices) == tuple(self.worker_indices))
+                and tuple(cand.worker_indices) == tuple(self.worker_indices)
+                and getattr(cand, "assignment", None) == self.assignment)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
+        # schema v2 adds "assignment" (per-fused-block mode vector of mixed
+        # plans; null for uniform).  v1 payloads predate mode mixing and
+        # load as uniform-mode plans (from_dict tolerates the missing key).
         return {
-            "version": 1,
+            "version": 2,
             "kind": "repro.api.Plan",
             "model": _model_fingerprint(self.model),
             "cluster": self.cluster.to_dict(),
@@ -156,6 +186,8 @@ class Plan:
             "mode": self.mode,
             "fusion": self.fusion,
             "transport": self.transport,
+            "assignment": (list(self.assignment)
+                           if self.assignment is not None else None),
             "worker_indices": list(self.worker_indices),
             "ratings": [float(r) for r in np.asarray(self.ratings)],
             "metrics": {
@@ -195,7 +227,14 @@ class Plan:
                 f"got {fp_model}")
         cluster = Cluster.from_dict(data["cluster"])
         ratings = np.asarray(data["ratings"], dtype=np.float64)
-        split = build_split_plan(model, ratings, data["mode"], data["fusion"])
+        # v1 payloads carry no "assignment": they predate mode mixing and
+        # rebuild as uniform-mode plans
+        assignment = data.get("assignment")
+        if data["mode"] == "mixed" and assignment is None:
+            raise ValueError("mixed plan payload lacks its per-block "
+                             "assignment")
+        split = build_split_plan(model, ratings, data["mode"], data["fusion"],
+                                 assignment=assignment)
         peak = peak_ram_per_worker(split)
         stored_peak = np.asarray(data["peak_ram"], dtype=np.int64)
         if not np.array_equal(peak, stored_peak):
@@ -216,6 +255,8 @@ class Plan:
             weight_bytes=np.asarray(data["weight_bytes"], dtype=np.int64),
             score=float(m["score"]),
             overlap_saved_s=float(m.get("overlap_saved_s", 0.0)),
+            assignment=(tuple(assignment) if assignment is not None
+                        else None),
             candidates=tuple(PlanCandidate.from_dict(c)
                              for c in data.get("candidates", ())))
 

@@ -8,11 +8,13 @@ beyond the paper — into a declarative search::
     plan = Planner(model, cluster).plan(
         Objective(minimize="latency", ram_cap_bytes=512 * 1024))
 
-The search space is mode ∈ {neuron, kernel, spatial} × fusion granularity
-(fused blocks vs per-layer bands, spatial only) × worker subsets (top-k by
-capability rating, k = 1..max_workers) × transport ∈ {serial, pipelined}
-(the Eq. 5-6 coordinator-serialized model vs the event-driven per-link
-async transport).  Every candidate is costed with the
+The search space is mode ∈ {neuron, kernel, spatial} (plus the opt-in
+"mixed" axis: a per-fused-block mode assignment found by dynamic
+programming over block boundaries, :mod:`repro.core.mixed`) × fusion
+granularity (fused blocks vs per-layer bands, spatial only) × worker
+subsets (top-k by capability rating, k = 1..max_workers) × transport ∈
+{serial, pipelined} (the Eq. 5-6 coordinator-serialized model vs the
+event-driven per-link async transport).  Every candidate is costed with the
 existing analytic models (:func:`repro.core.simulator.simulate` for
 latency/communication, :func:`repro.core.memory.peak_ram_per_worker` for the
 per-worker peak) and checked against the RAM/flash budgets; neuron/kernel
@@ -31,12 +33,19 @@ import numpy as np
 
 from ..core.allocation import ratings_for, redistribute_overflow
 from ..core.memory import peak_ram_per_worker
+from ..core.mixed import search_mixed_assignment
 from ..core.reinterpret import ReinterpretedModel
 from ..core.simulator import (TRANSPORTS, SimConfig, measured_kc, simulate,
                               simulated_k1)
 from ..core.splitting import MODES
 from .cluster import Cluster
 from .plan import Plan, build_split_plan
+
+# the planner's mode axis: the three uniform modes plus "mixed" — a
+# per-fused-block assignment searched by dynamic programming over block
+# boundaries (core.mixed).  Objective defaults to the uniform modes; opt in
+# with Objective(modes=SEARCH_MODES).
+SEARCH_MODES = MODES + ("mixed",)
 
 
 class InfeasibleError(RuntimeError):
@@ -62,9 +71,12 @@ class Objective:
     per-worker peak).  ``ram_cap_bytes``/``flash_cap_bytes`` tighten every
     worker's own budget (``None`` keeps the per-worker values from the
     cluster).  ``max_workers`` caps the subset size; ``modes`` restricts the
-    partitioning axes searched; ``transports`` restricts the transport
-    policies searched (the tuple order doubles as the tie-break preference,
-    so the default prefers serial when pipelining buys nothing).
+    partitioning axes searched — the three uniform modes by default; add
+    ``"mixed"`` (or pass :data:`SEARCH_MODES`) to also search per-block mode
+    assignments via the DP in :mod:`repro.core.mixed`; ``transports``
+    restricts the transport policies searched (the tuple order doubles as
+    the tie-break preference, so the default prefers serial when pipelining
+    buys nothing).
     """
 
     minimize: str = "latency"
@@ -84,8 +96,9 @@ class Objective:
         if not self.modes:
             raise ValueError("objective needs at least one mode")
         for m in self.modes:
-            if m not in MODES:
-                raise ValueError(f"unknown mode {m!r} (want one of {MODES})")
+            if m not in SEARCH_MODES:
+                raise ValueError(
+                    f"unknown mode {m!r} (want one of {SEARCH_MODES})")
         if not isinstance(self.transports, tuple):
             object.__setattr__(self, "transports", tuple(self.transports))
         if not self.transports:
@@ -150,12 +163,16 @@ class PlanCandidate:
     max_weight_bytes: int = 0
     overlap_saved_s: float = 0.0
     score: float = float("nan")
+    # mode == "mixed" only: the per-fused-block mode vector the DP chose
+    assignment: tuple[str, ...] | None = None
 
     _NAN_FIELDS = ("latency_s", "comp_s", "comm_s", "score")
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["worker_indices"] = list(self.worker_indices)
+        d["assignment"] = (list(self.assignment)
+                           if self.assignment is not None else None)
         # infeasible candidates carry NaN sentinels; map them to null so the
         # payload stays strict RFC-8259 JSON (json.dumps would emit `NaN`)
         for name in self._NAN_FIELDS:
@@ -167,6 +184,8 @@ class PlanCandidate:
     def from_dict(cls, data: dict) -> "PlanCandidate":
         data = dict(data)
         data["worker_indices"] = tuple(int(i) for i in data["worker_indices"])
+        if data.get("assignment") is not None:
+            data["assignment"] = tuple(data["assignment"])
         for name in cls._NAN_FIELDS:
             if data.get(name) is None:
                 data[name] = float("nan")
@@ -249,6 +268,7 @@ class Planner:
         candidate per transport searched — the split/peak/weights artifacts
         are built once and only the timing model re-runs per transport."""
         ratings = base_ratings
+        assignment = None
         if mode in ("neuron", "kernel"):
             # Eq. 7: shift rating mass away from storage-overflowed workers
             # (weights are split in these modes, so shares track ratings)
@@ -263,7 +283,17 @@ class Planner:
             if mode in ("neuron", "kernel"):
                 ratings = redistribute_overflow(base_ratings, flash_caps,
                                                 model_bytes)
-            split = build_split_plan(self.model, ratings, mode, fusion)
+            if mode == "mixed":
+                # DP over block boundaries (core.mixed): exact for the
+                # serial cost model, with the per-worker RAM caps pruning
+                # the per-block state space.  Like spatial, mixed plans may
+                # replicate weights, so Eq. 7 does not apply.
+                search = search_mixed_assignment(
+                    self.model, workers, ratings, self.sim_cfg,
+                    minimize=objective.minimize, ram_caps=ram_caps)
+                assignment = search.assignment
+            split = build_split_plan(self.model, ratings, mode, fusion,
+                                     assignment=assignment)
             peak = peak_ram_per_worker(split)
         except (ValueError, RuntimeError) as e:
             # a mode that cannot even build a split for these workers is an
@@ -287,22 +317,40 @@ class Planner:
                              f"{int(weights[w])} B > cap {int(flash_caps[w])} B")
             return [PlanCandidate(mode=mode, fusion=fusion, worker_indices=idx,
                                   feasible=False, reason="; ".join(terms),
-                                  transport="*",
+                                  transport="*", assignment=assignment,
                                   max_peak_ram=int(peak.max()),
                                   max_weight_bytes=int(weights.max()))]
+        # one simulate covers both transports: a pipelined SimResult carries
+        # the serial (Eq. 5-6) decomposition exactly (its layer_* arrays are
+        # the serial model — see SimResult), so the serial candidate's
+        # metrics are derived without a second full analytic pass
+        metrics: dict[str, tuple[float, float, float, float]] = {}
+        if "pipelined" in objective.transports:
+            cfg = dataclasses.replace(self.sim_cfg, transport="pipelined")
+            res = simulate(self.model, workers, ratings, cfg, plan=split)
+            metrics["pipelined"] = (res.total_time, res.comp_time,
+                                    res.comm_time, res.overlap_saved_s)
+            serial_total = res.serial_total_time
+            serial_comp = float(res.layer_comp.sum())
+            metrics["serial"] = (serial_total, serial_comp,
+                                 serial_total - serial_comp, 0.0)
+        else:
+            cfg = dataclasses.replace(self.sim_cfg, transport="serial")
+            res = simulate(self.model, workers, ratings, cfg, plan=split)
+            metrics["serial"] = (res.total_time, res.comp_time,
+                                 res.comm_time, 0.0)
         out = []
         for transport in objective.transports:
-            cfg = dataclasses.replace(self.sim_cfg, transport=transport)
-            res = simulate(self.model, workers, ratings, cfg, plan=split)
+            latency_s, comp_s, comm_s, saved_s = metrics[transport]
             cand = PlanCandidate(
                 mode=mode, fusion=fusion, worker_indices=idx, feasible=True,
-                transport=transport,
-                latency_s=res.total_time, comp_s=res.comp_time,
-                comm_s=res.comm_time, comm_bytes=res.total_bytes,
+                transport=transport, assignment=assignment,
+                latency_s=latency_s, comp_s=comp_s,
+                comm_s=comm_s, comm_bytes=res.total_bytes,
                 max_peak_ram=int(peak.max()),
                 max_weight_bytes=int(weights.max()),
-                overlap_saved_s=res.overlap_saved_s,
-                score=objective.score(res.total_time, res.total_bytes,
+                overlap_saved_s=saved_s,
+                score=objective.score(latency_s, res.total_bytes,
                                       int(peak.max())))
             out.append(_Scored(cand=cand, ratings=ratings, split=split,
                                peak=peak, weights=weights))
@@ -342,6 +390,7 @@ class Planner:
             comm_bytes=c.comm_bytes, peak_ram=best.peak,
             weight_bytes=best.weights, score=c.score,
             transport=c.transport, overlap_saved_s=c.overlap_saved_s,
+            assignment=c.assignment,
             candidates=tuple(r.cand if isinstance(r, _Scored) else r
                              for r in results))
 

@@ -18,7 +18,9 @@ from .fusion import (BatchNormParams, FusedBlock, apply_activation,
                      fold_batchnorm, group_blocks)
 from .mapping import (assignm_bruteforce, comm_volume, compile_shard_geometry,
                       routem_bruteforce, worker_input_regions)
-from .memory import layerwise_peak, peak_ram_per_worker, plan_memory, single_device_peak
+from .memory import (layerwise_peak, peak_ram_per_worker, plan_memory,
+                     single_device_peak, split_memory)
+from .mixed import MixedSearch, search_mixed_assignment
 from .quantize import (QuantizedModel, calibrate_scales, epilogue_params,
                        quantize_model, requantize)
 from .reinterpret import LayerSpec, ReinterpretedModel, layer_macs, trace_sequential
@@ -27,7 +29,8 @@ from .simulator import (TRANSPORTS, ModeReport, SimConfig, SimResult,
                         simulate, simulated_k1)
 from .splitting import (LayerSplit, ShardGeometry, SpatialBandGeometry,
                         SpatialShard, SplitPlan, WorkerShard, partition_bounds,
-                        spatial_band_geometry, split_layer, split_model)
+                        spatial_band_geometry, split_layer, split_model,
+                        split_model_mixed)
 
 # Explicit public API only — a computed dir()-based __all__ also exported
 # the imported submodule objects (allocation, executor, ...), polluting
@@ -66,6 +69,10 @@ __all__ = [
     "peak_ram_per_worker",
     "plan_memory",
     "single_device_peak",
+    "split_memory",
+    # per-block mode-mixing search (DP over block boundaries)
+    "MixedSearch",
+    "search_mixed_assignment",
     # quantization (§V.D)
     "QuantizedModel",
     "calibrate_scales",
@@ -99,4 +106,5 @@ __all__ = [
     "spatial_band_geometry",
     "split_layer",
     "split_model",
+    "split_model_mixed",
 ]

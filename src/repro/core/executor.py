@@ -295,11 +295,12 @@ class SplitExecutor:
         activations if requested — used for calibration)."""
         if mode not in ("float", "int8"):
             raise ValueError(f"unknown mode {mode!r} (want 'float' or 'int8')")
-        if collect_activations and self.plan.mode == "spatial":
+        if collect_activations and any(sp.mode == "spatial"
+                                       for sp in self.plan.splits):
             raise ValueError(
-                "collect_activations is unsupported in spatial mode (fused "
-                "interior activations never materialize); calibrate with "
-                "reference_forward or a neuron/kernel-mode plan")
+                "collect_activations is unsupported with spatial(-assigned) "
+                "blocks (fused interior activations never materialize); "
+                "calibrate with reference_forward or a flat-mode plan")
         model = self.plan.model
         stash: dict[str, jnp.ndarray] = {}
         acts = []

@@ -86,12 +86,32 @@ class InputRegion:
     def bounding_slices(self) -> tuple[slice, slice, slice]:
         """Channel/row/col bounding box (used by the executor to slice the
         activation tensor it is routed — a contiguous buffer, as an MCU would
-        receive)."""
+        receive).
+
+        **Over-approximation contract:** the bbox is the smallest *contiguous*
+        window covering the region, not the region itself.  For layers with
+        ``stride > kernel`` the receptive rows/cols of a shard have gaps, and
+        the bbox silently includes the gap rows — its volume can exceed
+        :attr:`n_points`.  Byte accounting (``comm_volume``, ``plan_memory``)
+        must therefore always use :attr:`n_points` (exact) and never the bbox
+        volume; the bbox is only a slicing convenience for code paths that
+        tolerate routing a superset (see ``bbox_points`` and the
+        gap-regression tests in ``tests/test_mixed.py``)."""
         rows = sorted(self.row_intervals)
         lo = min(iv[0] for ivs in self.row_intervals.values() for iv in ivs)
         hi = max(iv[1] for ivs in self.row_intervals.values() for iv in ivs)
         return (slice(self.c_lo, self.c_hi),
                 slice(rows[0], rows[-1] + 1), slice(lo, hi))
+
+    @property
+    def bbox_points(self) -> int:
+        """Volume of :meth:`bounding_slices` — ``>= n_points``, with strict
+        inequality whenever the region has row/col gaps (stride > kernel).
+        Kept distinct from ``n_points`` so no caller can conflate the routed
+        superset with the exact byte count."""
+        cs, rs, ws = self.bounding_slices()
+        return ((cs.stop - cs.start) * (rs.stop - rs.start)
+                * (ws.stop - ws.start))
 
     def point_set(self) -> set[tuple[int, int, int]]:
         pts = set()
@@ -245,7 +265,13 @@ def compile_shard_geometry(layer: LayerSpec,
 
 @dataclasses.dataclass(frozen=True)
 class CommVolume:
-    """Bytes moved between layers (through the coordinator, §VI.B)."""
+    """Bytes moved between layers (through the coordinator, §VI.B).
+
+    ``upload_bytes`` is indexed by *producer* worker id (length = the
+    previous split's worker count); ``download_bytes`` by *consumer* worker
+    id (length = this split's worker count).  The two arrays may differ in
+    length when adjacent splits cover different worker sets — mixed plans
+    with per-block subsets are the common case."""
 
     upload_bytes: np.ndarray       # per producer worker: outputs sent up
     download_bytes: np.ndarray     # per consumer worker: inputs sent down
@@ -270,13 +296,21 @@ def comm_volume(prev_split: LayerSplit | None, layer: LayerSpec,
     not ``block_first`` downloads nothing (its input band is produced
     locally by the previous fused stage) and a producer that is not
     ``block_last`` uploads nothing (its output never leaves the worker).
+
+    ``upload_bytes`` is sized by the *producer* split's worker count and
+    ``download_bytes`` by the *consumer* split's — adjacent splits may cover
+    worker sets of different sizes (per-block subsets in mixed plans), and
+    sizing the upload array by the consumer would index producer worker ids
+    out of (or silently into the wrong slot of) a consumer-sized array.
     """
-    n_workers = len(split.shards)
-    up = np.zeros(n_workers, dtype=np.int64)
+    # no producer for the first layer: keep consumer width so the all-zero
+    # upload row still broadcasts into per-worker accumulators
+    up = np.zeros(len(prev_split.shards) if prev_split is not None
+                  else len(split.shards), dtype=np.int64)
     if prev_split is not None and prev_split.block_last:
         for shard in prev_split.shards:
             up[shard.worker] += shard.n_positions * itemsize
-    down = np.zeros(n_workers, dtype=np.int64)
+    down = np.zeros(len(split.shards), dtype=np.int64)
     if split.block_first:
         regions = worker_input_regions(layer, split)
         for wkr, regs in enumerate(regions):

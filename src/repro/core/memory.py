@@ -22,7 +22,7 @@ import dataclasses
 import numpy as np
 
 from .mapping import worker_input_regions
-from .splitting import SplitPlan
+from .splitting import LayerSplit, SplitPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,34 +37,46 @@ class LayerMemory:
         return self.per_worker_in + self.per_worker_weight + self.per_worker_out
 
 
+def split_memory(split: LayerSplit, itemsize: int = 1,
+                 weight_itemsize: int | None = None) -> LayerMemory:
+    """The three per-worker memory terms of one layer's split — the single
+    source of the (in + weight + out) accounting, shared by
+    :func:`plan_memory` and the mode-mixing DP (``core.mixed``)."""
+    weight_itemsize = itemsize if weight_itemsize is None else weight_itemsize
+    n = len(split.shards)
+    regions = worker_input_regions(split.layer, split)
+    m_in = np.array([sum(r.n_points for r in regs) * itemsize
+                     for regs in regions], dtype=np.int64)
+    m_w = np.array([split.shard_of(w).weight_bytes * weight_itemsize
+                    for w in range(n)], dtype=np.int64)
+    m_out = np.array([split.shard_of(w).n_positions * itemsize
+                      for w in range(n)], dtype=np.int64)
+    return LayerMemory(split.layer.name, m_in, m_w, m_out)
+
+
 def plan_memory(plan: SplitPlan, itemsize: int = 1,
                 weight_itemsize: int | None = None) -> list[LayerMemory]:
     """Per-layer, per-worker memory terms (itemsize=1 → int8 activations)."""
-    weight_itemsize = itemsize if weight_itemsize is None else weight_itemsize
-    out = []
-    n = plan.n_workers
-    for split in plan.splits:
-        layer = split.layer
-        regions = worker_input_regions(layer, split)
-        m_in = np.array([sum(r.n_points for r in regs) * itemsize
-                         for regs in regions], dtype=np.int64)
-        m_w = np.array([split.shard_of(w).weight_bytes * weight_itemsize
-                        for w in range(n)], dtype=np.int64)
-        m_out = np.array([split.shard_of(w).n_positions * itemsize
-                          for w in range(n)], dtype=np.int64)
-        out.append(LayerMemory(layer.name, m_in, m_w, m_out))
-    return out
+    return [split_memory(split, itemsize, weight_itemsize)
+            for split in plan.splits]
 
 
-def peak_ram_per_worker(plan: SplitPlan, itemsize: int = 1) -> np.ndarray:
-    """max over layers of (in + weight + out) per worker — Fig. 12's metric."""
-    mems = plan_memory(plan, itemsize)
+def peak_ram_per_worker(plan: SplitPlan, itemsize: int = 1,
+                        weight_itemsize: int | None = None) -> np.ndarray:
+    """max over layers of (in + weight + out) per worker — Fig. 12's metric.
+
+    ``weight_itemsize`` defaults to ``itemsize`` (the ``plan_memory``
+    contract), so a float-weights/int8-activations peak query is
+    ``peak_ram_per_worker(plan, itemsize=1, weight_itemsize=4)``."""
+    mems = plan_memory(plan, itemsize, weight_itemsize)
     return np.max(np.stack([m.per_worker_peak for m in mems]), axis=0)
 
 
-def layerwise_peak(plan: SplitPlan, itemsize: int = 1) -> np.ndarray:
-    """(n_layers, n_workers) peak bytes — Fig. 8's metric."""
-    mems = plan_memory(plan, itemsize)
+def layerwise_peak(plan: SplitPlan, itemsize: int = 1,
+                   weight_itemsize: int | None = None) -> np.ndarray:
+    """(n_layers, n_workers) peak bytes — Fig. 8's metric.  ``weight_itemsize``
+    as in :func:`peak_ram_per_worker`."""
+    mems = plan_memory(plan, itemsize, weight_itemsize)
     return np.stack([m.per_worker_peak for m in mems])
 
 

@@ -1,0 +1,294 @@
+"""Per-block mode-mixing search: dynamic programming over fused-block
+boundaries.
+
+The compare-modes data (``simulator.compare_modes``) shows spatial
+partitioning winning the early high-resolution stages while the channel
+modes (kernel/neuron) win the late channel-heavy stages — the regime split
+MCUNetV2 exploits by running only the initial stage patch-based.  A
+heterogeneous :class:`~repro.core.splitting.SplitPlan`
+(:func:`~repro.core.splitting.split_model_mixed`) lets every fused block
+pick its own mode; this module picks the assignment.
+
+The search is exact for the serial (Eq. 5-6) cost model because that model
+decomposes over block boundaries: a layer's download time depends only on
+its own block's mode, its compute on its own block's mode, and the upload
+it overlaps with only on the *previous* block's mode.  So the optimal
+assignment is a shortest path over states ``(block, mode)`` with transition
+cost
+
+    boundary(b, m' -> m) = t_down(first layer of b under m)
+                           + combine(max_comp(first layer under m),
+                                     t_up(last layer of b-1 under m'))
+    intra(b, m)          = Σ interior-layer serial totals under m
+
+(``combine`` = max under §V.D eager-upload overlap, sum without), exactly
+the per-layer arithmetic of :func:`simulator.simulate` — the DP's predicted
+latency equals ``simulate(plan=mixed_plan).serial_total_time`` bit-for-bit
+(property-tested).  ``comm_bytes`` and ``peak_ram`` objectives use the same
+skeleton with sum/max accumulation; both are separable per block, so the DP
+degenerates to a per-block argmin there.
+
+Per-worker RAM caps prune the state space: a ``(block, mode)`` whose
+analytic per-worker peak exceeds any cap is never entered, so the returned
+assignment is peak-feasible by construction (flash feasibility — a *sum*
+across blocks per worker — is checked by the caller on the assembled plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .allocation import WorkerParams
+from .fusion import group_blocks
+from .mapping import comm_volume
+from .memory import split_memory
+from .reinterpret import ReinterpretedModel, macs_for_positions
+from .simulator import SimConfig, _comp_seconds
+from .splitting import (MODES, LayerSplit, split_block_spatial, split_layer)
+
+MINIMIZE_TARGETS = ("latency", "comm_bytes", "peak_ram")
+
+
+@dataclasses.dataclass(frozen=True)
+class _BlockCost:
+    """Analytic cost pieces of one (fused block, mode) state.
+
+    ``peak_per_worker`` is counted at itemsize=1 (int8) regardless of
+    ``cfg.itemsize`` — the planner's RAM-cap gate
+    (:func:`memory.peak_ram_per_worker` with defaults) holds that
+    convention, and the DP's pruning must agree with the gate the
+    assembled plan will face."""
+
+    mode: str                       # requested mode
+    down0_s: float                  # serialized download time, first layer
+    down0_bytes: int
+    comp0_max_s: float              # compute critical path, first layer
+    intra_s: float                  # Σ serial totals of interior layers
+    intra_bytes: int
+    up_out_s: float                 # serialized upload time of the block's
+    up_out_bytes: int               # final outputs (paid at the next block)
+    peak_per_worker: np.ndarray     # per-worker analytic peak bytes
+    weight_per_worker: np.ndarray   # per-worker weight-fragment bytes
+
+    @property
+    def peak_max(self) -> int:
+        return int(self.peak_per_worker.max())
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedSearch:
+    """Result of :func:`search_mixed_assignment`: the chosen per-block mode
+    vector plus the serial-model metrics predicted for it (the latency is
+    the Eq. 5-6 serial total; pipelined makespans are obtained by simulating
+    the assembled plan; the peak follows the planner's int8 gate convention
+    — itemsize=1, see :class:`_BlockCost`)."""
+
+    assignment: tuple[str, ...]
+    predicted_score: float
+    predicted_latency_s: float
+    predicted_comm_bytes: int
+    predicted_peak_ram: int
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.assignment)
+
+
+def _block_splits(model: ReinterpretedModel, indices: tuple[int, ...],
+                  ratings: np.ndarray, mode: str) -> list[LayerSplit]:
+    """The block's splits under one requested mode — byte-identical to what
+    :func:`splitting.split_model_mixed` assembles for this block, so the DP
+    costs exactly the plan the caller will build."""
+    layers = [model.layers[i] for i in indices]
+    if mode == "spatial" and all(lyr.kind in ("conv", "dwconv")
+                                 for lyr in layers):
+        return split_block_spatial(layers, ratings)
+    eff = mode if mode != "spatial" else "neuron"
+    return [split_layer(lyr, ratings, eff) for lyr in layers]
+
+
+def _block_cost(model: ReinterpretedModel, indices: tuple[int, ...],
+                ratings: np.ndarray, mode: str, f_mhz: np.ndarray,
+                link_s_per_kb: np.ndarray, cfg: SimConfig) -> _BlockCost:
+    splits = _block_splits(model, indices, ratings, mode)
+    n = len(ratings)
+    comp = []
+    for sp in splits:
+        macs = np.array([macs_for_positions(sp.layer,
+                                            sp.shard_of(w).n_positions)
+                         for w in range(n)], dtype=np.float64)
+        comp.append(_comp_seconds(macs, f_mhz, cfg))
+    vol0 = comm_volume(None, splits[0].layer, splits[0],
+                       itemsize=cfg.itemsize)
+    down0_s = float((link_s_per_kb * vol0.download_bytes / 1024.0).sum())
+    intra_s, intra_bytes = 0.0, 0
+    for j in range(1, len(splits)):
+        vol = comm_volume(splits[j - 1], splits[j].layer, splits[j],
+                          itemsize=cfg.itemsize)
+        t_down = float((link_s_per_kb * vol.download_bytes / 1024.0).sum())
+        t_up = float((link_s_per_kb * vol.upload_bytes / 1024.0).sum())
+        max_comp = float(comp[j].max())
+        if cfg.overlap:
+            intra_s += t_down + max(max_comp, t_up)
+        else:
+            intra_s += t_down + max_comp + t_up
+        intra_bytes += vol.total_bytes
+    last = splits[-1]
+    up_out = np.zeros(n, dtype=np.int64)
+    if last.block_last:
+        for shard in last.shards:
+            up_out[shard.worker] += shard.n_positions * cfg.itemsize
+    # itemsize=1: match the planner's RAM gate (see _BlockCost docstring)
+    peak = np.max(np.stack([split_memory(sp).per_worker_peak
+                            for sp in splits]), axis=0)
+    weights = np.array([sum(sp.shard_of(w).weight_bytes for sp in splits)
+                        for w in range(n)], dtype=np.int64)
+    return _BlockCost(
+        mode=mode, down0_s=down0_s,
+        down0_bytes=int(vol0.download_bytes.sum()),
+        comp0_max_s=float(comp[0].max()), intra_s=intra_s,
+        intra_bytes=intra_bytes,
+        up_out_s=float((link_s_per_kb * up_out / 1024.0).sum()),
+        up_out_bytes=int(up_out.sum()),
+        peak_per_worker=peak, weight_per_worker=weights)
+
+
+def _combine_first(c: _BlockCost, up_s: float, overlap: bool) -> float:
+    """Serial total of a block's first layer given the upstream upload it
+    overlaps with — simulate's per-layer arithmetic."""
+    if overlap:
+        return c.down0_s + max(c.comp0_max_s, up_s)
+    return c.down0_s + c.comp0_max_s + up_s
+
+
+def _assignment_metrics(table: list[dict[str, _BlockCost]],
+                        assignment: tuple[str, ...],
+                        overlap: bool) -> tuple[float, int, int]:
+    """(serial latency, comm bytes, max peak) of one assignment — summed
+    from the DP tables with the same boundary arithmetic as the DP itself."""
+    latency, nbytes, peak = 0.0, 0, 0
+    prev: _BlockCost | None = None
+    for b, m in enumerate(assignment):
+        c = table[b][m]
+        up_s = prev.up_out_s if prev is not None else 0.0
+        up_bytes = prev.up_out_bytes if prev is not None else 0
+        latency += _combine_first(c, up_s, overlap) + c.intra_s
+        nbytes += up_bytes + c.down0_bytes + c.intra_bytes
+        peak = max(peak, c.peak_max)
+        prev = c
+    return latency, nbytes, peak
+
+
+def search_mixed_assignment(model: ReinterpretedModel,
+                            workers: list[WorkerParams],
+                            ratings: np.ndarray | None = None,
+                            cfg: SimConfig | None = None,
+                            minimize: str = "latency",
+                            modes: tuple[str, ...] = MODES,
+                            ram_caps: np.ndarray | None = None,
+                            ) -> MixedSearch:
+    """Pick the per-fused-block mode assignment minimizing ``minimize``.
+
+    ``ratings`` default to uniform; ``ram_caps`` (per-worker bytes) prunes
+    block-mode states whose analytic peak exceeds any worker's cap.  Raises
+    ``ValueError`` when some block has no cap-feasible mode, or when
+    ``minimize``/``modes`` are invalid.  The same ratings vector is used for
+    every block (per-block worker subsets are expressible in
+    ``split_model_mixed`` but not searched here — the subset ladder is the
+    planner's axis).
+    """
+    if minimize not in MINIMIZE_TARGETS:
+        raise ValueError(f"unknown minimize {minimize!r} "
+                         f"(want one of {MINIMIZE_TARGETS})")
+    modes = tuple(modes)
+    for m in modes:
+        if m not in MODES:
+            raise ValueError(f"unknown mode {m!r} (want one of {MODES})")
+    if not modes:
+        raise ValueError("need at least one mode to assign")
+    cfg = cfg or SimConfig()
+    n = len(workers)
+    ratings = (np.ones(n) if ratings is None
+               else np.asarray(ratings, dtype=np.float64))
+    if len(ratings) != n:
+        raise ValueError(f"{len(ratings)} ratings for {n} workers")
+    f_mhz = np.array([p.f_mhz for p in workers])
+    link_s_per_kb = np.array([p.d_s_per_kb + 1.0 / p.b_kb_s for p in workers])
+    grouping = group_blocks(model)
+
+    table: list[dict[str, _BlockCost]] = []
+    for block in grouping:
+        row: dict[str, _BlockCost] = {}
+        conv_only = all(model.layers[i].kind in ("conv", "dwconv")
+                        for i in block.indices)
+        for m in modes:
+            if m == "spatial" and not conv_only and "neuron" in modes:
+                # the spatial state falls back to the flat neuron split on
+                # non-conv blocks (_block_splits) — an exact duplicate of
+                # the neuron state; skip it rather than cost it twice
+                continue
+            c = _block_cost(model, tuple(block.indices), ratings, m,
+                            f_mhz, link_s_per_kb, cfg)
+            if ram_caps is not None and (c.peak_per_worker
+                                         > np.asarray(ram_caps)).any():
+                continue
+            row[m] = c
+        if not row:
+            raise ValueError(
+                f"no cap-feasible mode for fused block {tuple(block.indices)}"
+                f" (every candidate peak exceeds a worker's RAM cap)")
+        table.append(row)
+
+    mode_rank = {m: i for i, m in enumerate(modes)}
+
+    def block_score(c: _BlockCost, up_s: float) -> float:
+        if minimize == "latency":
+            return _combine_first(c, up_s, cfg.overlap) + c.intra_s
+        if minimize == "comm_bytes":
+            return float(c.down0_bytes + c.intra_bytes)
+        return float(c.peak_max)
+
+    def accumulate(prev_score: float, c: _BlockCost, prev: _BlockCost | None
+                   ) -> float:
+        if minimize == "peak_ram":
+            return max(prev_score, block_score(c, 0.0))
+        up_s = prev.up_out_s if prev is not None else 0.0
+        extra = (prev.up_out_bytes if prev is not None else 0) \
+            if minimize == "comm_bytes" else 0.0
+        return prev_score + block_score(c, up_s) + float(extra)
+
+    # DP over (block, mode); back-pointers give the argmin assignment.
+    # Ties break toward the earlier mode in ``modes`` (both for the current
+    # and the predecessor state), keeping the result deterministic and
+    # preferring uniform plans when mixing buys nothing.
+    best: dict[str, float] = {}
+    back: list[dict[str, str | None]] = []
+    for m, c in table[0].items():
+        best[m] = accumulate(0.0 if minimize != "peak_ram" else -np.inf,
+                             c, None)
+    back.append({m: None for m in table[0]})
+    for b in range(1, len(table)):
+        nxt: dict[str, float] = {}
+        ptr: dict[str, str | None] = {}
+        for m, c in table[b].items():
+            cand = [(accumulate(best[mp], c, table[b - 1][mp]),
+                     mode_rank[mp], mp) for mp in best]
+            score, _, mp = min(cand)
+            nxt[m], ptr[m] = score, mp
+        best = nxt
+        back.append(ptr)
+
+    final_score, _, m_last = min((best[m], mode_rank[m], m) for m in best)
+    rev = [m_last]
+    for b in range(len(table) - 1, 0, -1):
+        rev.append(back[b][rev[-1]])
+    assignment = tuple(reversed(rev))
+
+    latency, nbytes, peak = _assignment_metrics(table, assignment,
+                                                cfg.overlap)
+    score = {"latency": latency, "comm_bytes": float(nbytes),
+             "peak_ram": float(peak)}[minimize]
+    return MixedSearch(assignment=assignment, predicted_score=score,
+                       predicted_latency_s=latency,
+                       predicted_comm_bytes=nbytes, predicted_peak_ram=peak)

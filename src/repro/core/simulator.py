@@ -197,7 +197,10 @@ def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
              plan: SplitPlan | None = None) -> SimResult:
     """Run one end-to-end inference through the timing model.
 
-    ``ratings`` defaults to uniform; ``plan`` may be passed to reuse a split.
+    ``ratings`` defaults to uniform; ``plan`` may be passed to reuse a split
+    — including heterogeneous ``split_model_mixed`` plans, whose segments
+    are timed under both transports (spatial→spatial seams keep the exact
+    row-overlap dependencies, mixed seams barrier per boundary).
     ``cfg.transport`` picks the communication model: ``"serial"`` (Eq. 5-6,
     the default) or ``"pipelined"`` (per-link FIFO queues with overlapped
     download/compute/upload; the result carries a :class:`Timeline`).
@@ -328,7 +331,10 @@ def _boundary_deps(prev_split, split, up_bytes: np.ndarray) -> list[list[int]]:
     implies.
     """
     n = len(split.shards)
-    uploading = [p for p in range(n) if up_bytes[p] > 0]
+    # producers are enumerated over the *producer* split's width (up_bytes
+    # is producer-indexed — see CommVolume), consumers over this split's
+    uploading = [p for p in range(len(prev_split.shards))
+                 if p < len(up_bytes) and up_bytes[p] > 0]
     spatial = (all(isinstance(s, SpatialShard) for s in split.shards)
                and all(isinstance(s, SpatialShard) for s in prev_split.shards))
     if not spatial:

@@ -27,6 +27,13 @@ Three partitioning modes:
   activation working set — the winning trade in early high-resolution /
   low-channel stages where routed input regions dominate per-worker peak RAM.
   Linear/avgpool layers fall back to their flat splits.
+
+Beyond the three uniform modes, :func:`split_model_mixed` builds a
+*heterogeneous* plan: a different mode (and optionally a different worker
+subset) per fused block, so the early high-resolution stages can run spatial
+while the late channel-heavy stages run kernel/neuron — the regime split
+MCUNetV2 exploits.  The per-block assignment is searched by
+:func:`repro.core.mixed.search_mixed_assignment`.
 """
 from __future__ import annotations
 
@@ -353,8 +360,15 @@ class SplitPlan:
     """Full-model split: per-layer shards + per-worker totals.
 
     ``blocks`` holds the fused execution groups (tuples of layer indices) the
-    executors iterate over — singletons except in spatial mode, where whole
-    inverted-residual blocks run fused per band.
+    executors iterate over — singletons except for spatial(-assigned) fused
+    blocks, which run fused per band.
+
+    ``mode`` is one of the uniform modes, or ``"mixed"`` for a heterogeneous
+    plan built by :func:`split_model_mixed`.  Mixed plans additionally carry
+    ``assignment`` — the per-fused-block mode vector over
+    ``fusion.group_blocks(model)``, the canonical serialized form — and
+    ``block_modes``, the effective mode of each entry of ``blocks`` (spatial
+    assignments over non-conv blocks fall back to ``"neuron"`` there).
     """
 
     model: ReinterpretedModel
@@ -362,6 +376,10 @@ class SplitPlan:
     ratings: np.ndarray
     mode: str = "neuron"
     blocks: tuple[tuple[int, ...], ...] | None = None
+    # mixed plans only: per-group_blocks-block requested mode, and the
+    # effective mode of each executor group in ``blocks``
+    assignment: tuple[str, ...] | None = None
+    block_modes: tuple[str, ...] | None = None
 
     @property
     def n_workers(self) -> int:
@@ -372,6 +390,18 @@ class SplitPlan:
         if self.blocks is not None:
             return self.blocks
         return tuple((i,) for i in range(len(self.splits)))
+
+    @property
+    def group_modes(self) -> tuple[str, ...]:
+        """Effective mode of every entry of :attr:`block_groups` (uniform
+        plans report their single mode everywhere)."""
+        if self.block_modes is not None:
+            return self.block_modes
+        return tuple(self.splits[g[0]].mode for g in self.block_groups)
+
+    @property
+    def is_mixed(self) -> bool:
+        return self.mode == "mixed"
 
     def worker_weight_bytes(self, worker: int) -> int:
         return sum(sp.shard_of(worker).weight_bytes for sp in self.splits)
@@ -422,3 +452,91 @@ def split_model(model: ReinterpretedModel, ratings,
     splits = [splits_by_idx[i] for i in range(len(model.layers))]
     return SplitPlan(model=model, splits=splits, ratings=ratings,
                      mode="spatial", blocks=tuple(blocks))
+
+
+def _masked_ratings(ratings: np.ndarray,
+                    workers: tuple[int, ...] | None) -> np.ndarray:
+    """Zero out every rating outside ``workers`` (None keeps all).  The
+    excluded workers receive empty shards everywhere in the block — the
+    per-block worker-subset mechanism of mixed plans."""
+    if workers is None:
+        return ratings
+    mask = np.zeros_like(ratings)
+    for w in workers:
+        if not 0 <= int(w) < len(ratings):
+            raise ValueError(f"worker index {w} outside cluster of "
+                             f"{len(ratings)} workers")
+        mask[int(w)] = ratings[int(w)]
+    if mask.sum() <= 0:
+        raise ValueError("block worker subset has no positive rating")
+    return mask
+
+
+def split_model_mixed(model: ReinterpretedModel, ratings,
+                      assignment,
+                      block_workers=None) -> SplitPlan:
+    """Heterogeneous split: a different partitioning mode per fused block.
+
+    ``assignment`` is a sequence of modes (one of :data:`MODES`), one per
+    fused block of ``fusion.group_blocks(model)``.  A block assigned
+    ``"spatial"`` runs fused per output-row band (as in
+    ``split_model(mode="spatial")``); blocks assigned a flat mode execute
+    layer-by-layer like the uniform flat plans.  A ``"spatial"`` assignment
+    over a block containing non-conv layers falls back to the flat neuron
+    split, exactly like the uniform spatial constructor — the *effective*
+    per-group modes are recorded in ``SplitPlan.block_modes``.
+
+    ``block_workers`` (optional) gives each block its own worker subset: a
+    sequence aligned with ``assignment`` whose entries are iterables of
+    worker indices (or ``None`` for all workers).  Excluded workers receive
+    empty shards for the block's layers; every split still spans the full
+    cluster width, so cross-boundary accounting (``mapping.comm_volume``,
+    ``memory.plan_memory``) indexes consistently even when adjacent blocks
+    use different subsets.
+
+    The resulting plan has ``mode="mixed"`` and both executors run it
+    directly — each block group dispatches on its own split mode, and int8
+    execution stays bit-exact across every mode seam (tested in
+    ``tests/test_mixed.py``).
+    """
+    ratings = np.asarray(ratings, dtype=np.float64)
+    grouping = group_blocks(model)
+    assignment = tuple(assignment)
+    if len(assignment) != len(grouping):
+        raise ValueError(
+            f"assignment length {len(assignment)} != {len(grouping)} fused "
+            f"blocks (group_blocks granularity)")
+    for m in assignment:
+        if m not in MODES:
+            raise ValueError(f"unknown mode {m!r} (want one of {MODES})")
+    if block_workers is None:
+        block_workers = [None] * len(grouping)
+    block_workers = list(block_workers)
+    if len(block_workers) != len(grouping):
+        raise ValueError(
+            f"block_workers length {len(block_workers)} != "
+            f"{len(grouping)} fused blocks")
+    splits_by_idx: dict[int, LayerSplit] = {}
+    blocks: list[tuple[int, ...]] = []
+    block_modes: list[str] = []
+    for block, mode, subset in zip(grouping, assignment, block_workers):
+        sub = None if subset is None else tuple(int(w) for w in subset)
+        r_b = _masked_ratings(ratings, sub)
+        layers = [model.layers[i] for i in block.indices]
+        if (mode == "spatial"
+                and all(lyr.kind in ("conv", "dwconv") for lyr in layers)):
+            for idx, sp in zip(block.indices,
+                               split_block_spatial(layers, r_b)):
+                splits_by_idx[idx] = sp
+            blocks.append(tuple(block.indices))
+            block_modes.append("spatial")
+        else:
+            eff = mode if mode != "spatial" else "neuron"
+            for idx in block.indices:
+                splits_by_idx[idx] = split_layer(model.layers[idx], r_b, eff)
+                blocks.append((idx,))
+                block_modes.append(eff)
+    splits = [splits_by_idx[i] for i in range(len(model.layers))]
+    return SplitPlan(model=model, splits=splits, ratings=ratings,
+                     mode="mixed", blocks=tuple(blocks),
+                     assignment=assignment, block_modes=tuple(block_modes))

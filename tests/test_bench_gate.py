@@ -10,7 +10,8 @@ import pytest
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_ROOT))
 
-from benchmarks import check_regression, run as bench_run  # noqa: E402
+from benchmarks import check_regression, executor_bench  # noqa: E402
+from benchmarks import run as bench_run  # noqa: E402
 
 
 class TestRunExitCode:
@@ -42,6 +43,32 @@ class TestRunExitCode:
         # no suites -> "compares nothing" is fine here; exit 0 (no failures)
         assert bench_run.main(["--smoke"]) == 0
         assert seen["quick"] is True
+
+
+class TestSharedJsonSections:
+    def test_write_results_preserves_foreign_sections(self, tmp_path,
+                                                      monkeypatch):
+        """Regression: executor_bench.write_results whitelisted
+        planner/transport and silently deleted the mixed section (and would
+        delete any future shared section) from BENCH_executor.json."""
+        p = tmp_path / "BENCH_executor.json"
+        p.write_text(json.dumps(dict(
+            rows=[], peaks={"old": {"neuron": 1}},
+            planner={"a": 1}, transport={"b": 2}, mixed={"c": 3},
+            future_section={"d": 4})))
+        monkeypatch.setattr(executor_bench, "RESULT_PATH", p)
+        payload = executor_bench.write_results(
+            rows=[dict(config="x")], peaks={"new": {"neuron": 2}})
+        on_disk = json.loads(p.read_text())
+        for out in (payload, on_disk):
+            assert out["planner"] == {"a": 1}
+            assert out["transport"] == {"b": 2}
+            assert out["mixed"] == {"c": 3}
+            assert out["future_section"] == {"d": 4}
+            # own sections are replaced/merged, not preserved wholesale
+            assert out["rows"] == [dict(config="x")]
+            assert out["peaks"] == {"old": {"neuron": 1},
+                                    "new": {"neuron": 2}}
 
 
 def _payload(speedup=50.0, peak=10000, speedup2=None):
@@ -177,6 +204,66 @@ class TestRegressionGate:
         f = _write(tmp_path, "fresh.json", fresh)
         assert check_regression.main(["--baseline", str(b),
                                       "--fresh", str(f)]) == 1
+
+    def test_mixed_regression_fails(self, tmp_path):
+        """The mode-mixing rows are analytic: a >20% worse chosen score is
+        a search/cost-model regression."""
+        base = _payload()
+        base["mixed"] = {"smoke@8": dict(feasible=True, wall_s=1.0,
+                                         best_uniform_s=0.05,
+                                         mixed_s=0.04, max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["mixed"] = {"smoke@8": dict(feasible=True, wall_s=1.0,
+                                          best_uniform_s=0.05,
+                                          mixed_s=0.0495,
+                                          max_peak_ram=16000)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_mixed_invariant_fails(self, tmp_path):
+        """A chosen score above the best uniform candidate breaks the
+        machine-independent mixing invariant regardless of the baseline
+        (the winner is a min over a superset of the uniforms)."""
+        base = _payload()
+        base["mixed"] = {"smoke@8": dict(feasible=True, best_uniform_s=0.05,
+                                         mixed_s=0.04, max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["mixed"] = {"smoke@8": dict(feasible=True, best_uniform_s=0.03,
+                                          mixed_s=0.035,
+                                          max_peak_ram=16000)}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_mixed_feasibility_flip_fails(self, tmp_path):
+        base = _payload()
+        base["mixed"] = {"smoke@8": dict(feasible=True, best_uniform_s=0.05,
+                                         mixed_s=0.04, max_peak_ram=16000)}
+        fresh = _payload()
+        fresh["mixed"] = {"smoke@8": dict(feasible=False, wall_s=1.0,
+                                          binding="ram_cap")}
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_committed_mixed_section_holds_acceptance(self):
+        """The committed baseline must show per-block mixing strictly
+        beating the best uniform plan on the MNv2@112 7-worker demo cluster
+        (analytic, so machine-independent)."""
+        baseline = _ROOT / "BENCH_executor.json"
+        if not baseline.exists():
+            pytest.skip("no committed baseline")
+        mixed = json.loads(baseline.read_text()).get("mixed", {})
+        if "mnv2_112@7" not in mixed:
+            pytest.skip("baseline predates the mixed section")
+        entry = mixed["mnv2_112@7"]
+        assert entry["feasible"]
+        assert entry["mode"] == "mixed"
+        assert entry["mixed_s"] < entry["best_uniform_s"]
 
     def test_sections_flag_restricts_comparison(self, tmp_path):
         """--sections lets the analytic-only CI cell gate planner/peaks/

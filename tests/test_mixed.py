@@ -1,0 +1,538 @@
+"""Per-block mode mixing: heterogeneous SplitPlans end-to-end.
+
+Covers the mixed plan constructor (per-block modes + worker subsets), the
+cross-boundary accounting fixes it forced (producer-sized ``comm_volume``
+upload arrays, ``weight_itemsize`` threading, the ``bounding_slices``
+over-approximation contract), int8 bit-exactness across every mode seam,
+the DP assignment search (exact vs the serial simulator), and the planner's
+``"mixed"`` axis with Plan JSON schema v2.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import small_cnn
+from repro.api import (Cluster, Objective, Plan, Planner, SEARCH_MODES,
+                       build_split_plan)
+from repro.core import (CompiledSplitExecutor, SimConfig, SplitExecutor,
+                        WorkerParams, calibrate_scales, comm_volume,
+                        layerwise_peak, peak_ram_per_worker, plan_memory,
+                        quantize_model, reference_forward,
+                        search_mixed_assignment, simulate, split_layer,
+                        split_model, split_model_mixed, worker_input_regions)
+from repro.core.fusion import group_blocks
+from repro.core.reinterpret import trace_sequential
+from repro.models import mobilenet_v2_smoke
+
+
+def _acts_fn(model, x):
+    return reference_forward(model, x, collect_activations=True)[1]
+
+
+def _quantized(model, rng, shape, n_calib=3):
+    calib = [rng.standard_normal(shape).astype(np.float32)
+             for _ in range(n_calib)]
+    return quantize_model(model, calibrate_scales(model, calib, _acts_fn))
+
+
+def _demo_workers(n=8):
+    return list(Cluster.heterogeneous_demo(n).workers)
+
+
+def _seam_assignment(model):
+    """An assignment covering every seam type: spatial->kernel,
+    kernel->neuron, neuron->spatial and spatial->neuron."""
+    n_b = len(group_blocks(model))
+    cyc = ["spatial", "kernel", "neuron", "spatial", "neuron"]
+    return [cyc[i % len(cyc)] for i in range(n_b)]
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+class TestConstruction:
+    def test_mixed_plan_structure(self):
+        m = mobilenet_v2_smoke()
+        blocks = group_blocks(m)
+        assignment = _seam_assignment(m)
+        plan = split_model_mixed(m, np.ones(4), assignment)
+        assert plan.mode == "mixed" and plan.is_mixed
+        assert plan.assignment == tuple(assignment)
+        # spatial conv blocks stay grouped; everything else is singleton
+        for grp, mode in zip(plan.block_groups, plan.group_modes):
+            if mode == "spatial":
+                assert all(m.layers[i].kind in ("conv", "dwconv")
+                           for i in grp)
+            else:
+                assert len(grp) == 1
+        # block_modes is aligned with block_groups and uses effective modes
+        assert len(plan.block_modes) == len(plan.block_groups)
+        assert set(plan.block_modes) <= {"neuron", "kernel", "spatial"}
+        # every layer appears in exactly one group, in order
+        flat = [i for grp in plan.block_groups for i in grp]
+        assert flat == list(range(len(m.layers)))
+
+    def test_spatial_over_nonconv_block_falls_back_to_neuron(self):
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        plan = split_model_mixed(m, np.ones(3), ["spatial"] * n_b)
+        # avgpool / linear tail cannot band spatially -> effective neuron
+        assert plan.block_modes[-1] == "neuron"
+        assert plan.assignment == ("spatial",) * n_b
+
+    def test_uniform_assignment_matches_uniform_plan(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(4)
+        ratings = np.array([1.0, 2.0, 0.5, 1.5])
+        n_b = len(group_blocks(m))
+        for mode in ("neuron", "kernel", "spatial"):
+            uni = simulate(m, ws, ratings,
+                           plan=split_model(m, ratings, mode=mode))
+            mix = simulate(m, ws, ratings,
+                           plan=split_model_mixed(m, ratings, [mode] * n_b))
+            assert mix.serial_total_time == pytest.approx(
+                uni.serial_total_time, rel=1e-12)
+            assert mix.total_bytes == uni.total_bytes
+            assert int(mix.peak_ram.max()) == int(uni.peak_ram.max())
+
+    def test_validation_errors(self):
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        with pytest.raises(ValueError, match="assignment length"):
+            split_model_mixed(m, np.ones(2), ["neuron"] * (n_b - 1))
+        with pytest.raises(ValueError, match="unknown mode"):
+            split_model_mixed(m, np.ones(2), ["banded"] * n_b)
+        with pytest.raises(ValueError, match="block_workers length"):
+            split_model_mixed(m, np.ones(2), ["neuron"] * n_b,
+                              block_workers=[None])
+        with pytest.raises(ValueError, match="outside cluster"):
+            split_model_mixed(m, np.ones(2), ["neuron"] * n_b,
+                              block_workers=[(5,)] + [None] * (n_b - 1))
+        with pytest.raises(ValueError, match="no positive rating"):
+            split_model_mixed(m, np.array([1.0, 0.0]), ["neuron"] * n_b,
+                              block_workers=[(1,)] + [None] * (n_b - 1))
+
+    def test_block_worker_subsets_empty_elsewhere(self):
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        subsets = [(0, 1)] + [None] * (n_b - 1)
+        plan = split_model_mixed(m, np.ones(4), ["kernel"] * n_b,
+                                 block_workers=subsets)
+        first = plan.splits[0]
+        assert len(first.shards) == 4          # full cluster width everywhere
+        assert first.shard_of(2).n_positions == 0
+        assert first.shard_of(3).n_positions == 0
+        assert sum(s.n_positions for s in first.shards) == m.layers[0].n_out
+
+
+# ---------------------------------------------------------------------------
+# boundary-accounting bugfixes
+# ---------------------------------------------------------------------------
+
+class TestCommVolumeAsymmetric:
+    def test_producer_sized_upload_array(self):
+        """Regression: ``up`` was sized by the *consumer* split's worker
+        count but indexed by *producer* worker ids — IndexError as soon as
+        the producer side had more workers than the consumer side."""
+        m = small_cnn()
+        prev = split_layer(m.layers[0], np.ones(3))     # 3 producers
+        nxt = split_layer(m.layers[1], np.ones(2))      # 2 consumers
+        vol = comm_volume(prev, m.layers[1], nxt)
+        assert vol.upload_bytes.shape == (3,)
+        assert vol.download_bytes.shape == (2,)
+        assert vol.upload_bytes.sum() == m.layers[0].n_out
+        # the symmetric direction (fewer producers than consumers) keeps
+        # every producer byte in the right slot too
+        vol2 = comm_volume(nxt, m.layers[2], split_layer(m.layers[2],
+                                                         np.ones(4)))
+        assert vol2.upload_bytes.shape == (2,)
+        assert vol2.download_bytes.shape == (4,)
+        assert vol2.upload_bytes.sum() == m.layers[1].n_out
+
+    def test_first_layer_upload_keeps_consumer_width(self):
+        m = small_cnn()
+        split = split_layer(m.layers[0], np.ones(3))
+        vol = comm_volume(None, m.layers[0], split)
+        assert vol.upload_bytes.shape == (3,)
+        assert vol.upload_bytes.sum() == 0
+
+    def test_spatial_to_flat_seam_regathers_full_tensor(self):
+        """At a spatial->flat seam the producer bands tile the output rows,
+        so the seam upload is exactly the full tensor once, and the flat
+        consumers download their exact input regions."""
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        plan = split_model_mixed(m, np.ones(3),
+                                 ["spatial"] + ["kernel"] * (n_b - 1))
+        li = plan.block_groups[1][0]
+        prev, cur = plan.splits[li - 1], plan.splits[li]
+        assert prev.mode == "spatial" and cur.mode == "kernel"
+        vol = comm_volume(prev, cur.layer, cur)
+        assert vol.upload_bytes.sum() == m.layers[li - 1].n_out
+        regions = worker_input_regions(cur.layer, cur)
+        np.testing.assert_array_equal(
+            vol.download_bytes,
+            [sum(r.n_points for r in regs) for regs in regions])
+
+    def test_flat_to_spatial_seam_downloads_band_windows(self):
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        plan = split_model_mixed(m, np.ones(3),
+                                 ["neuron", "spatial"] + ["neuron"]
+                                 * (n_b - 2))
+        li = plan.block_groups[1][0]
+        prev, cur = plan.splits[li - 1], plan.splits[li]
+        assert prev.mode == "neuron" and cur.mode == "spatial"
+        vol = comm_volume(prev, cur.layer, cur)
+        ci, _, wi = cur.layer.in_shape
+        for w, shard in enumerate(cur.shards):
+            expect = ci * wi * max(shard.in_hi - shard.in_lo, 0)
+            assert vol.download_bytes[w] == expect
+
+
+class TestMemoryWeightItemsize:
+    def test_helpers_thread_weight_itemsize(self):
+        """Regression: the public peak helpers silently dropped the
+        ``weight_itemsize`` plan_memory supports, so a float-weights /
+        int8-activations peak query was impossible."""
+        plan = split_model(mobilenet_v2_smoke(), np.ones(3))
+        mems = plan_memory(plan, itemsize=1, weight_itemsize=4)
+        expect_lw = np.stack([mm.per_worker_peak for mm in mems])
+        np.testing.assert_array_equal(
+            layerwise_peak(plan, 1, weight_itemsize=4), expect_lw)
+        np.testing.assert_array_equal(
+            peak_ram_per_worker(plan, 1, weight_itemsize=4),
+            expect_lw.max(axis=0))
+        # wider weights must strictly raise the peak of weight-carrying layers
+        assert (peak_ram_per_worker(plan, 1, weight_itemsize=4)
+                > peak_ram_per_worker(plan, 1)).all()
+        # default stays the old contract: weight_itemsize == itemsize
+        np.testing.assert_array_equal(peak_ram_per_worker(plan, 1),
+                                      peak_ram_per_worker(plan, 1, 1))
+
+
+class TestBoundingSlicesContract:
+    def _gappy_net(self):
+        """stride > kernel: receptive rows/cols of adjacent outputs have
+        gaps, so a shard's input region is not contiguous."""
+        spec = [dict(kind="conv", out_channels=4, kernel=(2, 2),
+                     stride=(3, 3), padding=(0, 0), activation="relu")]
+        return trace_sequential(spec, (3, 11, 11),
+                                rng=np.random.default_rng(0))
+
+    def test_bbox_overapproximates_gappy_regions(self):
+        m = self._gappy_net()
+        split = split_layer(m.layers[0], np.ones(2))
+        regions = worker_input_regions(m.layers[0], split)
+        gaps_seen = False
+        for regs in regions:
+            for r in regs:
+                assert r.bbox_points >= r.n_points
+                if r.bbox_points > r.n_points:
+                    gaps_seen = True
+                cs, rs, wsl = r.bounding_slices()
+                assert {c for c, _, _ in r.point_set()} <= set(
+                    range(cs.start, cs.stop))
+        assert gaps_seen, "stride>kernel net should produce gappy regions"
+
+    def test_byte_accounting_uses_exact_points_not_bbox(self):
+        """comm_volume and plan_memory must count n_points (exact), never
+        the bbox volume — the two diverge on gappy regions."""
+        m = self._gappy_net()
+        plan = split_model(m, np.ones(2))
+        split = plan.splits[0]
+        regions = worker_input_regions(m.layers[0], split)
+        exact = np.array([sum(r.n_points for r in regs) for regs in regions])
+        bbox = np.array([sum(r.bbox_points for r in regs) for regs in regions])
+        assert (bbox > exact).any()
+        vol = comm_volume(None, m.layers[0], split)
+        np.testing.assert_array_equal(vol.download_bytes, exact)
+        np.testing.assert_array_equal(plan_memory(plan)[0].per_worker_in,
+                                      exact)
+
+
+# ---------------------------------------------------------------------------
+# executor parity across mode seams
+# ---------------------------------------------------------------------------
+
+class TestSeamParity:
+    def test_int8_bit_exact_across_all_seams(self, rng):
+        """Eager and compiled mixed execution must match the unsplit int8
+        oracle bit-for-bit across spatial->kernel, kernel->neuron,
+        neuron->spatial and spatial->neuron seams."""
+        m = mobilenet_v2_smoke()
+        qm = _quantized(m, rng, m.input_shape)
+        x = rng.standard_normal(m.input_shape).astype(np.float32)
+        oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+        plan = split_model_mixed(m, np.array([1.0, 2.0, 0.5, 1.5]),
+                                 _seam_assignment(m))
+        eager = SplitExecutor(plan, qm).run(x, mode="int8")
+        np.testing.assert_array_equal(eager, oracle)
+        compiled = CompiledSplitExecutor(plan, qm).run(x, mode="int8")
+        np.testing.assert_array_equal(compiled, oracle)
+
+    def test_float_parity_across_seams(self, rng):
+        m = mobilenet_v2_smoke()
+        x = rng.standard_normal(m.input_shape).astype(np.float32)
+        ref = reference_forward(m, x)
+        plan = split_model_mixed(m, np.ones(3), _seam_assignment(m))
+        np.testing.assert_allclose(SplitExecutor(plan).run(x), ref,
+                                   atol=1e-5)
+        np.testing.assert_allclose(CompiledSplitExecutor(plan).run(x), ref,
+                                   atol=1e-5)
+
+    def test_int8_bit_exact_with_block_worker_subsets(self, rng):
+        """Adjacent blocks on different worker subsets: the seam re-gathers
+        across producer/consumer sets of different sizes."""
+        m = mobilenet_v2_smoke()
+        qm = _quantized(m, rng, m.input_shape)
+        x = rng.standard_normal(m.input_shape).astype(np.float32)
+        oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+        n_b = len(group_blocks(m))
+        subsets = [None, (0, 1), (1, 2, 3)] + [None] * (n_b - 3)
+        plan = split_model_mixed(m, np.ones(4), _seam_assignment(m),
+                                 block_workers=subsets)
+        np.testing.assert_array_equal(
+            SplitExecutor(plan, qm).run(x, mode="int8"), oracle)
+
+    def test_collect_activations_rejected_for_mixed_spatial(self, rng):
+        m = mobilenet_v2_smoke()
+        plan = split_model_mixed(m, np.ones(2), _seam_assignment(m))
+        x = rng.standard_normal(m.input_shape).astype(np.float32)
+        with pytest.raises(ValueError, match="spatial"):
+            SplitExecutor(plan).run(x, collect_activations=True)
+        # all-flat mixed plans still support calibration collection
+        n_b = len(group_blocks(m))
+        flat = split_model_mixed(m, np.ones(2), ["kernel"] * n_b)
+        out, acts = SplitExecutor(flat).run(x, collect_activations=True)
+        assert len(acts) == len(flat.block_groups)
+
+
+# ---------------------------------------------------------------------------
+# DP assignment search
+# ---------------------------------------------------------------------------
+
+class TestMixedSearch:
+    def test_dp_latency_exact_vs_simulator(self):
+        """The DP's predicted latency must equal the serial simulator on the
+        assembled plan bit-for-bit — the cost decomposition is exact."""
+        m = mobilenet_v2_smoke()
+        for n, ratings in ((4, np.ones(4)), (8, None),
+                           (3, np.array([2.0, 1.0, 0.5]))):
+            ws = _demo_workers(n)
+            res = search_mixed_assignment(m, ws, ratings)
+            plan = split_model_mixed(
+                m, np.ones(n) if ratings is None else ratings,
+                res.assignment)
+            sim = simulate(m, ws, ratings, plan=plan)
+            assert res.predicted_latency_s == pytest.approx(
+                sim.serial_total_time, rel=1e-12)
+            assert res.predicted_comm_bytes == sim.total_bytes
+            assert res.predicted_peak_ram == int(sim.peak_ram.max())
+
+    def test_dp_never_worse_than_any_uniform(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(8)
+        res = search_mixed_assignment(m, ws, minimize="latency")
+        for mode in ("neuron", "kernel", "spatial"):
+            uni = simulate(m, ws, plan=split_model(m, np.ones(8), mode=mode))
+            assert res.predicted_latency_s <= uni.serial_total_time + 1e-12
+
+    def test_dp_strictly_beats_best_uniform_on_demo(self):
+        """The acceptance regime: early blocks spatial, late blocks flat
+        beats every uniform plan on the heterogeneous demo cluster."""
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(8)
+        res = search_mixed_assignment(m, ws)
+        assert len(set(res.assignment)) > 1   # actually mixes
+        best_uni = min(
+            simulate(m, ws,
+                     plan=split_model(m, np.ones(8),
+                                      mode=mode)).serial_total_time
+            for mode in ("neuron", "kernel", "spatial"))
+        assert res.predicted_latency_s < best_uni
+
+    def test_dp_per_objective_metrics(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(4)
+        by_bytes = search_mixed_assignment(m, ws, minimize="comm_bytes")
+        plan = split_model_mixed(m, np.ones(4), by_bytes.assignment)
+        assert by_bytes.predicted_score == float(
+            simulate(m, ws, plan=plan).total_bytes)
+        by_peak = search_mixed_assignment(m, ws, minimize="peak_ram")
+        plan = split_model_mixed(m, np.ones(4), by_peak.assignment)
+        assert by_peak.predicted_score == float(
+            peak_ram_per_worker(plan).max())
+
+    def test_ram_caps_prune_states(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(4)
+        free = search_mixed_assignment(m, ws, minimize="latency")
+        capped = search_mixed_assignment(
+            m, ws, minimize="latency",
+            ram_caps=np.full(4, 12 * 1024))
+        plan = split_model_mixed(m, np.ones(4), capped.assignment)
+        assert peak_ram_per_worker(plan).max() <= 12 * 1024
+        assert capped.predicted_latency_s >= free.predicted_latency_s - 1e-12
+        with pytest.raises(ValueError, match="no cap-feasible mode"):
+            search_mixed_assignment(m, ws, ram_caps=np.full(4, 64))
+
+    def test_validation(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers(2)
+        with pytest.raises(ValueError, match="unknown minimize"):
+            search_mixed_assignment(m, ws, minimize="vibes")
+        with pytest.raises(ValueError, match="unknown mode"):
+            search_mixed_assignment(m, ws, modes=("banded",))
+        with pytest.raises(ValueError, match="at least one mode"):
+            search_mixed_assignment(m, ws, modes=())
+        with pytest.raises(ValueError, match="ratings for"):
+            search_mixed_assignment(m, ws, ratings=np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# planner integration + Plan JSON schema v2
+# ---------------------------------------------------------------------------
+
+class TestPlannerMixedAxis:
+    def test_objective_accepts_mixed(self):
+        assert "mixed" in SEARCH_MODES
+        o = Objective(modes=SEARCH_MODES)
+        assert o.modes == SEARCH_MODES
+        with pytest.raises(ValueError, match="unknown mode"):
+            Objective(modes=("mixed", "banded"))
+
+    def test_build_split_plan_mixed_needs_assignment(self):
+        m = mobilenet_v2_smoke()
+        with pytest.raises(ValueError, match="assignment"):
+            build_split_plan(m, np.ones(2), "mixed")
+        n_b = len(group_blocks(m))
+        plan = build_split_plan(m, np.ones(2), "mixed",
+                                assignment=["neuron"] * n_b)
+        assert plan.mode == "mixed"
+
+    def test_mixed_candidates_enter_the_search(self):
+        m = mobilenet_v2_smoke()
+        planner = Planner(m, Cluster.heterogeneous_demo(3))
+        obj = Objective(minimize="latency", ram_cap_bytes=512 * 1024,
+                        modes=SEARCH_MODES, transports=("serial",))
+        plan = planner.plan(obj)
+        mixed = [c for c in plan.candidates
+                 if c.mode == "mixed" and c.feasible]
+        assert mixed, "mixed candidates missing from the search table"
+        for c in mixed:
+            assert c.assignment is not None
+            assert len(c.assignment) == len(group_blocks(m))
+        # the DP candidate never loses to a uniform candidate of the same
+        # subset/transport on the serial objective it optimizes exactly
+        for c in mixed:
+            uniforms = [u for u in plan.candidates
+                        if u.feasible and u.mode in ("neuron", "kernel")
+                        and u.worker_indices == c.worker_indices
+                        and u.transport == c.transport]
+            for u in uniforms:
+                assert c.latency_s <= u.latency_s + 1e-12
+
+    def test_mixed_never_worse_than_uniform_search(self):
+        m = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(4)
+        for minimize in ("latency", "peak_ram"):
+            uni = Planner(m, cluster).plan(
+                Objective(minimize=minimize, ram_cap_bytes=512 * 1024))
+            mix = Planner(m, cluster).plan(
+                Objective(minimize=minimize, ram_cap_bytes=512 * 1024,
+                          modes=SEARCH_MODES))
+            assert mix.score <= uni.score + 1e-12
+
+    def test_plan_json_v2_round_trip(self):
+        m = mobilenet_v2_smoke()
+        plan = Planner(m, Cluster.heterogeneous_demo(3)).plan(
+            Objective(minimize="latency", ram_cap_bytes=512 * 1024,
+                      modes=("mixed",), transports=("serial",)))
+        assert plan.mode == "mixed" and plan.assignment is not None
+        d = plan.to_dict()
+        assert d["version"] == 2
+        assert d["assignment"] == list(plan.assignment)
+        loaded = Plan.from_json(plan.to_json(), m)
+        assert loaded.assignment == plan.assignment
+        np.testing.assert_array_equal(loaded.peak_ram, plan.peak_ram)
+        cands = {(c.mode, c.assignment) for c in loaded.candidates}
+        assert cands == {(c.mode, c.assignment) for c in plan.candidates}
+        assert "per-block modes:" in loaded.report()
+
+    def test_legacy_v1_payload_loads_as_uniform(self):
+        m = mobilenet_v2_smoke()
+        plan = Planner(m, Cluster.heterogeneous_demo(2)).plan(
+            Objective(minimize="latency", transports=("serial",)))
+        d = plan.to_dict()
+        d.pop("assignment")
+        d["version"] = 1
+        for c in d["candidates"]:
+            c.pop("assignment", None)
+        legacy = Plan.from_dict(d, m)
+        assert legacy.mode == plan.mode
+        assert legacy.assignment is None
+
+    def test_mixed_payload_requires_assignment(self):
+        m = mobilenet_v2_smoke()
+        plan = Planner(m, Cluster.heterogeneous_demo(2)).plan(
+            Objective(minimize="latency", modes=("mixed",),
+                      transports=("serial",)))
+        d = plan.to_dict()
+        d["assignment"] = None
+        with pytest.raises(ValueError, match="assignment"):
+            Plan.from_dict(d, m)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random assignments stay bit-exact and well-accounted
+# ---------------------------------------------------------------------------
+
+@st.composite
+def mixed_cases(draw):
+    n_workers = draw(st.integers(2, 4))
+    ratings = np.array([draw(st.floats(0.2, 3.0)) for _ in range(n_workers)])
+    seed = draw(st.integers(0, 5))
+    return n_workers, ratings, seed
+
+
+@given(mixed_cases())
+@settings(max_examples=10, deadline=None)
+def test_property_mixed_int8_exact(case):
+    """Random per-block assignments on the small net: int8 output stays
+    bit-identical to the unsplit oracle across every induced seam."""
+    n_workers, ratings, seed = case
+    rng = np.random.default_rng(seed)
+    m = small_cnn(seed=seed)
+    n_b = len(group_blocks(m))
+    assignment = [("neuron", "kernel", "spatial")[rng.integers(3)]
+                  for _ in range(n_b)]
+    qm = _quantized(m, rng, m.input_shape)
+    x = rng.standard_normal(m.input_shape).astype(np.float32)
+    oracle = SplitExecutor(split_model(m, [1.0]), qm).run(x, mode="int8")
+    plan = split_model_mixed(m, ratings, assignment)
+    np.testing.assert_array_equal(
+        SplitExecutor(plan, qm).run(x, mode="int8"), oracle)
+
+
+@given(mixed_cases())
+@settings(max_examples=20, deadline=None)
+def test_property_mixed_dp_exact(case):
+    """DP prediction == serial simulator for every objective, any ratings."""
+    n_workers, ratings, seed = case
+    m = small_cnn(seed=seed)
+    ws = [WorkerParams(f_mhz=150.0 * (w + 1), d_s_per_kb=0.001 * w)
+          for w in range(n_workers)]
+    res = search_mixed_assignment(m, ws, ratings)
+    plan = split_model_mixed(m, ratings, res.assignment)
+    sim = simulate(m, ws, ratings, plan=plan)
+    assert res.predicted_latency_s == pytest.approx(sim.serial_total_time,
+                                                    rel=1e-12)
+    assert res.predicted_comm_bytes == sim.total_bytes
+    assert res.predicted_peak_ram == int(sim.peak_ram.max())
+    # the simulator accepts the mixed plan under SimConfig defaults too
+    cfg = SimConfig(transport="pipelined")
+    piped = simulate(m, ws, ratings, cfg, plan=plan)
+    assert piped.total_time <= sim.serial_total_time + 1e-9

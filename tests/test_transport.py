@@ -1,7 +1,8 @@
 """Async transport simulator tests: serial bit-compatibility, the pipelined
 event model (timeline consistency, overlap savings, single-link degeneracy,
-zero-bandwidth validation), the planner's transport axis, and the explicit
-infeasible entries in compare_modes."""
+zero-bandwidth validation), the planner's transport axis, the explicit
+infeasible entries in compare_modes, and heterogeneous (mixed-assignment)
+plans under both transports."""
 import numpy as np
 import pytest
 from hypothesis import HealthCheck, given, settings
@@ -10,7 +11,9 @@ from hypothesis import strategies as st
 from conftest import small_cnn
 from repro.api import Cluster, Objective, Plan, Planner
 from repro.core import (SimConfig, WorkerParams, compare_modes, simulate,
-                        split_model)
+                        split_model, split_model_mixed)
+from repro.core.fusion import group_blocks
+from repro.core.simulator import _boundary_deps, _segments
 from repro.models import mobilenet_v2_smoke
 
 
@@ -257,6 +260,64 @@ class TestPlannerTransportAxis:
 
 
 # ---------------------------------------------------------------------------
+# mixed (heterogeneous-assignment) plans under both transports
+# ---------------------------------------------------------------------------
+
+class TestMixedTransport:
+    def test_segments_follow_block_structure(self):
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        assignment = ["spatial" if i % 2 == 0 else "kernel"
+                      for i in range(n_b)]
+        plan = split_model_mixed(m, np.ones(4), assignment)
+        segs = _segments(plan)
+        # spatial-assigned conv blocks fuse into one transfer segment;
+        # flat-assigned blocks contribute one segment per layer
+        assert [tuple(g) for g in plan.block_groups] == segs
+        assert [i for s in segs for i in s] == list(range(len(m.layers)))
+
+    def test_seam_boundary_deps_barrier_vs_row_overlap(self):
+        """A spatial->flat (or flat->spatial) seam degrades to the
+        per-boundary barrier; a spatial->spatial seam keeps the exact
+        row-overlap dependency set."""
+        m = mobilenet_v2_smoke()
+        n_b = len(group_blocks(m))
+        assignment = ["spatial", "kernel"] + ["spatial"] * (n_b - 2)
+        plan = split_model_mixed(m, np.ones(4), assignment)
+        segs = _segments(plan)
+        # seg 0 (spatial block) -> seg 1 (first kernel layer): mixed seam
+        first_flat = segs[1][0]
+        up = np.ones(4, dtype=np.int64)
+        deps = _boundary_deps(plan.splits[segs[0][-1]],
+                              plan.splits[first_flat], up)
+        assert deps == [[0, 1, 2, 3]] * 4
+        # find a spatial->spatial seam and check it is not a full barrier
+        spatial_seams = [
+            (a[-1], b[0]) for a, b in zip(segs, segs[1:])
+            if plan.splits[a[-1]].mode == "spatial"
+            and plan.splits[b[0]].mode == "spatial"]
+        assert spatial_seams
+        prev_li, li = spatial_seams[0]
+        deps = _boundary_deps(plan.splits[prev_li], plan.splits[li], up)
+        assert any(d != [0, 1, 2, 3] for d in deps)
+
+    def test_mixed_pipelined_not_slower_on_demo(self):
+        m = mobilenet_v2_smoke()
+        ws = _demo_workers()
+        n_b = len(group_blocks(m))
+        assignment = ["spatial"] * (n_b // 2) + \
+            ["neuron"] * (n_b - n_b // 2)
+        plan = split_model_mixed(m, np.ones(8), assignment)
+        serial = simulate(m, ws, plan=plan)
+        piped = simulate(m, ws, cfg=SimConfig(transport="pipelined"),
+                         plan=plan)
+        assert piped.total_time < serial.total_time
+        assert piped.timeline is not None
+        assert piped.overlap_saved_s == pytest.approx(
+            serial.serial_total_time - piped.total_time, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep: savings are monotone non-negative on heterogeneous
 # clusters (the pipelined schedule only relaxes serialization constraints)
 # ---------------------------------------------------------------------------
@@ -287,3 +348,38 @@ def test_overlap_savings_nonnegative(case):
     assert res.overlap_saved_s >= -1e-9
     assert res.total_time > 0
     assert res.total_time <= res.serial_total_time + 1e-9
+
+
+@st.composite
+def het_mixed_cases(draw):
+    n = draw(st.integers(2, 5))
+    workers = [WorkerParams(
+        f_mhz=draw(st.floats(50.0, 1000.0)),
+        d_s_per_kb=draw(st.floats(0.0, 0.05)),
+        b_kb_s=draw(st.floats(100.0, 200000.0))) for _ in range(n)]
+    ratings = np.array([draw(st.floats(0.01, 5.0)) for _ in range(n)])
+    n_blocks = len(group_blocks(small_cnn()))
+    assignment = [draw(st.sampled_from(["neuron", "kernel", "spatial"]))
+                  for _ in range(n_blocks)]
+    overlap = draw(st.booleans())
+    return workers, ratings, assignment, overlap
+
+
+@given(het_mixed_cases())
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_mixed_pipelined_never_exceeds_serial(case):
+    """Heterogeneous per-block assignments: the pipelined makespan may never
+    exceed the serial total, across every seam combination."""
+    workers, ratings, assignment, overlap = case
+    m = small_cnn()
+    plan = split_model_mixed(m, ratings, assignment)
+    res = simulate(m, workers, ratings,
+                   SimConfig(transport="pipelined", overlap=overlap),
+                   plan=plan)
+    assert res.overlap_saved_s >= -1e-9
+    assert res.total_time <= res.serial_total_time + 1e-9
+    serial = simulate(m, workers, ratings, SimConfig(overlap=overlap),
+                      plan=plan)
+    assert res.serial_total_time == pytest.approx(serial.total_time,
+                                                  rel=1e-12)
