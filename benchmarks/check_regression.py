@@ -25,11 +25,20 @@ a >20% regression:
   score exceeding the best uniform score breaks the mixing invariant
   outright (enabling mixing may never yield a worse plan — the winner is
   the min over a superset of the uniform candidates).
+* ``kernels`` (per-kernel ref-vs-Pallas micro-bench) — ``speedup`` is a
+  ratio of two paths timed in the same process, so it is machine-insensitive
+  even though the absolute wall times are not: the 20% line is held on the
+  geometric mean across overlapping kernels, any single kernel collapsing
+  below half its baseline fails outright.  This section also holds the
+  hot-path invariant on the FRESH rows: every spatial int8 executor row must
+  show compiled beating eager (speedup >= 1.0) — the fused batched-band
+  schedule exists to win that race at every batch size, and losing it is a
+  regression regardless of what the baseline said.
 
 ``--sections`` restricts which sections are compared — the pinned-min jax
-CI cell regenerates only the analytic sections
-(``peaks,planner,transport,mixed``) and gates those, catching cost-model
-drift the latest-jax bench job can mask.
+CI cell regenerates only the analytic + ratio sections
+(``peaks,planner,transport,mixed,kernels``) and gates those, catching
+cost-model drift the latest-jax bench job can mask.
 
 Rows/modes present in only one file are reported but don't fail the gate
 (benchmarks may gain coverage); missing files or empty overlap DO fail — a
@@ -54,7 +63,7 @@ def _row_key(row: dict) -> tuple:
             row["batch"])
 
 
-SECTIONS = ("rows", "peaks", "planner", "transport", "mixed")
+SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -181,6 +190,45 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                 f"mixed invariant broken {key}: chosen score "
                 f"{f['mixed_s']} exceeds best uniform "
                 f"{f['best_uniform_s']}")
+    base_kn = baseline.get("kernels", {}) if "kernels" in sections else {}
+    fresh_kn = fresh.get("kernels", {}) if "kernels" in sections else {}
+    kn_ratios = []
+    for key in sorted(base_kn.keys() & fresh_kn.keys()):
+        b, f = base_kn[key].get("speedup"), fresh_kn[key].get("speedup")
+        if b is None or f is None:
+            continue
+        compared += 1
+        ratio = f / b if b > 0 else 1.0
+        kn_ratios.append(ratio)
+        print(f"kernel {key}: {f:.3f}x (baseline {b:.3f}x, {ratio:.0%})")
+        if ratio < 0.5:
+            failures.append(
+                f"kernel speedup collapse {key}: {f:.3f}x is below half "
+                f"of baseline {b:.3f}x — a lost kernel path, not noise")
+    if kn_ratios:
+        geomean = math.exp(sum(math.log(max(r, 1e-9)) for r in kn_ratios)
+                           / len(kn_ratios))
+        line = (f"geomean kernel speedup ratio over {len(kn_ratios)} "
+                f"kernels: {geomean:.0%} of baseline")
+        if geomean < 1.0 - threshold:
+            failures.append(f"{line} (allowed: {1.0 - threshold:.0%})")
+        else:
+            print(f"ok {line}")
+    if "kernels" in sections:
+        # machine-independent hot-path invariant on the fresh executor rows:
+        # compiled spatial int8 must beat eager at every benched batch size
+        for row in fresh.get("rows", []):
+            if row.get("split") != "spatial" or row.get("mode") != "int8":
+                continue
+            compared += 1
+            tag = f"{row['config']}/spatial/int8/b{row['batch']}"
+            if row["speedup"] < 1.0:
+                failures.append(
+                    f"hot-path invariant broken {tag}: compiled spatial "
+                    f"int8 is {row['speedup']:.2f}x vs eager — the fused "
+                    f"band schedule must win at every batch size")
+            else:
+                print(f"ok hot-path {tag}: {row['speedup']:.2f}x >= 1.0")
     return failures, compared
 
 

@@ -28,6 +28,7 @@ Run:  PYTHONPATH=src python -m benchmarks.executor_bench [--quick]
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import pathlib
 import time
@@ -80,7 +81,79 @@ def peaks_for(model, plans: dict | None = None) -> dict[str, int]:
             for mode, plan in plans.items()}
 
 
-def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
+@functools.lru_cache(maxsize=1)
+def _peak_gflops() -> float:
+    """Measured dense-f32-matmul throughput of this host (XLA, 1024^3): the
+    roofline ceiling the per-block achieved FLOP rate is reported against.
+    A proxy, not a spec sheet — it is measured by the same stack that runs
+    the executor, so the fraction tracks real headroom on this machine."""
+    import jax
+    import jax.numpy as jnp
+    n = 1024
+    a = jnp.ones((n, n), jnp.float32)
+    b = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a, b: a @ b)
+    f(a, b).block_until_ready()
+    best = min(_time(lambda: f(a, b).block_until_ready(), 1)
+               for _ in range(3))
+    return 2.0 * n ** 3 / best / 1e9
+
+
+def roofline_section(model, plan, qm, iters: int = 3) -> dict:
+    """Per-fused-block wall time + achieved-vs-roofline FLOP fraction for the
+    compiled spatial int8 hot path (the ``roofline`` BENCH section rendered
+    by ``benchmarks/roofline_report.py``)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import CompiledSplitExecutor
+    from repro.core.reinterpret import macs_for_positions
+
+    ex = CompiledSplitExecutor(plan, qm)
+    peak = _peak_gflops()
+    entries: dict[str, dict | float] = {}
+    for bi, idxs in enumerate(plan.block_groups):
+        if plan.splits[idxs[0]].mode != "spatial":
+            continue
+        idxs = tuple(idxs)
+        in_shape = model.layers[idxs[0]].in_shape
+        fn = jax.jit(lambda x, i=idxs: ex._block_spatial(i, x, "int8"))
+        x = jnp.zeros(in_shape, jnp.int8)
+        np.asarray(fn(x))                         # compile
+        wall = _time(lambda: np.asarray(fn(x)), iters)
+        macs = sum(macs_for_positions(plan.splits[i].layer, sh.n_positions)
+                   for i in idxs for sh in plan.splits[i].shards)
+        gflops = 2.0 * macs / wall / 1e9
+        entries[f"b{bi:02d}_L{idxs[0]}-{idxs[-1]}"] = dict(
+            layers=list(idxs), wall_s=round(wall, 6), macs=int(macs),
+            gflops=round(gflops, 3),
+            roofline_frac=round(gflops / peak, 5))
+    entries["_peak_gflops"] = round(peak, 2)
+    return entries
+
+
+def compile_section(model, plan, qm, hw: int) -> dict:
+    """Trace/compile cost of the spatial int8 plan, and what the shared
+    executable cache saves on a re-plan with identical geometry: ``cold_s``
+    is construct+warmup from an empty cache, ``cached_s`` the same through a
+    second executor instance (one cache hit, no re-trace)."""
+    from repro.core import CompiledSplitExecutor
+
+    CompiledSplitExecutor.cache_clear()
+    t0 = time.perf_counter()
+    ex = CompiledSplitExecutor(plan, qm)
+    ex.warmup((3, hw, hw), batch=1, mode="int8")
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ex2 = CompiledSplitExecutor(plan, qm)
+    ex2.warmup((3, hw, hw), batch=1, mode="int8")
+    cached = time.perf_counter() - t0
+    stats = CompiledSplitExecutor.cache_stats()
+    return {"spatial_int8_b1": dict(
+        cold_s=round(cold, 6), cached_s=round(cached, 6),
+        cache_hits=stats["hits"], cache_misses=stats["misses"])}
+
+
+def bench_rows(quick: bool = False) -> tuple[list[dict], dict, dict, dict]:
     from repro.api import Session
     from repro.core import (CompiledSplitExecutor, SplitExecutor,
                             calibrate_scales, quantize_model,
@@ -89,6 +162,8 @@ def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
     rng = np.random.default_rng(0)
     rows: list[dict] = []
     peaks: dict[str, dict[str, int]] = {}
+    roofline: dict[str, dict] = {}
+    compile_times: dict[str, dict] = {}
     for name, make_model, hw, iters in _configs(quick):
         model = make_model()
         x = rng.standard_normal((3, hw, hw)).astype(np.float32)
@@ -139,10 +214,36 @@ def bench_rows(quick: bool = False) -> tuple[list[dict], dict]:
                          eager_s=round(per_request_s, 6),
                          compiled_s=round(micro_batched_s, 6),
                          speedup=round(per_request_s / micro_batched_s, 2)))
-    return rows, peaks
+        # observability sections on the spatial int8 hot path
+        roofline[name] = roofline_section(model, plans["spatial"], qm,
+                                          iters=iters)
+        compile_times[name] = compile_section(model, plans["spatial"], qm, hw)
+    return rows, peaks, roofline, compile_times
 
 
-def write_results(rows: list[dict], peaks: dict) -> dict:
+def merge_sections(**sections) -> dict:
+    """Merge per-outer-key updates into named sections of the shared
+    ``BENCH_executor.json`` (read-modify-write: every section not named here
+    survives untouched, and within a named section only the provided keys are
+    replaced — a --quick or single-suite run never erases committed full-model
+    entries).  Shared by this bench, ``kernel_bench`` and ``planner_bench``."""
+    payload: dict = {}
+    if RESULT_PATH.exists():
+        try:
+            payload = json.loads(RESULT_PATH.read_text())
+        except json.JSONDecodeError:
+            payload = {}
+    for name, entries in sections.items():
+        cur = dict(payload.get(name) or {})
+        cur.update(entries)
+        payload[name] = cur
+    RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def write_results(rows: list[dict], peaks: dict,
+                  roofline: dict | None = None,
+                  compile_times: dict | None = None) -> dict:
     import jax
     payload = dict(
         benchmark="executor_eager_vs_compiled",
@@ -152,10 +253,10 @@ def write_results(rows: list[dict], peaks: dict) -> dict:
         peaks=peaks,
     )
     # preserve every section this bench does not own (planner_bench's
-    # planner/transport/mixed — and anything future, so a new shared
-    # section can never be silently erased by this write), and merge peaks
-    # per config so a --quick run doesn't erase the committed full-model
-    # entries
+    # planner/transport/mixed, kernel_bench's kernels — and anything future,
+    # so a new shared section can never be silently erased by this write),
+    # and merge per-config sections so a --quick run doesn't erase the
+    # committed full-model entries
     if RESULT_PATH.exists():
         try:
             old = json.loads(RESULT_PATH.read_text())
@@ -168,13 +269,16 @@ def write_results(rows: list[dict], peaks: dict) -> dict:
         merged_peaks.update(payload["peaks"])
         payload["peaks"] = merged_peaks
     RESULT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    if roofline or compile_times:
+        payload = merge_sections(roofline=roofline or {},
+                                 compile=compile_times or {})
     return payload
 
 
 def bench_executor(quick: bool = False) -> list[tuple]:
     """run.py suite entry: benchmark, persist JSON, return CSV rows."""
-    rows, peaks = bench_rows(quick=quick)
-    write_results(rows, peaks)
+    rows, peaks, roofline, compile_times = bench_rows(quick=quick)
+    write_results(rows, peaks, roofline, compile_times)
     out = []
     for r in rows:
         out.append((f"executor_{r['config']}_{r['split']}_{r['mode']}"
@@ -185,6 +289,11 @@ def bench_executor(quick: bool = False) -> list[tuple]:
         for split, peak in by_mode.items():
             out.append((f"peak_{config}_{split}_kb", peak / 1024.0,
                         "max per-worker peak RAM"))
+    for config, entry in compile_times.items():
+        ct = entry["spatial_int8_b1"]
+        out.append((f"compile_{config}_spatial_int8", ct["cold_s"],
+                    f"cached={ct['cached_s']}s "
+                    f"(executable cache: re-plan skips re-trace)"))
     out.append(("executor_bench_json", 1.0, str(RESULT_PATH.name)))
     return out
 
@@ -194,8 +303,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke config only (CI)")
     args = ap.parse_args()
-    rows, peaks = bench_rows(quick=args.quick)
-    payload = write_results(rows, peaks)
+    rows, peaks, roofline, compile_times = bench_rows(quick=args.quick)
+    payload = write_results(rows, peaks, roofline, compile_times)
     print(json.dumps(payload, indent=2))
 
 

@@ -1,8 +1,22 @@
 """Kernel micro-benchmarks: wall time of the jitted wrappers on this host
 (interpret-mode Pallas on CPU — structural check + ref-path timing; TPU is
-the performance target) plus the analytic FLOP counts used in §Roofline."""
+the performance target) plus the analytic FLOP counts used in §Roofline.
+
+Besides the CSV rows for ``run.py``, each benchmarked kernel writes a
+``kernels`` section entry into the shared ``BENCH_executor.json``:
+
+    {"<kernel>": {"ref_us", "impl_us", "speedup"}}
+
+``speedup`` = ref_us / impl_us, a pure on-host ratio the CI regression gate
+(``check_regression.py --sections ... kernels``) tracks for drift — absolute
+wall times vary across runners, the ratio between two paths timed in the
+same process does not (to within the gate's tolerance).
+
+Run:  PYTHONPATH=src python -m benchmarks.kernel_bench
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -18,9 +32,18 @@ def _time(fn, *args, iters=3, **kw):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_kernels() -> list[tuple]:
+def kernel_section() -> dict[str, dict]:
+    """Time each kernel's reference vs Pallas wrapper and return the
+    ``kernels`` BENCH section (per-kernel merge keys)."""
     rng = np.random.default_rng(0)
-    rows = []
+    section: dict[str, dict] = {}
+
+    def entry(name, ref_us, impl_us, note=""):
+        section[name] = dict(ref_us=round(ref_us, 1),
+                             impl_us=round(impl_us, 1),
+                             speedup=round(ref_us / impl_us, 3))
+        if note:
+            section[name]["note"] = note
 
     from repro.kernels.qgemm.ops import qgemm_padded
     from repro.kernels.qgemm.ref import qgemm_ref
@@ -29,21 +52,34 @@ def bench_kernels() -> list[tuple]:
     w = rng.integers(-127, 128, (k, n)).astype(np.int8)
     s = np.ones(n, np.float32)
     b = np.zeros(n, np.float32)
-    us_ref = _time(qgemm_ref, x, w, s, b)
-    us_pal = _time(qgemm_padded, x, w, s, b)
     flops = 2 * m * k * n
-    rows.append(("qgemm_ref_256", us_ref, f"{flops/us_ref/1e3:.2f}GFLOPs"))
-    rows.append(("qgemm_pallas_interp_256", us_pal, "interpret-mode"))
+    us_ref = _time(qgemm_ref, x, w, s, b)
+    entry("qgemm_256", us_ref, _time(qgemm_padded, x, w, s, b),
+          note=f"ref {flops / us_ref / 1e3:.2f} GFLOP/s")
 
-    from repro.kernels.dwconv.ops import dwconv, dwconv_ref
+    from repro.kernels.dwconv.ops import dwconv, dwconv_bands, dwconv_ref
     c, hw = 96, 56
     xd = rng.integers(-127, 128, (c, hw, hw)).astype(np.int8)
     wd = rng.integers(-127, 128, (c, 3, 3)).astype(np.int8)
     sd = np.ones(c, np.float32)
     bd = np.zeros(c, np.float32)
-    rows.append(("dwconv_ref_96x56", _time(dwconv_ref, xd, wd, sd, bd), ""))
-    rows.append(("dwconv_pallas_interp_96x56", _time(dwconv, xd, wd, sd, bd),
-                 "interpret-mode"))
+    entry("dwconv_96x56", _time(dwconv_ref, xd, wd, sd, bd),
+          _time(dwconv, xd, wd, sd, bd))
+
+    # the fused-band grid (executor hot path): 4 bands of a 56-row map,
+    # pre-gathered windows vs 4 independent single-window reference calls
+    bands, rows_per = 4, 14
+    xb = rng.integers(-127, 128,
+                      (bands, c, rows_per + 2, hw + 2)).astype(np.int8)
+
+    def bands_ref(xb, wd, sd, bd):
+        outs = [dwconv_ref(xb[i, :, 1:-1, 1:-1], wd, sd, bd)
+                for i in range(bands)]
+        return np.stack([np.asarray(o) for o in outs])
+
+    entry("dwconv_bands_4x96x14", _time(bands_ref, xb, wd, sd, bd),
+          _time(dwconv_bands, xb, wd, sd, bd),
+          note="band axis on the Pallas grid: 1 call vs bands dispatches")
 
     from repro.kernels.decode_attn.ops import flash_decode, flash_decode_ref
     B, K, G, HD, S = 2, 8, 5, 128, 2048
@@ -51,8 +87,34 @@ def bench_kernels() -> list[tuple]:
     ck = rng.standard_normal((B, S, K, HD)).astype(np.float32)
     cv = rng.standard_normal((B, S, K, HD)).astype(np.float32)
     lens = np.full(B, S, np.int32)
-    rows.append(("decode_attn_ref_2k", _time(flash_decode_ref, q, ck, cv, lens),
-                 f"cache={ck.nbytes*2/2**20:.0f}MiB"))
-    rows.append(("decode_attn_pallas_interp_2k",
-                 _time(flash_decode, q, ck, cv, lens), "interpret-mode"))
+    entry("decode_attn_2k", _time(flash_decode_ref, q, ck, cv, lens),
+          _time(flash_decode, q, ck, cv, lens),
+          note=f"cache={ck.nbytes * 2 / 2**20:.0f}MiB")
+    return section
+
+
+def bench_kernels() -> list[tuple]:
+    """run.py suite entry: persist the ``kernels`` BENCH section (merged
+    per-kernel into the shared JSON), return CSV rows."""
+    from benchmarks.executor_bench import merge_sections
+
+    section = kernel_section()
+    merge_sections(kernels=section)
+    rows = []
+    for name, e in section.items():
+        rows.append((f"{name}_ref", e["ref_us"], e.get("note", "")))
+        rows.append((f"{name}_pallas", e["impl_us"],
+                     f"speedup={e['speedup']}x vs ref (interpret on CPU)"))
     return rows
+
+
+def main() -> None:
+    from benchmarks.executor_bench import merge_sections
+
+    section = kernel_section()
+    payload = merge_sections(kernels=section)
+    print(json.dumps({"kernels": payload["kernels"]}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,92 +1,113 @@
-"""Render EXPERIMENTS.md tables from the dry-run JSONL results.
+"""Render the per-block roofline report for the compiled spatial int8 path.
+
+Reads the ``roofline`` section of ``BENCH_executor.json`` (written by
+``executor_bench`` — per fused block: wall time, analytic MACs, achieved
+GFLOP/s and the fraction of this host's measured dense-matmul peak) and
+prints a markdown report.  CI uploads the rendered report as a workflow
+artifact; locally it is the first place to look when a block underperforms.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.jsonl
+  PYTHONPATH=src python -m benchmarks.roofline_report [BENCH_executor.json]
+  (or via the suite: python -m benchmarks.run --suites roofline)
 """
 from __future__ import annotations
 
 import json
+import pathlib
 import sys
 
-
-def _fmt_bytes(b):
-    return f"{b/2**30:.2f}"
-
-
-def load(path):
-    with open(path) as f:
-        return [json.loads(line) for line in f]
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_PATH = _REPO_ROOT / "BENCH_executor.json"
 
 
-def dryrun_table(rows) -> str:
-    out = ["| arch | shape | mesh | status | compile s | mem/dev GiB (args+temp) | collectives/dev |",
-           "|---|---|---|---|---|---|---|"]
-    for r in rows:
-        if r["status"] == "skipped":
-            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-                       f"skipped ({r['reason'][:40]}…) | — | — | — |")
-            continue
-        if r["status"] != "ok":
-            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-                       f"FAILED | — | — | {r.get('error','')[:60]} |")
-            continue
-        mem = r["mem"]
-        total = (mem["argument"] + mem["temp"] + mem["output"] - mem["alias"])
-        coll = ", ".join(f"{k.split('-')[-1][:3]}:{v/2**30:.1f}G"
-                         for k, v in sorted(r["coll_bytes"].items()) if v > 2**20)
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
-            f"{r['t_compile_s']:.0f} | {_fmt_bytes(total)} | {coll or '<1MiB'} |")
+def load(path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def _block_items(entries: dict) -> list[tuple[str, dict]]:
+    return sorted((k, v) for k, v in entries.items() if not k.startswith("_"))
+
+
+def config_table(entries: dict) -> str:
+    out = ["| block | layers | wall ms | MMACs | GFLOP/s | roofline frac |",
+           "|---|---|---|---|---|---|"]
+    for key, e in _block_items(entries):
+        layers = e["layers"]
+        span = (f"L{layers[0]}" if len(layers) == 1
+                else f"L{layers[0]}-L{layers[-1]}")
+        out.append(f"| {key} | {span} | {e['wall_s'] * 1e3:.2f} | "
+                   f"{e['macs'] / 1e6:.2f} | {e['gflops']:.2f} | "
+                   f"{e['roofline_frac']:.4f} |")
     return "\n".join(out)
 
 
-def roofline_table(rows) -> str:
-    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
-           "MODEL/HLO flops | roofline frac | one-line diagnosis |",
-           "|---|---|---|---|---|---|---|---|---|"]
-    for r in rows:
-        if r["status"] != "ok":
+def report(payload: dict) -> str:
+    roofline = payload.get("roofline") or {}
+    lines = ["# Per-block roofline — compiled spatial int8 path", ""]
+    if not roofline:
+        lines.append("(no `roofline` section in BENCH_executor.json — run "
+                     "`python -m benchmarks.executor_bench` first)")
+        return "\n".join(lines)
+    lines.append(f"backend: `{payload.get('backend', '?')}`")
+    for config in sorted(roofline):
+        entries = roofline[config]
+        blocks = _block_items(entries)
+        if not blocks:
             continue
-        diag = _diagnose(r)
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
-            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
-            f"{r['bottleneck']} | {r['useful_flops_frac']:.2f} | "
-            f"{r['roofline_frac']:.3f} | {diag} |")
-    return "\n".join(out)
+        peak = entries.get("_peak_gflops")
+        lines += ["", f"## {config}", ""]
+        if peak is not None:
+            lines.append(f"measured host peak (f32 matmul): "
+                         f"{peak:.0f} GFLOP/s")
+            lines.append("")
+        lines.append(config_table(entries))
+        total_wall = sum(e["wall_s"] for _, e in blocks)
+        total_macs = sum(e["macs"] for _, e in blocks)
+        agg = 2.0 * total_macs / total_wall / 1e9
+        worst = min(blocks, key=lambda kv: kv[1]["roofline_frac"])
+        lines += ["",
+                  f"total spatial wall: {total_wall * 1e3:.2f} ms over "
+                  f"{len(blocks)} blocks; aggregate {agg:.2f} GFLOP/s"
+                  + (f" ({agg / peak:.4f} of peak)" if peak else ""),
+                  f"worst block: {worst[0]} "
+                  f"(frac {worst[1]['roofline_frac']:.4f})"]
+    compile_sec = payload.get("compile") or {}
+    if compile_sec:
+        lines += ["", "## Compile cost (spatial int8, batch 1)", "",
+                  "| config | cold s | cached s | cache hits/misses |",
+                  "|---|---|---|---|"]
+        for config in sorted(compile_sec):
+            ct = compile_sec[config].get("spatial_int8_b1")
+            if not ct:
+                continue
+            lines.append(f"| {config} | {ct['cold_s']:.3f} | "
+                         f"{ct['cached_s']:.3f} | "
+                         f"{ct['cache_hits']}/{ct['cache_misses']} |")
+    return "\n".join(lines) + "\n"
 
 
-def _diagnose(r) -> str:
-    b = r["bottleneck"]
-    if r["shape"].startswith("decode") or r["shape"].startswith("long"):
-        if b == "memory":
-            return "cache+weight streaming bound (expected for bs-limited decode)"
-        if b == "collective":
-            return "per-step FSDP weight gathers dominate; widen batch or cache weights"
-    if b == "memory":
-        return "fusion-boundary traffic; bigger fusions / bf16 end-to-end would cut it"
-    if b == "collective":
-        return "SP all-gathers + dk/dv all-reduce; ring-attention or 2D sharding"
-    return "compute-bound: good; push MXU utilization via kernel fusion"
+def bench_roofline() -> list[tuple]:
+    """run.py suite entry: summarize the persisted roofline section as CSV
+    rows (one per config) — the full markdown goes to roofline_report.md."""
+    payload = load(DEFAULT_PATH) if DEFAULT_PATH.exists() else {}
+    out_path = _REPO_ROOT / "roofline_report.md"
+    out_path.write_text(report(payload))
+    rows = []
+    for config, entries in sorted((payload.get("roofline") or {}).items()):
+        blocks = _block_items(entries)
+        if not blocks:
+            continue
+        total_wall = sum(e["wall_s"] for _, e in blocks)
+        worst = min(b[1]["roofline_frac"] for b in blocks)
+        rows.append((f"roofline_{config}_spatial_ms", total_wall * 1e3,
+                     f"{len(blocks)} blocks, worst frac={worst:.4f}"))
+    rows.append(("roofline_report_md", 1.0, str(out_path.name)))
+    return rows
 
 
 def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.jsonl"
-    rows = load(path)
-    print("### Dry-run\n")
-    print(dryrun_table(rows))
-    print("\n### Roofline\n")
-    print(roofline_table(rows))
-    ok = [r for r in rows if r["status"] == "ok"]
-    if ok:
-        worst = min(ok, key=lambda r: r["roofline_frac"])
-        coll = max(ok, key=lambda r: r["t_collective"] /
-                   max(r["t_compute"] + r["t_memory"], 1e-12))
-        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
-              f"({worst['roofline_frac']:.4f})")
-        print(f"most collective-bound: {coll['arch']} x {coll['shape']} "
-              f"(t_coll/t_rest = "
-              f"{coll['t_collective']/max(coll['t_compute']+coll['t_memory'],1e-12):.2f})")
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    print(report(load(path)), end="")
 
 
 if __name__ == "__main__":

@@ -23,10 +23,11 @@ import time
 def build_suites(quick: bool):
     try:
         from . import (executor_bench, kernel_bench, paper_benchmarks as pb,
-                       planner_bench)
+                       planner_bench, roofline_report)
     except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
         import executor_bench, kernel_bench, planner_bench  # noqa: E401
         import paper_benchmarks as pb
+        import roofline_report
     return [
         ("Table I (K1 calibration)", pb.table1_k1),
         ("Table II (allocation strategies)", pb.table2_allocation),
@@ -40,6 +41,9 @@ def build_suites(quick: bool):
          functools.partial(executor_bench.bench_executor, quick=quick)),
         ("Planner (plan-search)",
          functools.partial(planner_bench.bench_planner, quick=quick)),
+        # last: renders the roofline/compile sections the executor bench
+        # just persisted into roofline_report.md (uploaded by CI)
+        ("Roofline (per-block report)", roofline_report.bench_roofline),
     ]
 
 

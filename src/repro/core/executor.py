@@ -49,6 +49,10 @@ Two executors share those semantics:
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import hashlib
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -80,6 +84,50 @@ def _conv_chw(x, w, stride, int8: bool):
         feature_group_count=groups,
         preferred_element_type=jnp.int32 if int8 else jnp.float32)
     return out[0]
+
+
+def _dwconv_bands_int32(x, w, stride):
+    """Depthwise VALID conv on a band stack via kh*kw shifted int32
+    products.  XLA:CPU lowers *integer* grouped convolutions to a scalar
+    loop nest (seconds per call at MobileNet depths — this was the whole
+    spatial int8 hot-path regression); the shifted-product form is pure
+    vectorized elementwise work and bit-identical, since both accumulate
+    the same int32 sum.  Mirrors the Pallas kernel's ``_accum3x3`` but for
+    any kernel size, so the jnp fallback keeps the same trace shape."""
+    b, c, rows, wp = x.shape
+    kh, kw = w.shape[2], w.shape[3]
+    sh, sw = stride
+    oh = (rows - kh) // sh + 1
+    ow = (wp - kw) // sw + 1
+    xi = x.astype(jnp.int32)
+    wi = w.astype(jnp.int32)
+    acc = jnp.zeros((b, c, oh, ow), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            win = jax.lax.slice(
+                xi, (0, 0, i, j),
+                (b, c, i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1),
+                (1, 1, sh, sw))
+            acc = acc + win * wi[:, 0, i, j][None, :, None, None]
+    return acc
+
+
+def _conv_bands(x, w, stride, int8: bool):
+    """x: (bands, Cin, R, Wp) padded band windows; w: (Cout, Cin_g, kh, kw);
+    VALID conv with the band stack as the conv batch axis — one XLA
+    convolution (or shifted-product accumulation for int8 depthwise) for
+    every band of a fused spatial block."""
+    depthwise = w.shape[1] != x.shape[1]
+    if int8 and depthwise:
+        return _dwconv_bands_int32(x, w, stride)
+    lhs = x.astype(jnp.int32 if int8 else jnp.float32)
+    rhs = w.astype(jnp.int32 if int8 else jnp.float32)
+    groups = x.shape[1] if depthwise else 1
+    return jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=stride, padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32 if int8 else jnp.float32)
 
 
 def _avgpool_int8(x_q, in_scale: float, out_scale: float):
@@ -347,6 +395,126 @@ class SplitExecutor:
 # Compiled engine
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class _BandedStage:
+    """Static row-gather geometry of one stage of a fused spatial block in
+    the batched-band layout (all host-side numpy, computed once per block).
+
+    ``src_rows[b, t]`` is the source row feeding window row ``t`` of band
+    ``b`` — a *global* input row for the block's first stage (the one
+    host-side gather per block boundary), a band-local row of the previous
+    stage's output otherwise.  ``mask`` marks which window rows carry real
+    data: everything else (explicit zero padding at the tensor edge, and the
+    fill that equalizes heterogeneous band heights to the common window
+    height) is zeroed in one ``where``.  Rows a band does not own come out of
+    the stage as garbage and are dropped by the next gather (or the final
+    output gather), so a single uniform grid covers every band height."""
+
+    index: int                      # layer index in the model
+    src_rows: np.ndarray            # (bands, R_win) int32, masked-safe
+    mask: np.ndarray                # (bands, 1, R_win, 1) bool
+    r_out: int                      # conv output rows at the common height
+
+
+@dataclasses.dataclass(frozen=True)
+class _BandedBlock:
+    """One fused spatial block compiled to the batched-band schedule: the
+    active band order (concat order == ascending worker id), the per-stage
+    gather geometry, and the static map from global output rows to
+    (band, local row) realizing the final row-axis aggregation as one take."""
+
+    idxs: tuple[int, ...]
+    bands: tuple[int, ...]          # active worker ids, band-stack order
+    stages: tuple[_BandedStage, ...]
+    out_flat: np.ndarray            # (H_out,) int: band * r_out_last + row
+
+
+def _compile_banded_block(model, idxs: tuple[int, ...],
+                          geoms: list[list[SpatialBandGeometry | None]],
+                          ) -> _BandedBlock:
+    """Lower one fused spatial block's per-band geometry into the static
+    batched-band schedule (see :class:`_BandedStage`).  Pure host-side numpy;
+    the traced executor consumes the result as constants."""
+    active = [w for w in range(len(geoms[-1])) if geoms[-1][w] is not None]
+    n_bands = len(active)
+    stages: list[_BandedStage] = []
+    for li, i in enumerate(idxs):
+        layer = model.layers[i]
+        kh, _ = layer.kernel
+        sh, _ = layer.stride
+        win: list[tuple[int, int, int, int]] = []
+        for wk in active:
+            g = geoms[li][wk]
+            if g is None:
+                win.append((0, 0, 0, 0))
+            else:
+                n_src = g.in_hi - g.in_lo
+                win.append((g.pad_top, n_src,
+                            g.pad_top + n_src + g.pad_bot, g.in_lo))
+        # common window height; >= kh so the batched VALID conv is always
+        # well-formed even when every band of an interior stage is empty
+        r_win = max(max((t[2] for t in win), default=0), kh)
+        src = np.zeros((n_bands, r_win), np.int32)
+        mask = np.zeros((n_bands, 1, r_win, 1), bool)
+        for b, (pad_top, n_src, _, in_lo) in enumerate(win):
+            if n_src <= 0:
+                continue
+            t = np.arange(pad_top, pad_top + n_src)
+            # first stage gathers from the block input (global rows); later
+            # stages gather band-local rows of the previous stage's output
+            src[b, t] = (in_lo if li == 0 else 0) + np.arange(n_src)
+            mask[b, 0, t, 0] = True
+        stages.append(_BandedStage(i, src, mask, (r_win - kh) // sh + 1))
+    last = model.layers[idxs[-1]]
+    h_out = last.out_shape[1]
+    out_flat = np.zeros(h_out, np.int32)
+    r_out_last = stages[-1].r_out
+    for b, wk in enumerate(active):
+        g = geoms[-1][wk]
+        out_flat[g.row_lo:g.row_hi] = b * r_out_last + np.arange(g.n_rows)
+    return _BandedBlock(tuple(idxs), tuple(active), tuple(stages), out_flat)
+
+
+def _plan_fingerprint(plan: SplitPlan, qmodel: QuantizedModel | None) -> str:
+    """Content digest of a plan's compiled identity: layer structure, weights
+    (plus quantized constants when present), shard geometry per split, and
+    the fused-block grouping.  Plans with equal fingerprints lower to
+    identical traced functions, so compiled executables can be shared across
+    executor instances (``CompiledSplitExecutor._fn_cache``) — e.g. across a
+    re-plan that reproduced the same :class:`ShardGeometry`."""
+    h = hashlib.sha256()
+
+    def _arr(a) -> None:
+        if a is None:
+            h.update(b"\x00none")
+        else:
+            a = np.ascontiguousarray(a)
+            h.update(str((a.dtype.str, a.shape)).encode())
+            h.update(a.tobytes())
+
+    for lyr in plan.model.layers:
+        h.update(repr((lyr.kind, lyr.in_shape, lyr.out_shape, lyr.kernel,
+                       lyr.stride, lyr.padding, lyr.activation, lyr.save_as,
+                       lyr.residual_from)).encode())
+        _arr(lyr.weight)
+        _arr(lyr.bias)
+    if qmodel is not None:
+        h.update(repr(float(qmodel.input_scale)).encode())
+        for ql in qmodel.layers:
+            _arr(ql.w_q)
+            _arr(ql.b_q)
+            _arr(ql.w_scale)
+            h.update(repr((float(ql.in_scale), float(ql.out_scale))).encode())
+    h.update(repr((plan.mode, plan.block_groups, plan.group_modes)).encode())
+    for sp in plan.splits:
+        if sp.mode == "spatial":
+            h.update(repr([(s.row_lo, s.row_hi, s.in_lo, s.in_hi)
+                           for s in sp.shards]).encode())
+        else:
+            h.update(repr([(s.start, s.stop) for s in sp.shards]).encode())
+    return h.hexdigest()
+
+
 def _kernel_eligible_dwconv(layer: LayerSpec) -> bool:
     """The Pallas dwconv kernel covers exactly MobileNet-style depthwise
     convs: 3x3, SAME padding 1, square stride."""
@@ -396,6 +564,8 @@ class CompiledSplitExecutor:
             i: spatial_band_geometry(sp.layer, sp)
             for i, sp in enumerate(plan.splits) if sp.mode == "spatial"}
         self._int8_cache: dict[int, tuple] = {}
+        self._banded_cache: dict[tuple[int, ...], _BandedBlock] = {}
+        self._fingerprint_cache: str | None = None
         self._save_scale: dict[str, float] = {}
         if qmodel is not None:
             for i, layer in enumerate(plan.model.layers):
@@ -540,83 +710,91 @@ class CompiledSplitExecutor:
         w_q, scale, b_q, out_scale = self._int8_cache[i]
         return jnp.asarray(w_q), jnp.asarray(scale), jnp.asarray(b_q), out_scale
 
-    def _spatial_stage_int8(self, i: int, layer: LayerSpec,
-                            g: SpatialBandGeometry, band, consts):
-        """One int8 band stage: Pallas kernels when enabled (dwconv kernel for
-        eligible 3x3 depthwise, im2col+qgemm for dense conv), else the jnp
-        fallback — identical int32 accumulation and multiply-only epilogue, so
-        all paths agree bit-for-bit with the eager oracle."""
+    def _banded_block(self, idxs: tuple[int, ...]) -> _BandedBlock:
+        key = tuple(idxs)
+        if key not in self._banded_cache:
+            geoms = [self._band_geometry[i] for i in idxs]
+            self._banded_cache[key] = _compile_banded_block(
+                self.plan.model, key, geoms)
+        return self._banded_cache[key]
+
+    def _banded_stage_int8(self, layer: LayerSpec, xw, consts):
+        """One batched-band int8 stage over the gathered windows ``xw``
+        ((bands, C_in, R, W + 2*pw), zero rows in place): the Pallas kernels
+        when enabled — ``dwconv3x3_bands`` puts the band index on the kernel
+        grid; conv stages fold bands into the qgemm M axis via
+        ``im2col_bands`` — else one batched-conv jnp fallback.  Identical
+        int32 accumulation and multiply-only epilogue on every path, so all
+        agree bit-for-bit with the eager oracle."""
         w_q, scale_j, b_j, out_scale = consts
         c_out, _, w_out = layer.out_shape
-        _, pw = layer.padding
         if self.use_pallas and _kernel_eligible_dwconv(layer):
-            from ..kernels.dwconv.ops import dwconv_window
-            xw = jnp.pad(band, ((0, 0), (g.pad_top, g.pad_bot), (1, 1)))
-            return dwconv_window(xw, w_q[:, 0], scale_j, b_j,
-                                 stride=layer.stride[0],
-                                 activation=layer.activation,
-                                 out_scale=out_scale,
-                                 interpret=self.interpret)
+            from ..kernels.dwconv.ops import dwconv_bands
+            return dwconv_bands(xw, w_q[:, 0], scale_j, b_j,
+                                stride=layer.stride[0],
+                                activation=layer.activation,
+                                out_scale=out_scale,
+                                interpret=self.interpret)
         if self.use_pallas and layer.kind == "conv":
-            from ..kernels.qgemm.ops import im2col, qgemm_padded
-            xw = jnp.pad(band, ((0, 0), (g.pad_top, g.pad_bot), (pw, pw)))
-            patches, _ = im2col(xw, layer.kernel, layer.stride, (0, 0))
+            from ..kernels.qgemm.ops import im2col_bands, qgemm_padded
+            patches, (oh, ow) = im2col_bands(xw, layer.kernel, layer.stride)
             w2 = w_q.reshape(c_out, -1).T
             y = qgemm_padded(patches, w2, scale_j, b_j,
                              activation=layer.activation, out_scale=out_scale,
                              interpret=self.interpret)
-            return y.T.reshape(c_out, g.n_rows, w_out)
-        acc = _spatial_stage_acc(layer, g, band, w_q, b_j, int8=True)
+            return y.reshape(xw.shape[0], oh, ow, c_out).transpose(0, 3, 1, 2)
+        acc = _conv_bands(xw, w_q, layer.stride, int8=True)
+        acc = acc + b_j[:, None, None]
         return requantize(acc, scale_j[:, None, None], out_scale,
                           layer.activation)
 
     def _block_spatial(self, idxs: tuple[int, ...], cur, mode: str):
-        """Fused spatial block inside the trace: static band slices in, per-
-        band stage chain (expanded hidden exists only at band size), static
-        row-axis concat out."""
+        """Fused spatial block inside the trace, batched over bands: every
+        stage executes ALL workers' bands as one kernel/conv invocation on a
+        (bands, C, rows, W) stack (heterogeneous band heights zero-filled to
+        the common window height; the expanded hidden still only exists at
+        band size).  The block-boundary halo gather happens once, against the
+        block input; interior stages re-gather band-locally from the previous
+        stage's stack.  One static take aggregates the output rows."""
         model = self.plan.model
-        geoms = [self._band_geometry[i] for i in idxs]
-        # one copy of each replicated weight per layer in the trace, shared
-        # by every worker's band
-        float_consts = None
-        int8_consts = None
-        if mode == "int8":
-            int8_consts = [self._int8_consts(i) for i in idxs]
-        else:
-            float_consts = [
-                (jnp.asarray(model.layers[i].weight),
-                 jnp.asarray(model.layers[i].bias
-                             if model.layers[i].bias is not None
-                             else np.zeros(model.layers[i].out_shape[0],
-                                           np.float32)))
-                for i in idxs]
-        parts = []
-        for w in range(self.plan.n_workers):
-            if geoms[-1][w] is None:
-                continue
-            band = None
-            for li, i in enumerate(idxs):
-                layer = model.layers[i]
-                g = geoms[li][w]
-                if g is None:
-                    # degenerate interior stage (empty band): see the eager
-                    # executor — emit a zero-height band to pad downstream
-                    c_out, _, w_out = layer.out_shape
-                    dt = jnp.int8 if mode == "int8" else jnp.float32
-                    band = jnp.zeros((c_out, 0, w_out), dt)
-                    continue
-                if li == 0:
-                    band = cur[:, g.in_lo:g.in_hi, :]
-                if mode == "int8":
-                    band = self._spatial_stage_int8(i, layer, g, band,
-                                                    int8_consts[li])
-                else:
-                    wt, b = float_consts[li]
-                    acc = _spatial_stage_acc(layer, g, band, wt, b,
-                                             int8=False)
-                    band = apply_activation(acc, layer.activation)
-            parts.append(band)
-        return jnp.concatenate(parts, axis=1)
+        bb = self._banded_block(idxs)
+        n_bands = len(bb.bands)
+        x = None
+        for li, st in enumerate(bb.stages):
+            layer = model.layers[st.index]
+            _, pw = layer.padding
+            if mode == "int8":
+                consts = self._int8_consts(st.index)
+            else:
+                lyr = layer
+                consts = (jnp.asarray(lyr.weight),
+                          jnp.asarray(lyr.bias if lyr.bias is not None
+                                      else np.zeros(lyr.out_shape[0],
+                                                    np.float32)))
+            src = jnp.asarray(st.src_rows)
+            mask = jnp.asarray(st.mask)
+            if li == 0:
+                # the one host-side halo gather per block boundary: band +
+                # halo windows of every worker, straight from the block input
+                xw = jnp.take(cur, src.reshape(-1), axis=1)
+                xw = xw.reshape(cur.shape[0], n_bands, -1, cur.shape[2])
+                xw = xw.transpose(1, 0, 2, 3)
+            else:
+                xw = jnp.take_along_axis(x, src[:, None, :, None], axis=2)
+            xw = jnp.where(mask, xw, jnp.zeros((), xw.dtype))
+            if pw:
+                xw = jnp.pad(xw, ((0, 0), (0, 0), (0, 0), (pw, pw)))
+            if mode == "int8":
+                x = self._banded_stage_int8(layer, xw, consts)
+            else:
+                wt, b = consts
+                acc = _conv_bands(xw, wt, layer.stride, int8=False)
+                acc = acc + b[:, None, None]
+                x = apply_activation(acc, layer.activation)
+        # (bands, C, r_out, W) -> one static row gather aggregates the bands
+        y = x.transpose(1, 0, 2, 3).reshape(
+            x.shape[1], n_bands * x.shape[2], x.shape[3])
+        return jnp.take(y, jnp.asarray(bb.out_flat), axis=1)
 
     # -- plan lowering ------------------------------------------------------
     def _build(self, mode: str):
@@ -656,14 +834,66 @@ class CompiledSplitExecutor:
 
         return fn
 
+    # -- compiled-executable cache ------------------------------------------
+    # Jitted plan functions are shared ACROSS executor instances keyed on the
+    # full static identity of the computation: weights digest + shard/band
+    # geometry + mode + pallas flags.  jax.jit then specializes per batch
+    # bucket under each cached callable, so a re-plan (or Session.warmup)
+    # with unchanged geometry skips re-tracing entirely — the hit/miss
+    # counters make the saved trace cost visible to the bench.
+    _fn_cache: "collections.OrderedDict[tuple, callable]" = \
+        collections.OrderedDict()
+    _fn_cache_max = 64
+    _fn_cache_hits = 0
+    _fn_cache_misses = 0
+
+    @property
+    def fingerprint(self) -> str:
+        """Content digest of everything the traced function closes over:
+        model weights (and quantized constants in int8 plans) plus the full
+        shard/band geometry of the plan.  Two executors with equal
+        fingerprints compute identical functions, so their jitted
+        executables are interchangeable."""
+        if self._fingerprint_cache is None:
+            self._fingerprint_cache = _plan_fingerprint(self.plan, self.qmodel)
+        return self._fingerprint_cache
+
+    @classmethod
+    def cache_stats(cls) -> dict[str, int]:
+        return dict(size=len(cls._fn_cache), hits=cls._fn_cache_hits,
+                    misses=cls._fn_cache_misses)
+
+    @classmethod
+    def cache_clear(cls) -> None:
+        cls._fn_cache.clear()
+        cls._fn_cache_hits = 0
+        cls._fn_cache_misses = 0
+
+    def _cached_fn(self, mode: str, batched: bool):
+        key = (self.fingerprint, mode, batched,
+               self.use_pallas, self.interpret)
+        cls = CompiledSplitExecutor
+        fn = cls._fn_cache.get(key)
+        if fn is None:
+            cls._fn_cache_misses += 1
+            fn = self._build(mode)
+            fn = jax.jit(jax.vmap(fn)) if batched else jax.jit(fn)
+            cls._fn_cache[key] = fn
+            while len(cls._fn_cache) > cls._fn_cache_max:
+                cls._fn_cache.popitem(last=False)
+        else:
+            cls._fn_cache_hits += 1
+            cls._fn_cache.move_to_end(key)
+        return fn
+
     def _fn(self, mode: str):
         if mode not in self._fns:
-            self._fns[mode] = jax.jit(self._build(mode))
+            self._fns[mode] = self._cached_fn(mode, batched=False)
         return self._fns[mode]
 
     def _batch_fn(self, mode: str):
         if mode not in self._batch_fns:
-            self._batch_fns[mode] = jax.jit(jax.vmap(self._build(mode)))
+            self._batch_fns[mode] = self._cached_fn(mode, batched=True)
         return self._batch_fns[mode]
 
     # -- public API ---------------------------------------------------------

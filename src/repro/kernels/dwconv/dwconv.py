@@ -7,6 +7,16 @@ and accumulates the 9 shifted element-wise products in int32 — the whole
 channel tile's activations stay VMEM-resident through the epilogue.
 Channels are independent ("kernel-wise" in the paper's splitting), so the
 channel grid dimension is also the natural TP/split axis.
+
+Two entry points share the kernel body:
+
+* :func:`dwconv3x3` — one (C, H+2, W+2) sample, grid over channel tiles.
+* :func:`dwconv3x3_bands` — a stack of spatial band windows
+  (bands, C, R, W+2): the **band index is a grid axis**, so every band of a
+  fused spatial block executes in a single ``pallas_call`` instead of one
+  dispatch per band (the split-executor hot path).  Rows beyond a band's
+  valid window are zero-filled by the caller and their outputs discarded, so
+  heterogeneous band heights ride one uniform grid.
 """
 from __future__ import annotations
 
@@ -19,12 +29,9 @@ from jax.experimental import pallas as pl
 from ..backend import resolve_interpret
 
 
-def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
-                   *, stride: int, activation: str | None,
-                   out_scale: float | None, int_bias: bool):
-    x = x_ref[...].astype(jnp.int32)              # (bc, H+2, W+2)
-    w = w_ref[...].astype(jnp.int32)              # (bc, 3, 3)
-    oh, ow = o_ref.shape[1], o_ref.shape[2]
+def _accum3x3(x, w, oh: int, ow: int, stride: int):
+    """Sum of the 9 shifted element-wise products in int32.
+    x: (bc, R, W+2) int32; w: (bc, 3, 3) int32 -> (bc, oh, ow) int32."""
     acc = jnp.zeros((x.shape[0], oh, ow), jnp.int32)
     for i in range(3):
         for j in range(3):
@@ -33,24 +40,54 @@ def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
                                j + (ow - 1) * stride + 1),
                 (1, stride, stride))
             acc += window * w[:, i, j][:, None, None]
+    return acc
+
+
+def _epilogue(acc, scale, bias, *, activation: str | None,
+              out_scale: float | None, int_bias: bool, out_dtype):
+    """Fused folded-BN + activation + requantization epilogue on a
+    (bc, oh, ow) int32 accumulator (scale/bias are (bc,))."""
     if int_bias:
         # b_q added in exact int32; float steps are multiplies only so the
         # result is bit-identical to the executors' jnp epilogue (no
         # FMA-contraction sensitivity — see core.quantize).
-        acc = acc + bias_ref[...][:, None, None]
-        y = acc.astype(jnp.float32) * scale_ref[...][:, None, None]
+        acc = acc + bias[:, None, None]
+        y = acc.astype(jnp.float32) * scale[:, None, None]
     else:
-        y = acc.astype(jnp.float32) * scale_ref[...][:, None, None] \
-            + bias_ref[...][:, None, None]
+        y = acc.astype(jnp.float32) * scale[:, None, None] \
+            + bias[:, None, None]
     if activation == "relu":
         y = jnp.maximum(y, 0.0)
     elif activation == "relu6":
         y = jnp.clip(y, 0.0, 6.0)
     if out_scale is not None:
-        o_ref[...] = jnp.clip(jnp.round(y * (1.0 / out_scale)),
-                              -127, 127).astype(jnp.int8)
-    else:
-        o_ref[...] = y.astype(o_ref.dtype)
+        return jnp.clip(jnp.round(y * (1.0 / out_scale)),
+                        -127, 127).astype(jnp.int8)
+    return y.astype(out_dtype)
+
+
+def _dwconv_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
+                   *, stride: int, activation: str | None,
+                   out_scale: float | None, int_bias: bool):
+    x = x_ref[...].astype(jnp.int32)              # (bc, H+2, W+2)
+    w = w_ref[...].astype(jnp.int32)              # (bc, 3, 3)
+    oh, ow = o_ref.shape[1], o_ref.shape[2]
+    acc = _accum3x3(x, w, oh, ow, stride)
+    o_ref[...] = _epilogue(acc, scale_ref[...], bias_ref[...],
+                           activation=activation, out_scale=out_scale,
+                           int_bias=int_bias, out_dtype=o_ref.dtype)
+
+
+def _dwconv_bands_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref,
+                         *, stride: int, activation: str | None,
+                         out_scale: float | None, int_bias: bool):
+    x = x_ref[0].astype(jnp.int32)                # (bc, R, W+2)
+    w = w_ref[...].astype(jnp.int32)              # (bc, 3, 3)
+    oh, ow = o_ref.shape[2], o_ref.shape[3]
+    acc = _accum3x3(x, w, oh, ow, stride)
+    o_ref[0] = _epilogue(acc, scale_ref[...], bias_ref[...],
+                         activation=activation, out_scale=out_scale,
+                         int_bias=int_bias, out_dtype=o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "activation",
@@ -88,3 +125,47 @@ def dwconv3x3(x_pad, w, scale, bias, *, stride: int = 1,
         out_shape=jax.ShapeDtypeStruct((c, oh, ow), out_dtype),
         interpret=interpret,
     )(x_pad, w, scale, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "activation",
+                                             "out_scale", "block_c",
+                                             "interpret"))
+def dwconv3x3_bands(x_win, w, scale, bias, *, stride: int = 1,
+                    activation: str | None = None,
+                    out_scale: float | None = None,
+                    block_c: int = 8, interpret: bool | None = None):
+    """Batched-band 3x3 depthwise conv: ``x_win`` is (bands, C, R, W+2) int8
+    — one pre-gathered row window per spatial band (halo/zero rows and the
+    width pad already in place, shorter bands zero-filled to the common R).
+
+    The band index is the leading **grid axis** (grid = (bands, C//block_c)),
+    so a fused spatial block's depthwise stage is ONE kernel invocation for
+    the whole cluster instead of one dispatch per band.  The per-channel
+    scale/bias epilogue tile is selected by the channel ``program_id``,
+    shared across bands (spatial mode replicates weights).  Weights/scale/
+    bias are (C, 3, 3)/(C,)/(C,) — identical contract to :func:`dwconv3x3`.
+    """
+    interpret = resolve_interpret(interpret)
+    b, c, rp, wp = x_win.shape
+    assert c % block_c == 0
+    oh = (rp - 3) // stride + 1
+    ow = (wp - 3) // stride + 1
+    out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    int_bias = jnp.issubdtype(jnp.asarray(bias).dtype, jnp.integer)
+    kernel = functools.partial(_dwconv_bands_kernel, stride=stride,
+                               activation=activation, out_scale=out_scale,
+                               int_bias=int_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, c // block_c),
+        in_specs=[
+            pl.BlockSpec((1, block_c, rp, wp), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((block_c, 3, 3), lambda bi, ci: (ci, 0, 0)),
+            pl.BlockSpec((block_c,), lambda bi, ci: (ci,)),
+            pl.BlockSpec((block_c,), lambda bi, ci: (ci,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, oh, ow),
+                               lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, oh, ow), out_dtype),
+        interpret=interpret,
+    )(x_win, w, scale, bias)

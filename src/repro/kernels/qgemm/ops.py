@@ -51,6 +51,27 @@ def im2col(x_q, kernel_hw, stride, padding):
     return patches, (oh, ow)
 
 
+def im2col_bands(x_q, kernel_hw, stride):
+    """Batched-band im2col: (bands, C, R, W) pre-padded windows ->
+    (bands*oh*ow, C*kh*kw) patches, band-major.  Folding the band axis into
+    the GEMM M dimension makes the band index part of the qgemm grid — a
+    fused spatial block's conv stage is ONE kernel call for every band, with
+    the shared per-output-channel scale/bias epilogue indexed by the N-tile
+    ``program_id`` exactly as in the single-sample path."""
+    bsz, c, h, w = x_q.shape
+    kh, kw = kernel_hw
+    sh, sw = stride
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    idx_h = (jnp.arange(oh) * sh)[:, None] + jnp.arange(kh)[None, :]
+    idx_w = (jnp.arange(ow) * sw)[:, None] + jnp.arange(kw)[None, :]
+    patches = x_q[:, :, idx_h[:, None, :, None], idx_w[None, :, None, :]]
+    # (B, C, oh, ow, kh, kw) -> (B, oh, ow, C, kh, kw) -> (B*oh*ow, C*kh*kw)
+    patches = patches.transpose(0, 2, 3, 1, 4, 5).reshape(
+        bsz * oh * ow, c * kh * kw)
+    return patches, (oh, ow)
+
+
 def qconv2d(x_q, w_q, scale, bias, *, stride=(1, 1), padding=(0, 0),
             activation=None, out_scale=None, interpret=None):
     """Quantized conv via im2col + qgemm (paper's conv+BN+ReLU6 fused op).

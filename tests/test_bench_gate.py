@@ -285,9 +285,84 @@ class TestRegressionGate:
 
     def test_committed_baseline_selfcompare_passes(self, capsys):
         """The committed baseline must pass the gate against itself (the CI
-        invariant: identical results are never a regression)."""
+        invariant: identical results are never a regression) — including the
+        hot-path invariant, so the committed spatial int8 rows must all show
+        compiled beating eager."""
         baseline = _ROOT / "BENCH_executor.json"
         if not baseline.exists():
             pytest.skip("no committed baseline")
         assert check_regression.main(["--baseline", str(baseline),
                                       "--fresh", str(baseline)]) == 0
+
+
+def _kernels_payload(speedup=1.2, spatial_speedup=2.5):
+    p = _payload(speedup=50.0, speedup2=spatial_speedup)
+    p["kernels"] = {
+        "qgemm_256": dict(ref_us=100.0, impl_us=round(100.0 / speedup, 1),
+                          speedup=speedup),
+        "dwconv_96x56": dict(ref_us=80.0, impl_us=40.0, speedup=2.0),
+    }
+    return p
+
+
+class TestKernelGate:
+    def test_kernel_drift_within_threshold_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", _kernels_payload(speedup=1.2))
+        f = _write(tmp_path, "fresh.json", _kernels_payload(speedup=1.1))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_kernel_geomean_regression_fails(self, tmp_path):
+        """Both kernels drifting >20% drags the geomean below the line."""
+        base = _kernels_payload(speedup=2.0)
+        fresh = _kernels_payload(speedup=1.2)
+        fresh["kernels"]["dwconv_96x56"]["speedup"] = 1.2
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_kernel_collapse_fails_outright(self, tmp_path):
+        """One kernel below half its baseline is a lost path even when the
+        geomean survives."""
+        base = _kernels_payload(speedup=2.0)
+        fresh = _kernels_payload(speedup=0.9)     # < half of 2.0
+        fresh["kernels"]["dwconv_96x56"]["speedup"] = 2.6  # geomean rescued
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_hotpath_invariant_fails_when_spatial_loses(self, tmp_path):
+        """A fresh spatial int8 row with compiled slower than eager fails
+        regardless of the baseline — the fused band schedule must win at
+        every batch size."""
+        b = _write(tmp_path, "base.json",
+                   _kernels_payload(spatial_speedup=0.9))
+        f = _write(tmp_path, "fresh.json",
+                   _kernels_payload(spatial_speedup=0.9))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+        # ...and is out of scope when the kernels section is not selected
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "rows,peaks"]) == 0
+
+    def test_merge_sections_is_per_key(self, tmp_path, monkeypatch):
+        """kernel_bench/executor_bench section writes replace only the keys
+        they produced: other kernels and foreign sections survive."""
+        p = tmp_path / "BENCH_executor.json"
+        p.write_text(json.dumps(dict(
+            rows=[{"config": "x"}],
+            kernels={"qgemm_256": {"speedup": 1.0},
+                     "decode_attn_2k": {"speedup": 3.0}})))
+        monkeypatch.setattr(executor_bench, "RESULT_PATH", p)
+        payload = executor_bench.merge_sections(
+            kernels={"qgemm_256": {"speedup": 2.0}},
+            roofline={"smoke": {"_peak_gflops": 100.0}})
+        on_disk = json.loads(p.read_text())
+        for out in (payload, on_disk):
+            assert out["kernels"]["qgemm_256"] == {"speedup": 2.0}
+            assert out["kernels"]["decode_attn_2k"] == {"speedup": 3.0}
+            assert out["roofline"] == {"smoke": {"_peak_gflops": 100.0}}
+            assert out["rows"] == [{"config": "x"}]
