@@ -25,6 +25,13 @@ a >20% regression:
   score exceeding the best uniform score breaks the mixing invariant
   outright (enabling mixing may never yield a worse plan — the winner is
   the min over a superset of the uniform candidates).
+* ``runtime`` (distributed coordinator + socket workers per
+  {config}@{workers}) — the two machine-independent invariants are gated on
+  the FRESH rows alone: ``bitexact`` (distributed output equals the
+  single-process Session bytes) and ``edges_superset`` (the measured event
+  timeline realizes every dependency edge the pipelined simulator
+  predicts).  ``setup_s`` / ``request_s`` / ``ratio`` are runner wall-clock
+  and only reported.
 * ``kernels`` (per-kernel ref-vs-Pallas micro-bench) — ``speedup`` is a
   ratio of two paths timed in the same process, so it is machine-insensitive
   even though the absolute wall times are not: the 20% line is held on the
@@ -63,7 +70,8 @@ def _row_key(row: dict) -> tuple:
             row["batch"])
 
 
-SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels")
+SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels",
+            "runtime")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -214,6 +222,31 @@ def compare(baseline: dict, fresh: dict, threshold: float,
             failures.append(f"{line} (allowed: {1.0 - threshold:.0%})")
         else:
             print(f"ok {line}")
+    base_rt = baseline.get("runtime", {}) if "runtime" in sections else {}
+    fresh_rt = fresh.get("runtime", {}) if "runtime" in sections else {}
+    for key in sorted(fresh_rt.keys()):
+        f = fresh_rt[key]
+        # both machine-independent: distributed output must equal the
+        # single-process Session bytes, and the measured event timeline must
+        # realize every dependency edge the pipelined simulator predicts
+        for inv in ("bitexact", "edges_superset"):
+            if inv not in f:
+                continue
+            compared += 1
+            if not f[inv]:
+                failures.append(
+                    f"runtime invariant broken {key}: {inv} is False — the "
+                    f"distributed runtime diverged from the "
+                    f"{'Session output' if inv == 'bitexact' else 'pipelined schedule'}")
+            else:
+                print(f"ok runtime {key}/{inv}")
+    for key in sorted(base_rt.keys() & fresh_rt.keys()):
+        b, f = base_rt[key], fresh_rt[key]
+        for metric in ("setup_s", "request_s", "ratio"):
+            if metric in b and metric in f:
+                # wall-clock on the CI runner: informational only
+                print(f"note runtime {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]}, not gated)")
     if "kernels" in sections:
         # machine-independent hot-path invariant on the fresh executor rows:
         # compiled spatial int8 must beat eager at every benched batch size

@@ -1,0 +1,81 @@
+"""Distributed-runtime benchmark: the real asyncio coordinator + socket
+workers vs the single-process Session and the pipelined simulator.
+
+Persists a ``runtime`` section into the shared ``BENCH_executor.json``
+(via ``merge_sections``), keyed ``<config>@<n_workers>``:
+
+* ``setup_s`` — connect + ship shards + per-worker jit warmup (wall time,
+  machine-bound, informational);
+* ``request_s`` — best measured per-request makespan;
+* ``predicted_s`` / ``ratio`` — pipelined-simulator makespan on the paper's
+  MCU ratings and measured/predicted (localhost is not an 11.5 kB/s link,
+  so the ratio is calibration data, never a gate);
+* ``bitexact`` / ``edges_superset`` — the two machine-independent hard
+  invariants ``check_regression.py --sections runtime`` enforces on fresh
+  rows: distributed output equals the Session bytes, and the measured
+  event timeline realizes every dependency edge the simulator predicts.
+
+Run:  PYTHONPATH=src python -m benchmarks.runtime_bench [--quick]
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+
+def runtime_section(quick: bool = False) -> dict:
+    from repro.core.splitting import split_model
+    from repro.models import mobilenet_v2_smoke
+    from repro.runtime import run_distributed
+
+    model = mobilenet_v2_smoke()
+    counts = (2,) if quick else (1, 2, 4)
+    spawn = "inprocess" if quick else "process"
+    section = {}
+    for n in counts:
+        split = split_model(model, np.ones(n), mode="spatial")
+        rep = run_distributed(split, precision="int8", n_requests=2,
+                              spawn=spawn)
+        section[f"mnv2_smoke@{n}"] = dict(
+            n_workers=n,
+            spawn=spawn,
+            setup_s=round(rep.setup_s, 3),
+            request_s=round(rep.makespan_s, 6),
+            predicted_s=round(rep.predicted_s, 6),
+            ratio=round(rep.calibration_ratio, 4),
+            bitexact=bool(rep.bitexact),
+            edges_superset=bool(rep.edges_superset),
+            n_edges=len(rep.measured_edges))
+    return section
+
+
+def bench_runtime(quick: bool = False) -> list[tuple]:
+    """run.py suite entry: persist the ``runtime`` BENCH section, return
+    CSV rows."""
+    from benchmarks.executor_bench import merge_sections
+
+    section = runtime_section(quick)
+    merge_sections(runtime=section)
+    rows = []
+    for key, e in section.items():
+        rows.append((f"runtime_{key}_request_s", e["request_s"],
+                     f"setup={e['setup_s']}s {e['spawn']} "
+                     f"bitexact={e['bitexact']} "
+                     f"edges_superset={e['edges_superset']}"))
+        rows.append((f"runtime_{key}_ratio", e["ratio"],
+                     f"measured/predicted (predicted={e['predicted_s']}s "
+                     f"on MCU ratings; informational)"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.executor_bench import merge_sections
+
+    section = runtime_section()
+    payload = merge_sections(runtime=section)
+    print(json.dumps({"runtime": payload["runtime"]}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

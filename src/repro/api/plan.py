@@ -267,6 +267,13 @@ class Plan:
         plan was built for — weights are never serialized)."""
         return cls.from_dict(json.loads(json_source_text(source)), model)
 
+    def worker_geometry(self) -> list[dict]:
+        """JSON-serializable per-worker shard geometry: what each worker
+        stores and computes, per block group — the payload skeleton the
+        distributed runtime ships at setup (``repro.runtime.shards``)."""
+        from ..runtime.shards import worker_geometry_summary
+        return worker_geometry_summary(self.split)
+
     # -- serving -------------------------------------------------------------
     def compile(self, precision: str = "int8", **session_kwargs):
         """Compile this plan into a serving :class:`repro.api.Session`

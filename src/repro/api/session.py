@@ -209,6 +209,19 @@ class Session:
     def n_pending(self) -> int:
         return len(self._pending)
 
+    # -- distributed serving -------------------------------------------------
+    def distributed(self, **kwargs) -> "object":
+        """A :class:`repro.runtime.Coordinator` over this session's plan and
+        quantization (same qmodel, so distributed output is bit-identical to
+        this session).  Caller drives its async lifecycle::
+
+            async with sess.distributed(spawn="process") as coord:
+                y = await coord.infer(x)
+        """
+        from ..runtime.coordinator import Coordinator
+        return Coordinator(self.split, self.qmodel,
+                           precision=self.precision, **kwargs)
+
     # -- observability -------------------------------------------------------
     def stats(self) -> SessionStats:
         return SessionStats(

@@ -351,6 +351,46 @@ def _boundary_deps(prev_split, split, up_bytes: np.ndarray) -> list[list[int]]:
     return deps
 
 
+def pipelined_dependencies(plan: SplitPlan,
+                           itemsize: int = 1) -> list[list[list[int]]]:
+    """Per segment boundary, per consumer worker: the producer workers whose
+    uploads the consumer's download waits on under the pipelined transport.
+
+    ``result[b][w]`` lists the producers of segment ``b`` (the boundary
+    between segments ``b`` and ``b+1``) that consumer worker ``w`` of segment
+    ``b+1`` depends on — :func:`_boundary_deps` evaluated with the exact
+    upload volumes of the boundary.  This is the public form shared by
+    :func:`_pipelined_timeline` and the real distributed runtime
+    (``repro.runtime.coordinator``), so the simulated and the executed
+    schedule derive their dependency edges from one definition.
+    """
+    segs = _segments(plan)
+    deps: list[list[list[int]]] = []
+    for si in range(1, len(segs)):
+        first = segs[si][0]
+        prev_split = plan.splits[segs[si - 1][-1]]
+        split = plan.splits[first]
+        vol = comm_volume(prev_split, split.layer, split, itemsize=itemsize)
+        deps.append(_boundary_deps(prev_split, split, vol.upload_bytes))
+    return deps
+
+
+def dependency_edges(plan: SplitPlan) -> set[tuple[int, int, int]]:
+    """The pipelined schedule's dependency-edge set, as
+    ``(consumer_segment, consumer_worker, producer_worker)`` triples.
+
+    A download for segment ``s`` on worker ``w`` may not start before
+    producer ``p``'s segment ``s-1`` upload completed.  The measured runtime
+    Timeline must realize a *superset* of these edges (a barrier waits on
+    more producers, never fewer) — the structural half of the
+    measured-vs-predicted validation in ``runtime/validate.py``.
+    """
+    return {(si + 1, w, p)
+            for si, boundary in enumerate(pipelined_dependencies(plan))
+            for w, producers in enumerate(boundary)
+            for p in producers}
+
+
 def _pipelined_timeline(plan: SplitPlan, comp: np.ndarray,
                         down_s: np.ndarray, up_s: np.ndarray,
                         down_b: np.ndarray, up_b: np.ndarray) -> Timeline:

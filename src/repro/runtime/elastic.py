@@ -38,19 +38,25 @@ class ElasticCluster:
 
     def __init__(self, model, workers: list[WorkerParams], k1: float,
                  kc: float, heartbeat_timeout: float = 5.0,
-                 straggler_factor: float = 1.5):
+                 straggler_factor: float = 1.5,
+                 clock=time.monotonic):
         self.model = model
         self.k1, self.kc = k1, kc
         self.timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
-        self.health = [WorkerHealth(p, last_heartbeat=time.monotonic())
+        # injectable clock: timeout policy is testable without sleeping
+        self._clock = clock
+        self.health = [WorkerHealth(p, last_heartbeat=self._clock())
                        for p in workers]
         self._planned_alive: tuple[int, ...] = tuple(range(len(workers)))
         self.plan: SplitPlan = self._replan()
 
     # -- signals ------------------------------------------------------------
     def heartbeat(self, worker: int, now: float | None = None):
-        self.health[worker].last_heartbeat = now or time.monotonic()
+        # `if now is None`, not `now or ...`: t=0.0 is a valid fake-clock
+        # timestamp and must not silently fall through to the real clock
+        self.health[worker].last_heartbeat = (
+            self._clock() if now is None else now)
 
     def report_step_time(self, worker: int, seconds: float, alpha=0.5):
         h = self.health[worker]
@@ -63,7 +69,7 @@ class ElasticCluster:
     # -- policy ---------------------------------------------------------------
     def check(self, now: float | None = None) -> bool:
         """Apply failure + straggler policy; returns True if the plan changed."""
-        now = now or time.monotonic()
+        now = self._clock() if now is None else now
         changed = tuple(self.alive_indices) != self._planned_alive
         for h in self.health:
             if h.alive and now - h.last_heartbeat > self.timeout:

@@ -1,0 +1,454 @@
+"""Per-worker shard payloads and segment compilation for the distributed
+runtime.
+
+Three host-side views of one :class:`~repro.core.splitting.SplitPlan` live
+here, all derived from the same compiled geometry the single-process
+executors use (``mapping.compile_shard_geometry`` /
+``splitting.spatial_band_geometry``):
+
+* :func:`build_worker_setup` — the setup frame shipped to one worker at
+  attach time: plain-JSON segment specs plus the weight fragments (int8
+  ``w_q`` / int32 epilogue bias / f32 scale in int8 mode, f32 weights in
+  float mode).  A worker only ever receives the fragments its own shards
+  touch (spatial bands replicate full block weights, exactly as the plan's
+  ``weight_bytes`` accounting says).
+
+* :func:`build_segment_fns` — the worker-side half: lower each received
+  segment spec into one ``jax.jit``-ed function over the routed input slice.
+  The traced bodies are the *same primitives* the single-process executors
+  run (``_conv_chw``/``_spatial_stage_acc`` accumulation, multiply-only
+  ``requantize`` epilogue), so distributed int8 output is bit-identical to
+  the eager oracle and the compiled ``Session`` — the runtime's correctness
+  contract.
+
+* :func:`build_coordinator_plan` — the coordinator-side routing table: per
+  block group, which workers are active, how to slice the current activation
+  into each worker's download, how to place uploads back into the output
+  buffer (row bands / flat ranges), the residual/stash bookkeeping that
+  stays coordinator-side (Alg. 4 line 9), and the boundary dependency
+  structure (exact ``pipelined_dependencies`` row-overlap deps for clean
+  spatial seams, a barrier everywhere else) realized by the per-link queues
+  in ``runtime.coordinator``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.executor import _conv_chw
+from ..core.fusion import apply_activation
+from ..core.mapping import compile_shard_geometry
+from ..core.quantize import QuantizedModel, epilogue_params, requantize
+from ..core.simulator import _segments, pipelined_dependencies
+from ..core.splitting import SplitPlan, spatial_band_geometry
+
+PRECISIONS = ("int8", "float")
+
+
+def _check_precision(precision: str) -> bool:
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(want one of {PRECISIONS})")
+    return precision == "int8"
+
+
+def _layer_consts(layer, ql, int8: bool):
+    """(weight, bias, scale) arrays for one layer in the wire layout."""
+    if int8:
+        scale, b_q = epilogue_params(ql)
+        return ql.w_q, b_q, scale
+    bias = (layer.bias if layer.bias is not None
+            else np.zeros(layer.out_shape[0], np.float32))
+    return np.asarray(layer.weight, np.float32), \
+        np.asarray(bias, np.float32), None
+
+
+# ---------------------------------------------------------------------------
+# Worker setup payloads
+# ---------------------------------------------------------------------------
+
+def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
+                       precision: str, worker: int) -> tuple[dict, dict]:
+    """The setup frame for one worker: ``(meta, arrays)``.
+
+    ``meta["segments"]`` has one spec per block group of the plan, in group
+    order; groups where this worker computes nothing (empty shard,
+    coordinator-local layers) are ``{"kind": "skip"}``.  Arrays are keyed
+    ``w{gi}_{li}`` / ``b{gi}_{li}`` / ``s{gi}_{li}`` (weight / bias /
+    epilogue scale; flat groups drop the ``_li``).
+    """
+    int8 = _check_precision(precision)
+    if int8 and qmodel is None:
+        raise ValueError("precision='int8' requires a QuantizedModel")
+    model = split.model
+    segments: list[dict] = []
+    arrays: dict[str, np.ndarray] = {}
+    for gi, idxs in enumerate(split.block_groups):
+        sp0 = split.splits[idxs[0]]
+        if sp0.mode == "spatial":
+            geoms = [spatial_band_geometry(split.splits[i].layer,
+                                           split.splits[i]) for i in idxs]
+            if geoms[-1][worker] is None:
+                segments.append({"gi": gi, "kind": "skip"})
+                continue
+            g0 = geoms[0][worker]
+            first_layer = model.layers[idxs[0]]
+            in_rows = (g0.in_hi - g0.in_lo) if g0 is not None else 0
+            stages: list[dict] = []
+            for li, i in enumerate(idxs):
+                layer = model.layers[i]
+                g = geoms[li][worker]
+                if g is None:
+                    # degenerate interior stage (zero-height band): the next
+                    # stage pads the empty band up to its window, exactly as
+                    # the eager oracle's _run_block_spatial does
+                    stages.append({"empty": True,
+                                   "out_channels": layer.out_shape[0],
+                                   "out_width": layer.out_shape[2]})
+                    continue
+                ql = qmodel.layers[i] if int8 else None
+                w, b, s = _layer_consts(layer, ql, int8)
+                arrays[f"w{gi}_{li}"] = w
+                arrays[f"b{gi}_{li}"] = b
+                stage = {"layer": i, "stride": list(layer.stride),
+                         "pw": layer.padding[1],
+                         "pad_top": g.pad_top, "pad_bot": g.pad_bot,
+                         "activation": layer.activation}
+                if int8:
+                    arrays[f"s{gi}_{li}"] = s
+                    stage["out_scale"] = float(ql.out_scale)
+                stages.append(stage)
+            segments.append({"gi": gi, "kind": "spatial",
+                             "layer_first": idxs[0],
+                             "in_shape": [first_layer.in_shape[0], in_rows,
+                                          first_layer.in_shape[2]],
+                             "stages": stages})
+            continue
+        # flat group: singleton layer (conv/dwconv/linear shard, or
+        # coordinator-local avgpool)
+        (i,) = idxs
+        layer = model.layers[i]
+        shard = sp0.shard_of(worker)
+        if layer.kind == "avgpool" or shard.n_positions == 0:
+            segments.append({"gi": gi, "kind": "skip"})
+            continue
+        ql = qmodel.layers[i] if int8 else None
+        w, b, s = _layer_consts(layer, ql, int8)
+        if layer.kind == "linear":
+            sl, e = shard.start, shard.stop
+            arrays[f"w{gi}"] = w[:, sl:e]
+            arrays[f"b{gi}"] = b[sl:e]
+            spec = {"gi": gi, "kind": "linear", "layer_first": i,
+                    "in_len": int(np.prod(layer.in_shape)),
+                    "activation": layer.activation}
+            if int8:
+                arrays[f"s{gi}"] = s[sl:e]
+                spec["out_scale"] = float(ql.out_scale)
+            segments.append(spec)
+            continue
+        geom = compile_shard_geometry(layer, sp0)[worker]
+        assert geom is not None
+        ph, pw = layer.padding
+        c_in = layer.in_shape[0]
+        n_ch_in = (geom.n_channels if layer.kind == "dwconv" else c_in)
+        arrays[f"w{gi}"] = w[geom.c_lo:geom.c_hi + 1]
+        arrays[f"b{gi}"] = b[geom.c_lo:geom.c_hi + 1]
+        spec = {"gi": gi, "kind": "conv", "layer_first": i,
+                "stride": list(layer.stride),
+                "in_shape": [n_ch_in, geom.in_r1 - geom.in_r0,
+                             layer.in_shape[2] + 2 * pw],
+                "bbox_start": int(geom.bbox_start),
+                "n_positions": int(geom.n_positions),
+                "activation": layer.activation}
+        if int8:
+            # per-position epilogue scale over the shard's flat range — the
+            # eager oracle requantizes the concatenated accumulator with
+            # scale[flat_idx // hw]; requantization is elementwise, so each
+            # worker applying its own slice commutes with the concat
+            hw = layer.out_shape[1] * layer.out_shape[2]
+            idx = np.arange(shard.start, shard.stop)
+            arrays[f"s{gi}"] = s[idx // hw]
+            spec["out_scale"] = float(ql.out_scale)
+        segments.append(spec)
+    meta = {"precision": precision, "segments": segments}
+    if int8:
+        meta["input_scale"] = float(qmodel.input_scale)
+    return meta, arrays
+
+
+# ---------------------------------------------------------------------------
+# Worker-side segment compilation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledSegment:
+    """One jitted per-segment function on the worker."""
+
+    gi: int
+    layer_first: int
+    input_shape: tuple[int, ...]
+    fn: "object"                    # jitted callable, input slice -> output
+
+    def warmup(self, dtype) -> None:
+        np.asarray(self.fn(np.zeros(self.input_shape, dtype)))
+
+
+def build_segment_fns(meta: dict, arrays: dict[str, np.ndarray],
+                      ) -> dict[int, CompiledSegment]:
+    """Lower a setup payload into jitted segment functions (worker side).
+
+    Each function's body is the same accumulation + epilogue the
+    single-process executors trace, restricted to this worker's geometry.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    int8 = _check_precision(meta["precision"])
+    out: dict[int, CompiledSegment] = {}
+    for spec in meta["segments"]:
+        if spec["kind"] == "skip":
+            continue
+        gi = spec["gi"]
+        if spec["kind"] == "spatial":
+            stages = spec["stages"]
+
+            def make_spatial(gi=gi, stages=stages):
+                consts = []
+                for li, st in enumerate(stages):
+                    if st.get("empty"):
+                        consts.append(None)
+                        continue
+                    consts.append((jnp.asarray(arrays[f"w{gi}_{li}"]),
+                                   jnp.asarray(arrays[f"b{gi}_{li}"]),
+                                   jnp.asarray(arrays[f"s{gi}_{li}"])
+                                   if int8 else None))
+
+                def fn(band):
+                    for li, st in enumerate(stages):
+                        if st.get("empty"):
+                            dt = jnp.int8 if int8 else jnp.float32
+                            band = jnp.zeros((st["out_channels"], 0,
+                                              st["out_width"]), dt)
+                            continue
+                        w, b, s = consts[li]
+                        x = jnp.pad(band, ((0, 0),
+                                           (st["pad_top"], st["pad_bot"]),
+                                           (st["pw"], st["pw"])))
+                        acc = _conv_chw(x, w, tuple(st["stride"]), int8)
+                        acc = acc + b[:, None, None]
+                        if int8:
+                            band = requantize(acc, s[:, None, None],
+                                              st["out_scale"],
+                                              st["activation"])
+                        else:
+                            band = apply_activation(acc, st["activation"])
+                    return band
+                return fn
+
+            body = make_spatial()
+        elif spec["kind"] == "conv":
+            def make_conv(gi=gi, spec=spec):
+                w = jnp.asarray(arrays[f"w{gi}"])
+                b = jnp.asarray(arrays[f"b{gi}"])
+                s = jnp.asarray(arrays[f"s{gi}"]) if int8 else None
+                stride = tuple(spec["stride"])
+                o, n = spec["bbox_start"], spec["n_positions"]
+
+                def fn(x):
+                    acc = _conv_chw(x, w, stride, int8)
+                    acc = acc + b[:, None, None]
+                    flat = acc.reshape(-1)[o:o + n]
+                    if int8:
+                        return requantize(flat, s, spec["out_scale"],
+                                          spec["activation"])
+                    return apply_activation(flat, spec["activation"])
+                return fn
+
+            body = make_conv()
+        elif spec["kind"] == "linear":
+            def make_linear(gi=gi, spec=spec):
+                w = jnp.asarray(arrays[f"w{gi}"])
+                b = jnp.asarray(arrays[f"b{gi}"])
+                s = jnp.asarray(arrays[f"s{gi}"]) if int8 else None
+
+                def fn(x):
+                    xv = x.reshape(-1)
+                    if int8:
+                        acc = xv.astype(jnp.int32) @ w.astype(jnp.int32) + b
+                        return requantize(acc, s, spec["out_scale"],
+                                          spec["activation"])
+                    acc = xv.astype(jnp.float32) @ w + b
+                    return apply_activation(acc, spec["activation"])
+                return fn
+
+            body = make_linear()
+            spec = dict(spec, in_shape=[spec["in_len"]])
+        else:
+            raise ValueError(f"unknown segment kind {spec['kind']!r}")
+        out[gi] = CompiledSegment(gi=gi, layer_first=spec["layer_first"],
+                                  input_shape=tuple(spec["in_shape"]),
+                                  fn=jax.jit(body))
+    return out
+
+
+def warmup_segments(segments: dict[int, CompiledSegment],
+                    precision: str) -> float:
+    """Compile every segment function ahead of serving; returns seconds."""
+    dtype = np.int8 if precision == "int8" else np.float32
+    t0 = time.monotonic()
+    for seg in segments.values():
+        seg.warmup(dtype)
+    return time.monotonic() - t0
+
+
+# ---------------------------------------------------------------------------
+# Coordinator routing plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GroupPlan:
+    """Routing/bookkeeping for one block group on the coordinator."""
+
+    gi: int
+    idxs: tuple[int, ...]
+    kind: str                       # "spatial" | "flat" | "local"
+    layer_first: int
+    in_shape: tuple[int, ...]       # first layer's input shape
+    out_shape: tuple[int, ...]
+    actives: tuple[int, ...]        # workers with nonempty shards
+    downloads: dict[int, dict]      # worker -> slice spec
+    assembly: dict[int, dict]       # worker -> placement spec
+    residual_from: str | None = None
+    save_as: str | None = None
+    out_scale: float | None = None  # last layer's activation scale (int8)
+    local: tuple | None = None      # ("avgpool", in_scale, out_scale)
+    # boundary (gi-1 -> gi) structure: ``deps[w]`` is the simulator's
+    # predicted producer set for consumer worker w (``_boundary_deps``
+    # evaluated at this seam; None for the input boundary gi == 0).  When
+    # ``clean`` the coordinator's per-worker feed awaits exactly those
+    # producers' band events; otherwise it barriers on the previous group's
+    # completion — which happens-after every producer, so each predicted
+    # edge is realized either way (the fine-grained path just waits on less).
+    deps: list[list[int]] | None = None
+    clean: bool = False
+
+
+@dataclasses.dataclass
+class CoordinatorPlan:
+    precision: str
+    groups: list[GroupPlan]
+    input_scale: float | None = None
+
+
+def build_coordinator_plan(split: SplitPlan, qmodel: QuantizedModel | None,
+                           precision: str) -> CoordinatorPlan:
+    int8 = _check_precision(precision)
+    if int8 and qmodel is None:
+        raise ValueError("precision='int8' requires a QuantizedModel")
+    model = split.model
+    groups: list[GroupPlan] = []
+    segs = _segments(split)
+    assert list(segs) == list(split.block_groups), \
+        "simulator segments must coincide with executor block groups"
+    all_deps = pipelined_dependencies(split)
+    modes = split.group_modes
+    for gi, idxs in enumerate(split.block_groups):
+        sp0 = split.splits[idxs[0]]
+        last = model.layers[idxs[-1]]
+        first = model.layers[idxs[0]]
+        out_scale = float(qmodel.layers[idxs[-1]].out_scale) if int8 else None
+        downloads: dict[int, dict] = {}
+        assembly: dict[int, dict] = {}
+        local = None
+        if sp0.mode == "spatial":
+            kind = "spatial"
+            geoms_first = spatial_band_geometry(first, sp0)
+            sp_last = split.splits[idxs[-1]]
+            geoms_last = spatial_band_geometry(last, sp_last)
+            actives = tuple(w for w in range(split.n_workers)
+                            if geoms_last[w] is not None)
+            for w in actives:
+                g0 = geoms_first[w]
+                lo, hi = (g0.in_lo, g0.in_hi) if g0 is not None else (0, 0)
+                downloads[w] = {"kind": "rows", "lo": lo, "hi": hi}
+                gl = geoms_last[w]
+                assembly[w] = {"kind": "rows", "lo": gl.row_lo,
+                               "hi": gl.row_hi}
+        elif last.kind == "avgpool":
+            kind = "local"
+            actives = ()
+            if int8:
+                ql = qmodel.layers[idxs[-1]]
+                local = ("avgpool", float(ql.in_scale), float(ql.out_scale))
+            else:
+                local = ("avgpool", None, None)
+        else:
+            kind = "flat"
+            actives = tuple(s.worker for s in sp0.shards if s.n_positions)
+            geom = (compile_shard_geometry(first, sp0)
+                    if first.kind in ("conv", "dwconv") else None)
+            for w in actives:
+                shard = sp0.shard_of(w)
+                if first.kind == "linear":
+                    downloads[w] = {"kind": "full"}
+                else:
+                    g = geom[w]
+                    downloads[w] = {
+                        "kind": "conv", "r0": g.in_r0, "r1": g.in_r1,
+                        "ph": first.padding[0], "pw": first.padding[1],
+                        "c_lo": (g.c_lo if first.kind == "dwconv" else None),
+                        "c_hi1": (g.c_hi + 1 if first.kind == "dwconv"
+                                  else None)}
+                assembly[w] = {"kind": "flat", "start": shard.start,
+                               "stop": shard.stop}
+        # boundary structure gi-1 -> gi
+        deps = None
+        clean = False
+        if gi > 0:
+            prev_last = model.layers[split.block_groups[gi - 1][-1]]
+            deps = all_deps[gi - 1]
+            clean = (modes[gi - 1] == "spatial" and kind == "spatial"
+                     and prev_last.residual_from is None
+                     and prev_last.save_as is None)
+        groups.append(GroupPlan(
+            gi=gi, idxs=tuple(idxs), kind=kind, layer_first=idxs[0],
+            in_shape=tuple(first.in_shape), out_shape=tuple(last.out_shape),
+            actives=actives, downloads=downloads, assembly=assembly,
+            residual_from=last.residual_from, save_as=last.save_as,
+            out_scale=out_scale, local=local, deps=deps, clean=clean))
+    return CoordinatorPlan(
+        precision=precision, groups=groups,
+        input_scale=float(qmodel.input_scale) if int8 else None)
+
+
+def worker_geometry_summary(split: SplitPlan) -> list[dict]:
+    """JSON-serializable per-worker geometry: what each worker holds and
+    computes, per block group — the serialized form ``Plan.worker_geometry``
+    exposes and the distributed example reports."""
+    model = split.model
+    out: list[dict] = []
+    for w in range(split.n_workers):
+        segs: list[dict] = []
+        for gi, idxs in enumerate(split.block_groups):
+            sp0 = split.splits[idxs[0]]
+            if sp0.mode == "spatial":
+                sp_last = split.splits[idxs[-1]]
+                g = spatial_band_geometry(model.layers[idxs[-1]], sp_last)[w]
+                if g is None:
+                    continue
+                segs.append({"segment": gi, "mode": "spatial",
+                             "layers": list(idxs),
+                             "rows": [g.row_lo, g.row_hi]})
+            else:
+                shard = sp0.shard_of(w)
+                if not shard.n_positions:
+                    continue
+                segs.append({"segment": gi, "mode": sp0.mode,
+                             "layers": list(idxs),
+                             "flat_range": [shard.start, shard.stop]})
+        out.append({"worker": w,
+                    "weight_bytes": int(split.worker_weight_bytes(w)),
+                    "segments": segs})
+    return out

@@ -1,0 +1,114 @@
+"""ElasticCluster policy tests under an injected fake clock.
+
+The clock callable makes the heartbeat-timeout logic testable without
+sleeping (ISSUE 7 bugfix): time is advanced explicitly, including the
+previously-broken ``now=0.0`` case that the old ``now or time.monotonic()``
+expression silently replaced with wall-clock time.
+"""
+import numpy as np
+import pytest
+
+from conftest import small_cnn
+from repro.core.allocation import WorkerParams
+from repro.runtime.elastic import ElasticCluster
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def cluster(n=3, timeout=5.0, clock=None, **kw):
+    clock = clock or FakeClock()
+    c = ElasticCluster(small_cnn(), [WorkerParams() for _ in range(n)],
+                       k1=1.0, kc=1.0, heartbeat_timeout=timeout,
+                       clock=clock, **kw)
+    return c, clock
+
+
+class TestClockInjection:
+    def test_initial_heartbeats_use_injected_clock(self):
+        c, clk = cluster(clock=FakeClock(42.0))
+        assert all(h.last_heartbeat == 42.0 for h in c.health)
+
+    def test_heartbeat_at_time_zero_is_respected(self):
+        # regression: `now or clock()` treated now=0.0 as unset
+        c, clk = cluster(clock=FakeClock(100.0))
+        c.heartbeat(1, now=0.0)
+        assert c.health[1].last_heartbeat == 0.0
+
+    def test_heartbeat_default_reads_clock(self):
+        c, clk = cluster()
+        clk.t = 7.5
+        c.heartbeat(0)
+        assert c.health[0].last_heartbeat == 7.5
+
+
+class TestDropPath:
+    def test_silent_worker_dropped_and_replanned(self):
+        c, clk = cluster(n=3, timeout=5.0)
+        old_plan = c.plan
+        clk.t = 4.0
+        c.heartbeat(0)
+        c.heartbeat(2)
+        clk.t = 6.0                     # worker 1 silent since t=0
+        assert c.check() is True
+        assert c.alive_indices == [0, 2]
+        assert c.plan is not old_plan
+        assert c.plan.n_workers == 2
+
+    def test_fresh_heartbeats_keep_everyone(self):
+        c, clk = cluster(n=3, timeout=5.0)
+        clk.t = 4.9
+        for w in range(3):
+            c.heartbeat(w)
+        clk.t = 5.5
+        assert c.check() is False
+        assert c.alive_indices == [0, 1, 2]
+
+    def test_check_accepts_explicit_now(self):
+        c, clk = cluster(n=2, timeout=5.0)
+        assert c.check(now=4.0) is False
+        c.heartbeat(0, now=99.0)
+        assert c.check(now=100.0) is True
+        assert c.alive_indices == [0]
+        assert c.plan.n_workers == 1
+
+    def test_all_dead_raises(self):
+        c, clk = cluster(n=2, timeout=5.0)
+        clk.t = 50.0
+        with pytest.raises(RuntimeError, match="no surviving workers"):
+            c.check()
+
+
+class TestDemotionPath:
+    def test_straggler_demoted(self):
+        c, clk = cluster(n=3, timeout=1e9, straggler_factor=1.5)
+        f0 = c.health[2].params.f_mhz
+        for _ in range(4):
+            c.report_step_time(0, 1.0)
+            c.report_step_time(1, 1.0)
+            c.report_step_time(2, 10.0)  # 10x the median
+        assert c.check() is True
+        assert c.health[2].params.f_mhz < f0 / 2
+        assert c.health[2].ema_step_time is None   # reset after demotion
+        # demoted worker gets a smaller share in the new plan
+        shares = [c.plan.worker_weight_bytes(w) for w in range(3)]
+        assert shares[2] < shares[0]
+
+    def test_balanced_workers_not_demoted(self):
+        c, clk = cluster(n=3, timeout=1e9, straggler_factor=1.5)
+        for w in range(3):
+            c.report_step_time(w, 1.0)
+        assert c.check() is False
+        assert all(h.params.f_mhz == WorkerParams().f_mhz
+                   for h in c.health)
+
+    def test_mark_failed_triggers_replan_on_check(self):
+        c, clk = cluster(n=3)
+        c.mark_failed(1)
+        assert c.check(now=0.1) is True
+        assert c.alive_indices == [0, 2]

@@ -1,0 +1,146 @@
+"""Frame-protocol unit tests: round-trip fidelity and corruption handling.
+
+Stream-level cases run against a hand-fed ``asyncio.StreamReader`` — no
+sockets needed — and every async body runs under an outer ``wait_for`` so a
+protocol bug can never hang the suite.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.runtime.protocol import (MAX_FRAME_BYTES, ConnectionClosed,
+                                    ProtocolError, decode_body, encode_frame,
+                                    read_frame)
+
+TIMEOUT = 30
+
+
+def run(coro):
+    return asyncio.run(asyncio.wait_for(coro, TIMEOUT))
+
+
+def roundtrip(ftype, meta=None, arrays=None):
+    body = encode_frame(ftype, meta, arrays)[4:]
+    return decode_body(body)
+
+
+class TestRoundTrip:
+    def test_meta_and_type(self):
+        t, meta, arrays = roundtrip("hello", {"worker": 3, "x": [1, 2]})
+        assert t == "hello"
+        assert meta == {"worker": 3, "x": [1, 2]}
+        assert arrays == {}
+
+    @pytest.mark.parametrize("dtype", [np.int8, np.int32, np.float32])
+    def test_array_dtypes(self, dtype, rng):
+        a = (rng.standard_normal((3, 4, 5)) * 50).astype(dtype)
+        _, _, arrays = roundtrip("m", None, {"a": a})
+        assert arrays["a"].dtype == a.dtype
+        np.testing.assert_array_equal(arrays["a"], a)
+
+    def test_multiple_arrays_keep_order_and_values(self, rng):
+        arrs = {"w": rng.standard_normal((2, 3)).astype(np.float32),
+                "b": np.arange(7, dtype=np.int32),
+                "empty": np.zeros((4, 0, 3), np.int8)}
+        _, _, out = roundtrip("setup", {"k": 1}, arrs)
+        assert list(out) == ["w", "b", "empty"]
+        for k in arrs:
+            np.testing.assert_array_equal(out[k], arrs[k])
+            assert out[k].shape == arrs[k].shape
+
+    def test_noncontiguous_input(self, rng):
+        a = rng.standard_normal((6, 6)).astype(np.float32)[::2, 1:]
+        _, _, out = roundtrip("m", None, {"a": a})
+        np.testing.assert_array_equal(out["a"], a)
+
+
+class TestCorruption:
+    def test_trailing_bytes_rejected(self):
+        body = encode_frame("m", None, {"a": np.zeros(3, np.int8)})[4:]
+        with pytest.raises(ProtocolError, match="trailing"):
+            decode_body(body + b"xx")
+
+    def test_header_overrun(self):
+        with pytest.raises(ProtocolError, match="overruns"):
+            decode_body(b"\xff\xff\x00\x00tiny")
+
+    def test_array_payload_truncated(self):
+        body = bytearray(encode_frame("m", None,
+                                      {"a": np.zeros(8, np.int8)})[4:])
+        with pytest.raises(ProtocolError, match="overruns the frame body"):
+            decode_body(bytes(body[:-4]))
+
+    def test_element_size_mismatch(self):
+        # header claims f32 but ships 3 bytes
+        import json
+        import struct
+        header = json.dumps({"type": "m", "meta": {},
+                             "arrays": [["a", "<f4", [3], 3]]}).encode()
+        body = struct.pack("<I", len(header)) + header + b"abc"
+        with pytest.raises(ProtocolError, match="element"):
+            decode_body(body)
+
+    def test_undecodable_header(self):
+        import struct
+        body = struct.pack("<I", 7) + b"notjson"
+        with pytest.raises(ProtocolError, match="undecodable"):
+            decode_body(body)
+
+    def test_oversize_frame_rejected_at_encode(self):
+        class Huge:
+            pass
+        with pytest.raises(ProtocolError, match="exceeds"):
+            # fake the size check without allocating a gigabyte
+            big = np.lib.stride_tricks.as_strided(
+                np.zeros(1, np.int8), shape=(MAX_FRAME_BYTES + 1,),
+                strides=(0,))
+            encode_frame("m", None, {"a": big})
+
+
+class TestStream:
+    @staticmethod
+    def _reader(data: bytes, eof: bool = True) -> asyncio.StreamReader:
+        r = asyncio.StreamReader()
+        r.feed_data(data)
+        if eof:
+            r.feed_eof()
+        return r
+
+    def test_read_frame_roundtrip(self, rng):
+        a = (rng.standard_normal(10) * 9).astype(np.int8)
+
+        async def main():
+            wire = encode_frame("result", {"seq": 1}, {"y": a})
+            f = await read_frame(self._reader(wire))
+            assert f.type == "result" and f.meta == {"seq": 1}
+            np.testing.assert_array_equal(f.arrays["y"], a)
+            assert f.nbytes == len(wire)
+            assert f.recv_end >= f.recv_start > 0
+        run(main())
+
+    def test_eof_on_boundary_is_connection_closed(self):
+        async def main():
+            with pytest.raises(ConnectionClosed):
+                await read_frame(self._reader(b""))
+        run(main())
+
+    def test_truncated_body_is_protocol_error(self):
+        async def main():
+            wire = encode_frame("m", {"k": 1}, {"a": np.zeros(64, np.int8)})
+            with pytest.raises(ProtocolError, match="truncated frame"):
+                await read_frame(self._reader(wire[:len(wire) // 2]))
+        run(main())
+
+    def test_truncated_length_prefix_is_protocol_error(self):
+        async def main():
+            with pytest.raises(ProtocolError, match="length-prefix"):
+                await read_frame(self._reader(b"\x01\x02"))
+        run(main())
+
+    def test_corrupt_length_prefix_rejected_before_alloc(self):
+        async def main():
+            with pytest.raises(ProtocolError, match="corrupt length"):
+                await read_frame(self._reader(b"\xff\xff\xff\xff" + b"x" * 8,
+                                              eof=False))
+        run(main())
