@@ -32,6 +32,23 @@ a >20% regression:
   timeline realizes every dependency edge the pipelined simulator
   predicts).  ``setup_s`` / ``request_s`` / ``ratio`` are runner wall-clock
   and only reported.
+* ``serving`` (multi-tenant continuous-batching server per config) — the
+  machine-independent invariants gated on the FRESH rows alone:
+  ``continuous_batches <= flush_batches`` (fewer, fuller dispatches for the
+  same requests — the structural property of batch formation, on every
+  row), ``batching_gain >= 1.0`` on rows with ``gain_gated`` (the
+  continuous scheduler must serve the same concurrent client population at
+  least as fast as the flush-barrier ``Session`` baseline measured
+  interleaved in the same process — it wins by forming full bucket-padded
+  batches where client-driven flushes dispatch ragged ones; heavy-model
+  configs where per-sample compute dwarfs dispatch overhead sit at parity
+  and report the gain ungated), ``bitexact`` (every request through the
+  running server equals ``Session.run`` bitwise), ``overload_rejection_rate
+  > 0`` (at 2x saturation offered load admission control must shed, never
+  queue unboundedly) and ``overload_accepted_p99_s <= p99_bound_s`` (the
+  accepted population's tail stays bounded near the SLO target; the bound
+  is recorded in the row).  The rps and percentile fields are runner
+  wall-clock and only reported.
 * ``kernels`` (per-kernel ref-vs-Pallas micro-bench) — ``speedup`` is a
   ratio of two paths timed in the same process, so it is machine-insensitive
   even though the absolute wall times are not: the 20% line is held on the
@@ -71,7 +88,7 @@ def _row_key(row: dict) -> tuple:
 
 
 SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels",
-            "runtime")
+            "runtime", "serving")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -246,6 +263,81 @@ def compare(baseline: dict, fresh: dict, threshold: float,
             if metric in b and metric in f:
                 # wall-clock on the CI runner: informational only
                 print(f"note runtime {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]}, not gated)")
+    base_sv = baseline.get("serving", {}) if "serving" in sections else {}
+    fresh_sv = fresh.get("serving", {}) if "serving" in sections else {}
+    for key in sorted(fresh_sv.keys()):
+        f = fresh_sv[key]
+        # all four serving invariants are machine-independent and gated on
+        # the fresh rows alone (rps/percentile magnitudes are runner-bound)
+        if "continuous_batches" in f and "flush_batches" in f:
+            compared += 1
+            if f["continuous_batches"] > f["flush_batches"]:
+                failures.append(
+                    f"serving invariant broken {key}: the continuous "
+                    f"scheduler used {f['continuous_batches']} dispatches "
+                    f"where the flush-barrier baseline used "
+                    f"{f['flush_batches']} for the same requests — batch "
+                    f"formation is not consolidating work")
+            else:
+                print(f"ok serving {key}/dispatch_count: "
+                      f"{f['continuous_batches']} <= {f['flush_batches']}")
+        if "batching_gain" in f and f.get("gain_gated", True):
+            compared += 1
+            if f["batching_gain"] < 1.0:
+                failures.append(
+                    f"serving invariant broken {key}: continuous batching is "
+                    f"{f['batching_gain']:.3f}x the flush-barrier Session "
+                    f"baseline — the scheduler must at least match the "
+                    f"barrier path it replaces "
+                    f"({f.get('continuous_batches')} vs "
+                    f"{f.get('flush_batches')} dispatches)")
+            else:
+                print(f"ok serving {key}/batching_gain: "
+                      f"{f['batching_gain']:.3f}x >= 1.0")
+        elif "batching_gain" in f:
+            # heavy-model configs: per-sample compute dwarfs dispatch
+            # overhead, so throughput sits at parity and only the dispatch-
+            # count invariant above is structural
+            print(f"note serving {key}/batching_gain: "
+                  f"{f['batching_gain']:.3f}x (not gated for this config)")
+        if "bitexact" in f:
+            compared += 1
+            if not f["bitexact"]:
+                failures.append(
+                    f"serving invariant broken {key}: bitexact is False — "
+                    f"served outputs diverged from Session.run")
+            else:
+                print(f"ok serving {key}/bitexact")
+        if "overload_rejection_rate" in f:
+            compared += 1
+            if not f["overload_rejection_rate"] > 0:
+                failures.append(
+                    f"serving invariant broken {key}: zero rejections at "
+                    f"{f.get('overload_offered_rps')} rps offered "
+                    f"(2x saturation) — admission control is not shedding")
+            else:
+                print(f"ok serving {key}/overload_rejection_rate: "
+                      f"{f['overload_rejection_rate']:.1%} > 0")
+        if "overload_accepted_p99_s" in f and "p99_bound_s" in f:
+            compared += 1
+            if f["overload_accepted_p99_s"] > f["p99_bound_s"]:
+                failures.append(
+                    f"serving invariant broken {key}: accepted-request p99 "
+                    f"{f['overload_accepted_p99_s']} s exceeds the bound "
+                    f"{f['p99_bound_s']} s under overload — admission "
+                    f"control failed to keep the accepted tail bounded")
+            else:
+                print(f"ok serving {key}/overload_accepted_p99_s: "
+                      f"{f['overload_accepted_p99_s']} s <= "
+                      f"{f['p99_bound_s']} s")
+    for key in sorted(base_sv.keys() & fresh_sv.keys()):
+        b, f = base_sv[key], fresh_sv[key]
+        for metric in ("continuous_rps", "flush_rps", "saturation_rps",
+                       "steady_a_p99_s", "steady_b_p99_s"):
+            if metric in b and metric in f:
+                # wall-clock on the CI runner: informational only
+                print(f"note serving {key}/{metric}: {f[metric]} "
                       f"(baseline {b[metric]}, not gated)")
     if "kernels" in sections:
         # machine-independent hot-path invariant on the fresh executor rows:

@@ -23,12 +23,14 @@ import time
 def build_suites(quick: bool):
     try:
         from . import (executor_bench, kernel_bench, paper_benchmarks as pb,
-                       planner_bench, roofline_report, runtime_bench)
+                       planner_bench, roofline_report, runtime_bench,
+                       serving_bench)
     except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
         import executor_bench, kernel_bench, planner_bench  # noqa: E401
         import paper_benchmarks as pb
         import roofline_report
         import runtime_bench
+        import serving_bench
     return [
         ("Table I (K1 calibration)", pb.table1_k1),
         ("Table II (allocation strategies)", pb.table2_allocation),
@@ -44,6 +46,8 @@ def build_suites(quick: bool):
          functools.partial(planner_bench.bench_planner, quick=quick)),
         ("Runtime (distributed coordinator)",
          functools.partial(runtime_bench.bench_runtime, quick=quick)),
+        ("Serving (multi-tenant continuous batching)",
+         functools.partial(serving_bench.bench_serving, quick=quick)),
         # last: renders the roofline/compile sections the executor bench
         # just persisted into roofline_report.md (uploaded by CI)
         ("Roofline (per-block report)", roofline_report.bench_roofline),

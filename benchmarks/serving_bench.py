@@ -1,0 +1,279 @@
+"""Multi-tenant serving benchmark: continuous batching vs the flush-barrier
+``Session``, plus SLO admission control under overload.
+
+Persists a ``serving`` section into the shared ``BENCH_executor.json``
+(via ``merge_sections``), keyed ``<config>`` (two tenants each — the
+config model plus a second resolution of the same family, sharing the
+cross-instance executable cache).  Per key:
+
+* ``flush_rps`` / ``continuous_rps`` / ``batching_gain`` — the tentpole
+  comparison.  The flush-barrier baseline is the honest pre-server
+  serving architecture: ``n_clients`` concurrent closed-loop clients
+  sharing one ``Session`` behind a lock (``Session`` is documented
+  single-threaded), each submitting and then flushing until its ticket is
+  fulfilled.  Client-driven flushes dispatch whatever happens to be
+  pending, so the baseline burns its budget on many small ragged
+  dispatches; the server's scheduler forms full bucket-padded
+  micro-batches from the same offered stream.  Both sides are measured
+  interleaved (round-robin, best-of-``rounds``) in the same process so
+  host noise hits them alike.  ``check_regression.py --sections serving``
+  gates ``continuous_batches <= flush_batches`` on every fresh row (fewer,
+  fuller dispatches for identical work is structural, not a timing
+  accident) and ``batching_gain >= 1.0`` on rows flagged ``gain_gated``
+  (configs where dispatch overhead is a measurable fraction of batch wall
+  time, so consolidation must show up as throughput; the heavy paper-model
+  config sits at parity and reports its gain ungated).
+* ``flush_batches`` / ``continuous_batches`` — engine dispatches each side
+  needed for the same request count (the mechanism behind the gain).
+* ``bitexact`` — every probe request served through the running server
+  equals ``Session.run`` on the same plan, bitwise (gated).
+* ``saturation_rps`` — closed-burst ceiling of tenant A
+  (``loadgen.saturation_throughput``, informational wall-clock).
+* ``steady_*`` — open-loop Poisson drive of BOTH tenants at a moderate
+  fraction of saturation: per-tenant p50/p99 and served rate
+  (informational wall-clock; this is the paper-facing serving headline).
+* ``overload_*`` — tenant B re-driven open-loop at ``2 x`` its saturation
+  against a tight SLO: ``overload_rejection_rate > 0`` (admission control
+  must shed, gated) and ``overload_accepted_p99_s <= p99_bound_s`` (the
+  accepted population's tail stays bounded near the SLO target instead of
+  growing with the backlog, gated; the bound is a fixed multiple of the
+  target recorded in the row).
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+# overload scenario constants (recorded in each row so the gate reads the
+# bound it enforces): admission defends P99_TARGET_S; the accepted tail may
+# wobble above it by scheduling noise but must stay under the bound —
+# unbounded queueing would blow straight through it
+P99_TARGET_S = 0.25
+P99_BOUND_S = 4 * P99_TARGET_S
+OVERLOAD_FACTOR = 2.0
+
+
+def _configs(quick: bool):
+    from repro.models import (mobilenet_v2, mobilenet_v2_paper,
+                              mobilenet_v2_smoke)
+
+    def smoke24():
+        return mobilenet_v2(input_hw=(24, 24), width_mult=0.25,
+                            num_classes=10,
+                            cfg=[(1, 8, 1, 1), (6, 16, 2, 2), (6, 24, 2, 2)])
+
+    # (key, tenant_a_model, tenant_b_model, n_clients, per_client, rounds)
+    # (key, model_a, model_b, n_clients, per_client, rounds, gain_gated).
+    # n_clients stays at 2x max_batch so offered concurrency can keep
+    # buckets full.  gain_gated marks configs where dispatch overhead is a
+    # measurable fraction of batch wall time, so fewer/fuller dispatches
+    # must show up as throughput: on the heavy paper model per-sample
+    # compute dwarfs dispatch overhead (a full int8 MNv2@112 bucket runs
+    # seconds on one CPU core vs ~ms of dispatch), throughput sits at
+    # parity, and only the dispatch-count invariant is gated.
+    cfgs = [("smoke_2res", mobilenet_v2_smoke, smoke24, 16, 24, 3, True)]
+    if not quick:
+        cfgs.append(("mnv2_112_2tenant", mobilenet_v2_paper,
+                     mobilenet_v2_smoke, 16, 3, 2, False))
+    return cfgs
+
+
+def _plan_for(model):
+    from benchmarks.executor_bench import RATINGS
+    from repro.core import split_model
+
+    return split_model(model, np.asarray(RATINGS), mode="neuron")
+
+
+def _closed_loop(n_clients: int, per_client: int, iteration) -> float:
+    """Total requests/s of ``n_clients`` concurrent closed-loop clients,
+    each running ``iteration()`` ``per_client`` times."""
+    errors: list[BaseException] = []
+
+    def worker():
+        try:
+            for _ in range(per_client):
+                iteration()
+        except BaseException as e:  # noqa: BLE001 — surface on the driver
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(n_clients)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if errors:
+        raise errors[0]
+    return n_clients * per_client / (time.perf_counter() - t0)
+
+
+def flush_barrier_rps(session, x, n_clients: int, per_client: int) -> float:
+    """The flush-barrier serving baseline: concurrent clients share one
+    ``Session`` behind a lock (the documented single-threaded contract) and
+    drive dispatch themselves — submit, then flush until fulfilled.  A
+    flush group-commits whatever is pending, so batch sizes are whatever
+    thread timing produced, not full buckets."""
+    lock = threading.Lock()
+
+    def iteration():
+        with lock:
+            ticket = session.submit(x)
+        while not ticket.done():
+            with lock:
+                session.flush()
+
+    return _closed_loop(n_clients, per_client, iteration)
+
+
+def continuous_rps_fn(server, tenant: str, x, n_clients: int,
+                      per_client: int) -> float:
+    """Same client population against the continuous-batching server."""
+
+    def iteration():
+        server.submit(tenant, x).result(timeout=120.0)
+
+    return _closed_loop(n_clients, per_client, iteration)
+
+
+def serving_section(quick: bool = False) -> dict:
+    from repro.api import Session
+    from repro.serve import (SLO, Server, run_open_loop,
+                             saturation_throughput)
+
+    rng = np.random.default_rng(0)
+    section: dict[str, dict] = {}
+    for (key, make_a, make_b, n_clients, per_client, rounds,
+         gain_gated) in _configs(quick):
+        model_a, model_b = make_a(), make_b()
+        plan_a, plan_b = _plan_for(model_a), _plan_for(model_b)
+        xa = rng.standard_normal(model_a.input_shape).astype(np.float32)
+        xb = rng.standard_normal(model_b.input_shape).astype(np.float32)
+
+        # the flush-barrier baseline Session and tenant A share plan,
+        # precision, calibration seed and buckets: same compiled executable
+        base = Session(plan_a, precision="int8", max_batch=8)
+        base.warmup()
+        server = Server(max_inflight=2)
+        sess_a = server.add_tenant(
+            "a", plan_a, precision="int8", max_batch=8,
+            slo=SLO(p99_target_s=None, queue_cap=None))
+        sess_b = server.add_tenant(
+            "b", plan_b, precision="int8", max_batch=8,
+            slo=SLO(p99_target_s=P99_TARGET_S, queue_cap=4096))
+        with server:
+            # bit-exactness probe before any load: each request through the
+            # running scheduler must equal the Session path bitwise
+            bitexact = all(
+                np.array_equal(server.run("a", p, timeout=120.0), base.run(p))
+                for p in (rng.standard_normal(model_a.input_shape)
+                          .astype(np.float32) for _ in range(8)))
+
+            # interleaved rounds: barrier and continuous alternate so host
+            # noise hits both; best-of damps one-sided slowdown spikes
+            flush_best, cont_best = 0.0, 0.0
+            base_batches0 = base.stats().batches
+            cont_batches0 = sess_a.stats().batches
+            n_round = n_clients * per_client
+            for _ in range(rounds):
+                flush_best = max(flush_best, flush_barrier_rps(
+                    base, xa, n_clients, per_client))
+                cont_best = max(cont_best, continuous_rps_fn(
+                    server, "a", xa, n_clients, per_client))
+            flush_batches = base.stats().batches - base_batches0
+            cont_batches = sess_a.stats().batches - cont_batches0
+
+            # per-tenant ceilings, then a steady open-loop Poisson phase on
+            # both tenants at a moderate fraction of each ceiling
+            sat_a = saturation_throughput(server, "a", lambda: xa,
+                                          n_requests=n_round)
+            sat_b = saturation_throughput(server, "b", lambda: xb,
+                                          n_requests=n_round)
+            # drive long enough that even a slow tenant (MNv2@112 saturates
+            # near 1 req/s on one CPU core) sees ~8 expected Poisson
+            # arrivals — percentiles over an empty sample are NaN noise
+            steady_dur = min(20.0, max(1.5, 8.0 / (0.4 * min(sat_a, sat_b))))
+            steady = run_open_loop(
+                server, {"a": 0.4 * sat_a, "b": 0.4 * sat_b},
+                {"a": lambda: xa, "b": lambda: xb},
+                duration_s=steady_dur, seed=1)
+
+            # overload: tenant B at 2x its ceiling; the SLO gate must shed
+            # and the accepted population's p99 must stay near the target
+            overload = run_open_loop(
+                server, {"b": OVERLOAD_FACTOR * sat_b}, {"b": lambda: xb},
+                duration_s=2.0, seed=2)["b"]
+
+        section[key] = dict(
+            tenants={"a": f"{model_a.input_shape}",
+                     "b": f"{model_b.input_shape}"},
+            n_clients=n_clients, per_client=per_client, rounds=rounds,
+            requests_per_round=n_round,
+            flush_rps=round(flush_best, 1),
+            continuous_rps=round(cont_best, 1),
+            batching_gain=round(cont_best / flush_best, 4),
+            gain_gated=gain_gated,
+            flush_batches=flush_batches,
+            continuous_batches=cont_batches,
+            bitexact=bool(bitexact),
+            saturation_rps=round(sat_a, 1),
+            saturation_b_rps=round(sat_b, 1),
+            steady_offered_frac=0.4,
+            steady_duration_s=round(steady_dur, 2),
+            steady_a_p50_s=round(steady["a"].p50_s, 6),
+            steady_a_p99_s=round(steady["a"].p99_s, 6),
+            steady_b_p50_s=round(steady["b"].p50_s, 6),
+            steady_b_p99_s=round(steady["b"].p99_s, 6),
+            overload_offered_rps=round(overload.offered_rps, 1),
+            overload_rejection_rate=round(overload.rejection_rate, 4),
+            overload_accepted_p99_s=round(overload.p99_s, 6),
+            p99_target_s=P99_TARGET_S,
+            p99_bound_s=P99_BOUND_S,
+        )
+    return section
+
+
+def bench_serving(quick: bool = False) -> list[tuple]:
+    """run.py suite entry: persist the ``serving`` BENCH section, return
+    CSV rows."""
+    from benchmarks.executor_bench import merge_sections
+
+    section = serving_section(quick)
+    merge_sections(serving=section)
+    rows = []
+    for key, e in section.items():
+        rows.append((f"serving_{key}_continuous_rps", e["continuous_rps"],
+                     f"flush-barrier={e['flush_rps']} rps "
+                     f"gain={e['batching_gain']}x "
+                     f"batches {e['continuous_batches']} vs "
+                     f"{e['flush_batches']} bitexact={e['bitexact']}"))
+        rows.append((f"serving_{key}_overload_p99_s",
+                     e["overload_accepted_p99_s"],
+                     f"@{e['overload_offered_rps']} rps offered, "
+                     f"shed {e['overload_rejection_rate']:.0%} "
+                     f"(target {e['p99_target_s']}s, "
+                     f"bound {e['p99_bound_s']}s)"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.executor_bench import merge_sections
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke config only (CI)")
+    args = ap.parse_args()
+    section = serving_section(quick=args.quick)
+    payload = merge_sections(serving=section)
+    print(json.dumps({"serving": payload["serving"]}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,14 +25,14 @@ _API_NAMES = (
     "Ticket",
 )
 
-__all__ = list(_API_NAMES) + ["api", "core", "models"]
+__all__ = list(_API_NAMES) + ["api", "core", "models", "serve"]
 
 
 def __getattr__(name: str):
     if name in _API_NAMES:
         from . import api
         return getattr(api, name)
-    if name in ("api", "core", "models"):
+    if name in ("api", "core", "models", "serve"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

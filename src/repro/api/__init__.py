@@ -31,17 +31,20 @@ from .cluster import Cluster, ClusterError
 from .plan import FUSIONS, Plan, build_split_plan
 from .planner import (SEARCH_MODES, InfeasibleError, Objective, PlanCandidate,
                       Planner)
-from .session import Session, SessionStats, Ticket
+from .session import (InflightDispatch, RollingLatency, Session,
+                      SessionStats, Ticket)
 
 __all__ = [
     "Cluster",
     "ClusterError",
     "FUSIONS",
     "InfeasibleError",
+    "InflightDispatch",
     "Objective",
     "Plan",
     "PlanCandidate",
     "Planner",
+    "RollingLatency",
     "SEARCH_MODES",
     "Session",
     "SessionStats",

@@ -13,7 +13,9 @@ bit-identical to ``run_batch`` over the same inputs (tested in int8).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -25,6 +27,67 @@ from .plan import Plan
 
 PRECISIONS = ("int8", "float")
 _DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+_ROLLING_WINDOW = 512
+
+
+class RollingLatency:
+    """Rolling latency window with percentile queries, optionally keyed
+    (bucket size, tenant name, ...).  The single percentile implementation:
+    ``SessionStats`` and :class:`repro.serve.QosMonitor` both report through
+    it, so serving-layer QoS numbers and session stats cannot drift apart.
+
+    Percentiles use the linear-interpolation definition of
+    ``np.percentile`` over the retained window; empty windows return NaN.
+    Thread-safe: the serving layer's scheduler thread records while client
+    threads query.
+    """
+
+    __slots__ = ("window", "_all", "_by_key", "_lock")
+
+    def __init__(self, window: int = _ROLLING_WINDOW):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self._all: collections.deque[float] = collections.deque(maxlen=window)
+        self._by_key: dict[object, collections.deque[float]] = {}
+        self._lock = threading.Lock()
+
+    def record(self, value: float, key: object = None) -> None:
+        self.record_many((value,), key=key)
+
+    def record_many(self, values, key: object = None) -> None:
+        """Record a batch of observations under one lock acquisition (the
+        serving hot path records per dispatch, not per request)."""
+        with self._lock:
+            self._all.extend(float(v) for v in values)
+            if key is not None:
+                dq = self._by_key.get(key)
+                if dq is None:
+                    dq = self._by_key[key] = collections.deque(
+                        maxlen=self.window)
+                dq.extend(float(v) for v in values)
+
+    def __len__(self) -> int:
+        return len(self._all)
+
+    def keys(self) -> tuple:
+        with self._lock:
+            return tuple(self._by_key)
+
+    def values(self, key: object = None) -> tuple[float, ...]:
+        """The retained window, oldest first."""
+        with self._lock:
+            return tuple(self._all if key is None
+                         else self._by_key.get(key, ()))
+
+    def percentile(self, q: float, key: object = None) -> float:
+        vals = self.values(key)
+        if not vals:
+            return float("nan")
+        return float(np.percentile(np.asarray(vals, dtype=np.float64), q))
+
+    def snapshot(self, qs: tuple[float, ...] = (50, 99)) -> dict[float, float]:
+        return {q: self.percentile(q) for q in qs}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,29 +106,112 @@ class SessionStats:
     # the seconds/inference the planner predicts pipelining saves vs serial
     transport: str = "serial"
     predicted_overlap_saved_s: float = 0.0
+    # rolling dispatch-latency percentiles over the last _ROLLING_WINDOW
+    # dispatches (NaN before the first): overall and per bucket size —
+    # the service-time estimates admission control predicts queueing with
+    latency_p50_s: float = float("nan")
+    latency_p99_s: float = float("nan")
+    per_bucket_p50_s: dict[int, float] = dataclasses.field(default_factory=dict)
+    per_bucket_p99_s: dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class Ticket:
-    """Handle for one queued request; ``result()`` flushes if needed."""
+    """Handle for one queued request.
 
-    __slots__ = ("_session", "_value", "_done")
+    Two fulfillment regimes share this class: a plain :class:`Session`
+    ticket (``result()`` synchronously flushes the owning session on demand)
+    and a detached ticket (``session=None``, fulfilled by another thread —
+    the :class:`repro.serve.Server` scheduler — so ``result()`` waits on an
+    event).  ``result(timeout=...)`` raises :class:`TimeoutError` if the
+    ticket is still unfulfilled after ``timeout`` seconds, and re-raises the
+    dispatch exception if the batch this request rode in failed: a raising
+    dispatch rejects its tickets instead of stranding them.
+    """
 
-    def __init__(self, session: "Session"):
+    __slots__ = ("_session", "_value", "_error", "_event", "_t_done")
+
+    def __init__(self, session: "Session | None" = None):
         self._session = session
         self._value = None
-        self._done = False
+        self._error: BaseException | None = None
+        self._event = threading.Event()
+        self._t_done = float("nan")
 
     def done(self) -> bool:
-        return self._done
+        return self._event.is_set()
 
-    def result(self) -> np.ndarray:
-        if not self._done:
-            self._session.flush()
+    @property
+    def completed_at(self) -> float:
+        """``time.perf_counter()`` stamp of fulfillment/rejection (NaN while
+        pending) — lets a load generator compute end-to-end latency without
+        racing to observe the event itself."""
+        return self._t_done
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self._event.is_set() and self._session is not None:
+            self._session.flush()   # synchronous path: serve the queue now
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"ticket unfulfilled after {timeout} s")
+        if self._error is not None:
+            raise self._error
         return self._value
+
+    def exception(self) -> BaseException | None:
+        """The dispatch error that rejected this ticket (None if none/undone)."""
+        return self._error
 
     def _fulfill(self, value: np.ndarray) -> None:
         self._value = value
-        self._done = True
+        self._t_done = time.perf_counter()
+        self._event.set()
+
+    def _reject(self, error: BaseException) -> None:
+        self._error = error
+        self._t_done = time.perf_counter()
+        self._event.set()
+
+
+class InflightDispatch:
+    """One asynchronously dispatched padded micro-batch.
+
+    Returned by :meth:`Session.dispatch_async`: the engine call has been
+    *enqueued* (jax dispatch is asynchronous) but not forced, so the caller
+    can overlap host-side work — forming the next micro-batch, fulfilling
+    the previous one's tickets — with this batch's device compute.  This is
+    the in-flight bucket slot continuous batching admits into.
+
+    ``wait()`` forces the result, records the dispatch into the owning
+    session's stats (wall time measured enqueue -> ready, so under pipelining
+    it includes device queueing — the effective per-batch service time), and
+    returns the unpadded outputs.
+    """
+
+    __slots__ = ("_session", "_n", "_bucket", "_out", "_t0", "_result")
+
+    def __init__(self, session: "Session", n: int, bucket: int, out, t0: float):
+        self._session = session
+        self._n = n
+        self._bucket = bucket
+        self._out = out
+        self._t0 = t0
+        self._result: np.ndarray | None = None
+
+    @property
+    def n_requests(self) -> int:
+        return self._n
+
+    @property
+    def bucket(self) -> int:
+        return self._bucket
+
+    def wait(self) -> np.ndarray:
+        if self._result is None:
+            out = np.asarray(self._out)     # blocks until the device is done
+            dt = time.perf_counter() - self._t0
+            self._out = None
+            self._session._record_dispatch(self._n, self._bucket, dt)
+            self._result = out[:self._n]
+        return self._result
 
 
 class Session:
@@ -116,6 +262,7 @@ class Session:
         self._padded = 0
         self._wall_s = 0.0
         self._per_bucket: dict[int, int] = {}
+        self._rolling = RollingLatency()
 
     # -- calibration ---------------------------------------------------------
     def _calibrate(self, calibration, n_samples: int, seed: int) -> QuantizedModel:
@@ -136,38 +283,57 @@ class Session:
             self.engine.run_batch(np.zeros((int(b), *shape), np.float32),
                                   mode=self._mode)
 
-    def _bucket(self, n: int) -> int:
+    def bucket_for(self, n: int) -> int:
+        """The padded batch size ``n`` requests dispatch at (the smallest
+        configured bucket >= n, capped at the largest)."""
         for b in self.buckets:
             if b >= n:
                 return b
         return self.buckets[-1]
 
     # -- serving -------------------------------------------------------------
-    def _check_input(self, x: np.ndarray) -> np.ndarray:
+    def check_input(self, x: np.ndarray) -> np.ndarray:
+        """Validate/convert one request sample (public: the serving layer
+        validates at admission time, before a request enters any queue)."""
         x = np.asarray(x, dtype=np.float32)
         if x.shape != tuple(self.model.input_shape):
             raise ValueError(f"request shape {x.shape} != model input "
                              f"{tuple(self.model.input_shape)}")
         return x
 
-    def _dispatch(self, xs: np.ndarray) -> np.ndarray:
-        """One padded engine dispatch for n <= max bucket requests."""
+    def _record_dispatch(self, n: int, bucket: int, wall_s: float) -> None:
+        self._requests += n
+        self._batches += 1
+        self._padded += bucket - n
+        self._wall_s += wall_s
+        self._per_bucket[bucket] = self._per_bucket.get(bucket, 0) + 1
+        self._rolling.record(wall_s, key=bucket)
+
+    def dispatch_async(self, xs: np.ndarray) -> InflightDispatch:
+        """Enqueue one bucket-padded engine dispatch for ``n <= max_batch``
+        requests WITHOUT forcing the result.
+
+        The continuous-batching seam: jax dispatch is asynchronous, so a
+        scheduler can keep a bucket in flight on the device while it forms
+        the next micro-batch from whatever has queued — no flush barrier.
+        Stats are recorded when the returned handle's ``wait()`` forces.
+        """
         n = len(xs)
-        b = self._bucket(n)
+        if not 1 <= n <= self.max_batch:
+            raise ValueError(f"dispatch of {n} requests (want 1..{self.max_batch})")
+        b = self.bucket_for(n)
         if b > n:
             pad = np.zeros((b - n, *xs.shape[1:]), np.float32)
             batch = np.concatenate([xs, pad])
         else:
             batch = xs
         t0 = time.perf_counter()
-        out = self.engine.run_batch(batch, mode=self._mode)
-        dt = time.perf_counter() - t0
-        self._requests += n
-        self._batches += 1
-        self._padded += b - n
-        self._wall_s += dt
-        self._per_bucket[b] = self._per_bucket.get(b, 0) + 1
-        return out[:n]
+        out = self.engine.run_batch_async(batch, mode=self._mode)
+        return InflightDispatch(self, n, b, out, t0)
+
+    def _dispatch(self, xs: np.ndarray) -> np.ndarray:
+        """One padded engine dispatch for n <= max bucket requests."""
+        return self.dispatch_async(xs).wait()
 
     def submit_many(self, xs) -> np.ndarray:
         """Serve a bulk of requests, micro-batched into padded buckets.
@@ -185,22 +351,34 @@ class Session:
 
     def run(self, x) -> np.ndarray:
         """Serve one request now (bucket-1 compiled path)."""
-        return self.submit_many(self._check_input(x)[None])[0]
+        return self.submit_many(self.check_input(x)[None])[0]
 
     def submit(self, x) -> Ticket:
         """Queue one request for the next :meth:`flush`; returns a
         :class:`Ticket` whose ``result()`` flushes on demand."""
         t = Ticket(self)
-        self._pending.append((self._check_input(x), t))
+        self._pending.append((self.check_input(x), t))
         return t
 
     def flush(self) -> int:
         """Serve every queued request in bucket-padded micro-batches;
-        returns the number of requests served."""
+        returns the number of requests served.
+
+        A raising dispatch REJECTS every ticket of this flush with the
+        exception (their ``result()`` re-raises it) and then re-raises, so a
+        poisoned batch can never leave callers blocked on tickets that will
+        never be fulfilled.  Requests submitted *during* the dispatch (e.g.
+        from a fulfillment callback) land in the next flush untouched.
+        """
         if not self._pending:
             return 0
         pending, self._pending = self._pending, []
-        ys = self.submit_many(np.stack([x for x, _ in pending]))
+        try:
+            ys = self.submit_many(np.stack([x for x, _ in pending]))
+        except Exception as e:
+            for _, ticket in pending:
+                ticket._reject(e)
+            raise
         for (_, ticket), y in zip(pending, ys):
             ticket._fulfill(np.asarray(y))
         return len(pending)
@@ -223,6 +401,13 @@ class Session:
                            precision=self.precision, **kwargs)
 
     # -- observability -------------------------------------------------------
+    def dispatch_latency_s(self, bucket: int | None = None,
+                           q: float = 50.0) -> float:
+        """Rolling dispatch-latency percentile (NaN before any dispatch):
+        the per-batch service-time estimate the serving layer's admission
+        control predicts queueing delay with."""
+        return self._rolling.percentile(q, key=bucket)
+
     def stats(self) -> SessionStats:
         return SessionStats(
             requests=self._requests, batches=self._batches,
@@ -234,4 +419,10 @@ class Session:
             per_bucket=dict(self._per_bucket),
             transport=self.transport,
             predicted_overlap_saved_s=(self.plan.overlap_saved_s
-                                       if self.plan is not None else 0.0))
+                                       if self.plan is not None else 0.0),
+            latency_p50_s=self._rolling.percentile(50),
+            latency_p99_s=self._rolling.percentile(99),
+            per_bucket_p50_s={b: self._rolling.percentile(50, key=b)
+                              for b in self._rolling.keys()},
+            per_bucket_p99_s={b: self._rolling.percentile(99, key=b)
+                              for b in self._rolling.keys()})

@@ -906,6 +906,14 @@ class CompiledSplitExecutor:
         dispatch for the whole batch (vmap over the traced plan)."""
         return np.asarray(self._batch_fn(mode)(jnp.asarray(xs, jnp.float32)))
 
+    def run_batch_async(self, xs: np.ndarray, mode: str = "float"):
+        """Like :meth:`run_batch` but returns the un-forced device array:
+        jax dispatch is asynchronous, so the caller can overlap host work
+        (forming the next micro-batch) with this batch's compute and force
+        later via ``np.asarray``.  The continuous-batching serving layer's
+        in-flight dispatch seam."""
+        return self._batch_fn(mode)(jnp.asarray(xs, jnp.float32))
+
     def warmup(self, input_shape=None, batch: int | None = None,
                mode: str = "float") -> None:
         """Force compilation ahead of serving (zeros input)."""

@@ -348,6 +348,109 @@ class TestKernelGate:
                                       "--fresh", str(f),
                                       "--sections", "rows,peaks"]) == 0
 
+
+def _serving_payload(gain=1.3, bitexact=True, rejection=0.4,
+                     accepted_p99=0.3, bound=1.0, gain_gated=True,
+                     batches=(1000, 150)):
+    p = _payload()
+    p["serving"] = {"smoke_2res": dict(
+        flush_rps=500.0, continuous_rps=round(500.0 * gain, 1),
+        batching_gain=gain, gain_gated=gain_gated,
+        flush_batches=batches[0], continuous_batches=batches[1],
+        bitexact=bitexact, saturation_rps=500.0,
+        overload_offered_rps=1000.0, overload_rejection_rate=rejection,
+        overload_accepted_p99_s=accepted_p99, p99_target_s=0.25,
+        p99_bound_s=bound)}
+    return p
+
+
+class TestServingGate:
+    def test_healthy_serving_row_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(gain=1.2))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_batching_gain_below_one_fails(self, tmp_path):
+        """Continuous batching losing to the flush-barrier Session baseline
+        is a scheduler regression regardless of the baseline row."""
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(gain=0.97))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_ungated_gain_below_one_passes(self, tmp_path):
+        """Heavy-model configs sit at throughput parity (per-sample compute
+        dwarfs dispatch overhead) — their gain is reported, not gated."""
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _serving_payload(gain=0.97, gain_gated=False))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_dispatch_count_inversion_fails_even_ungated(self, tmp_path):
+        """The structural invariant holds on every row: the continuous
+        scheduler may never need MORE dispatches than client-driven
+        flushes for the same requests."""
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _serving_payload(gain=1.0, gain_gated=False,
+                                    batches=(150, 1000)))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_bitexact_false_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(bitexact=False))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_zero_overload_rejections_fails(self, tmp_path):
+        """2x saturation with no shedding means admission control queued
+        unboundedly — the overload story is broken."""
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(rejection=0.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_unbounded_accepted_tail_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _serving_payload(accepted_p99=1.4, bound=1.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_serving_invariants_gate_fresh_rows_without_baseline(
+            self, tmp_path):
+        """Like runtime: the invariants hold on fresh rows even when the
+        committed baseline predates the serving section."""
+        b = _write(tmp_path, "base.json", _payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(gain=0.9))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_sections_flag_excludes_serving(self, tmp_path):
+        b = _write(tmp_path, "base.json", _serving_payload())
+        f = _write(tmp_path, "fresh.json", _serving_payload(gain=0.9))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "rows,peaks"]) == 0
+
+    def test_rps_fields_informational_only(self, tmp_path):
+        """Saturation/continuous rps are runner wall-clock: a slower runner
+        must not fail the gate while the invariants hold."""
+        base = _serving_payload()
+        fresh = _serving_payload()
+        fresh["serving"]["smoke_2res"]["continuous_rps"] = 100.0
+        fresh["serving"]["smoke_2res"]["flush_rps"] = 80.0
+        fresh["serving"]["smoke_2res"]["saturation_rps"] = 90.0
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+
+class TestMergeSections:
     def test_merge_sections_is_per_key(self, tmp_path, monkeypatch):
         """kernel_bench/executor_bench section writes replace only the keys
         they produced: other kernels and foreign sections survive."""

@@ -169,3 +169,111 @@ class TestSessionValidation:
                           buckets=(1, 2))
         session.warmup()
         assert session.stats().requests == 0  # warmup is not traffic
+
+
+class TestTicketHardening:
+    def test_result_with_timeout_fulfills(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        t = session.submit(xs[0])
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:1], mode="int8")[0]
+        assert np.array_equal(t.result(timeout=60.0), ref)
+        assert t.exception() is None
+        assert t.completed_at > 0          # fulfillment stamp for latency
+
+    def test_detached_ticket_timeout_raises(self):
+        from repro.api import Ticket
+        t = Ticket()                        # no session to flush
+        with pytest.raises(TimeoutError, match="unfulfilled"):
+            t.result(timeout=0.02)
+        assert not t.done()
+        assert np.isnan(t.completed_at)     # still pending: no stamp
+
+    def test_poisoned_dispatch_rejects_all_pending_tickets(
+            self, plan, qmodel, xs, monkeypatch):
+        """Regression: a raising dispatch mid-batch must reject every ticket
+        of that flush with the exception — callers blocked on ``result()``
+        get the error instead of hanging forever."""
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        tickets = [session.submit(x) for x in xs[:3]]
+        boom = RuntimeError("poisoned input blew up the batch")
+        monkeypatch.setattr(session.engine, "run_batch_async",
+                            lambda *a, **k: (_ for _ in ()).throw(boom))
+        with pytest.raises(RuntimeError, match="poisoned"):
+            session.flush()
+        for t in tickets:
+            assert t.done()
+            assert t.exception() is boom
+            with pytest.raises(RuntimeError, match="poisoned"):
+                t.result(timeout=1.0)
+        # the queue was consumed, not wedged: serving resumes after the fix
+        monkeypatch.undo()
+        assert session.n_pending == 0
+        good = session.submit(xs[0])
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:1], mode="int8")[0]
+        assert np.array_equal(good.result(timeout=60.0), ref)
+
+    def test_rolling_percentile_stats_fields(self, plan, qmodel, xs):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4,
+                          buckets=(1, 2, 4))
+        s0 = session.stats()
+        assert np.isnan(s0.latency_p50_s) and np.isnan(s0.latency_p99_s)
+        assert s0.per_bucket_p50_s == {}
+        session.submit_many(xs)             # 7 -> buckets 4 + 4(pad 1)
+        s = session.stats()
+        assert s.latency_p50_s > 0
+        assert s.latency_p99_s >= s.latency_p50_s
+        assert set(s.per_bucket_p50_s) == set(s.per_bucket) == {4}
+        assert s.per_bucket_p99_s[4] >= s.per_bucket_p50_s[4] > 0
+        # the same rolling window answers the admission-control query
+        assert session.dispatch_latency_s(bucket=4) == s.per_bucket_p50_s[4]
+        assert np.isnan(session.dispatch_latency_s(bucket=2))
+
+
+class TestBucketPaddingEdgeCases:
+    def test_flush_of_more_than_max_bucket_chunks(self, plan, qmodel, xs):
+        """A backlog larger than the biggest bucket flushes in max_batch
+        chunks — every ticket fulfilled, order preserved."""
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=2,
+                          buckets=(1, 2))
+        tickets = [session.submit(x) for x in xs[:5]]   # 5 > max bucket 2
+        assert session.flush() == 5
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:5], mode="int8")
+        for t, r in zip(tickets, ref):
+            assert np.array_equal(t.result(), r)
+        s = session.stats()
+        assert s.batches == 3                     # 2 + 2 + 1(pad to bucket 1)
+        assert s.per_bucket == {2: 2, 1: 1}
+
+    def test_empty_flush_is_a_noop(self, plan, qmodel):
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=2)
+        assert session.flush() == 0
+        assert session.stats().batches == 0
+
+    def test_submit_during_dispatch_lands_in_next_flush(self, plan, qmodel,
+                                                        xs, monkeypatch):
+        """Interleaved submit/flush: a request submitted while a dispatch is
+        executing is untouched by that flush and served by the next one."""
+        session = Session(plan, precision="int8", qmodel=qmodel, max_batch=4)
+        first = [session.submit(x) for x in xs[:2]]
+        real = session.engine.run_batch_async
+        late: list = []
+
+        def submit_mid_dispatch(batch, mode):
+            if not late:                      # only on the first dispatch
+                late.append(session.submit(xs[2]))
+            return real(batch, mode=mode)
+
+        monkeypatch.setattr(session.engine, "run_batch_async",
+                            submit_mid_dispatch)
+        assert session.flush() == 2           # the late submit is NOT in it
+        assert all(t.done() for t in first)
+        assert not late[0].done()
+        assert session.n_pending == 1
+        assert session.flush() == 1           # ...but the next flush has it
+        ref = CompiledSplitExecutor(plan.split, qmodel).run_batch(
+            xs[:3], mode="int8")
+        for t, r in zip(first + late, ref):
+            assert np.array_equal(t.result(), r)
