@@ -49,6 +49,18 @@ a >20% regression:
   accepted population's tail stays bounded near the SLO target; the bound
   is recorded in the row).  The rps and percentile fields are runner
   wall-clock and only reported.
+* ``elastic`` (churn recovery per {config}@{workers}) — the
+  machine-independent invariants gated on the FRESH rows alone:
+  ``bitexact_after_recovery`` (every phase of the kill/rejoin churn loop
+  equals the single-process Session on the surviving topology),
+  ``reshipped_bytes < full_setup_bytes`` (the plan diff must beat a cold
+  re-setup — delta shipping is the point of the replan layer),
+  ``cache_hit_rate == 1.0`` whenever ``expected_cache_hits`` > 0 (every
+  unchanged shard geometry must hit the worker's warm compiled cache),
+  and ``leaked_tasks == 0`` (no orphaned asyncio tasks after shutdown).
+  ``downtime_kill_s`` / ``downtime_rejoin_s`` are runner wall-clock and
+  only reported.  ``--analytic`` rows (plan-diff only, no live workers)
+  carry just the reship invariant — the pinned-min cell gates those.
 * ``kernels`` (per-kernel ref-vs-Pallas micro-bench) — ``speedup`` is a
   ratio of two paths timed in the same process, so it is machine-insensitive
   even though the absolute wall times are not: the 20% line is held on the
@@ -88,7 +100,7 @@ def _row_key(row: dict) -> tuple:
 
 
 SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels",
-            "runtime", "serving")
+            "runtime", "serving", "elastic")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -338,6 +350,61 @@ def compare(baseline: dict, fresh: dict, threshold: float,
             if metric in b and metric in f:
                 # wall-clock on the CI runner: informational only
                 print(f"note serving {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]}, not gated)")
+    base_el = baseline.get("elastic", {}) if "elastic" in sections else {}
+    fresh_el = fresh.get("elastic", {}) if "elastic" in sections else {}
+    for key in sorted(fresh_el.keys()):
+        f = fresh_el[key]
+        # all elastic invariants are machine-independent and gated on the
+        # fresh rows alone (downtime magnitudes are runner-bound)
+        if "bitexact_after_recovery" in f:
+            compared += 1
+            if not f["bitexact_after_recovery"]:
+                failures.append(
+                    f"elastic invariant broken {key}: "
+                    f"bitexact_after_recovery is False — post-churn output "
+                    f"diverged from the single-process Session on the "
+                    f"surviving topology")
+            else:
+                print(f"ok elastic {key}/bitexact_after_recovery")
+        for rs, fl in (("reshipped_bytes", "full_setup_bytes"),
+                       ("rejoin_reshipped_bytes",
+                        "rejoin_full_setup_bytes")):
+            if rs not in f or fl not in f:
+                continue
+            compared += 1
+            if f[rs] >= f[fl]:
+                failures.append(
+                    f"elastic invariant broken {key}: {rs} {f[rs]} B >= "
+                    f"{fl} {f[fl]} B — the plan diff re-shipped no less "
+                    f"than a cold re-setup, delta shipping is dead")
+            else:
+                print(f"ok elastic {key}/{rs}: {f[rs]} B < {f[fl]} B")
+        if f.get("expected_cache_hits", 0) > 0 and "cache_hit_rate" in f:
+            compared += 1
+            if f["cache_hit_rate"] != 1.0:
+                failures.append(
+                    f"elastic invariant broken {key}: cache_hit_rate "
+                    f"{f['cache_hit_rate']} != 1.0 over "
+                    f"{f['expected_cache_hits']} unchanged geometries — a "
+                    f"warm recompile missed the compiled-segment cache")
+            else:
+                print(f"ok elastic {key}/cache_hit_rate: 1.0 over "
+                      f"{f['expected_cache_hits']} unchanged geometries")
+        if "leaked_tasks" in f:
+            compared += 1
+            if f["leaked_tasks"] != 0:
+                failures.append(
+                    f"elastic invariant broken {key}: {f['leaked_tasks']} "
+                    f"asyncio task(s) leaked after close()")
+            else:
+                print(f"ok elastic {key}/leaked_tasks: 0")
+    for key in sorted(base_el.keys() & fresh_el.keys()):
+        b, f = base_el[key], fresh_el[key]
+        for metric in ("downtime_kill_s", "downtime_rejoin_s"):
+            if metric in b and metric in f:
+                # wall-clock on the CI runner: informational only
+                print(f"note elastic {key}/{metric}: {f[metric]} "
                       f"(baseline {b[metric]}, not gated)")
     if "kernels" in sections:
         # machine-independent hot-path invariant on the fresh executor rows:

@@ -1,0 +1,175 @@
+"""Elastic-replan benchmark: churn recovery over the live coordinator.
+
+Persists an ``elastic`` section into the shared ``BENCH_executor.json``
+(via ``merge_sections``), keyed ``<config>@<n_workers>``.  Each measured
+row drives the real churn loop (kill one worker mid-serve, rejoin it)
+through :class:`~repro.runtime.replan.ElasticCoordinator` and records:
+
+* ``bitexact_after_recovery`` — every phase's output equals the
+  single-process ``Session`` on the surviving topology (hard invariant);
+* ``reshipped_bytes`` / ``full_setup_bytes`` — delta shipping must beat a
+  cold re-setup (hard invariant: reshipped < full);
+* ``cache_hit_rate`` — every unchanged ``ShardGeometry`` must hit the
+  worker's warm compiled-segment cache (hard invariant: 1.0 whenever
+  ``expected_cache_hits`` > 0);
+* ``leaked_tasks`` — asyncio tasks still pending after ``close()``
+  (hard invariant: 0);
+* ``downtime_kill_s`` / ``downtime_rejoin_s`` — wall-clock recovery
+  time, machine-bound and informational only.
+
+``--analytic`` skips the live coordinator entirely and emits only the
+deterministic plan-diff rows (``diff_plans`` over a churn transition) —
+the pinned-min CI cell gates those without spawning workers.
+
+Run:  PYTHONPATH=src python -m benchmarks.elastic_bench [--quick|--analytic]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _analytic_rows() -> dict:
+    """Deterministic plan-diff invariants: no workers, no wall clock."""
+    from repro.api.planner import Objective
+    from repro.core.allocation import WorkerParams
+    from repro.models import mobilenet_v2_smoke
+    from repro.runtime.elastic import ElasticCluster
+    from repro.runtime.replan import diff_plans
+
+    section = {}
+    for n in (3, 4):
+        cluster = ElasticCluster(
+            mobilenet_v2_smoke(), [WorkerParams() for _ in range(n)],
+            objective=Objective(modes=("spatial",)),
+            heartbeat_timeout=1e9, clock=lambda: 0.0)
+        old_split = cluster.plan.split
+        old_ids = cluster.plan_worker_ids
+        cluster.mark_failed(old_ids[0])
+        cluster.check(now=0.0)
+        by_pid = {pid: slot for slot, pid in enumerate(old_ids)}
+        wmap = {slot: by_pid[pid]
+                for slot, pid in enumerate(cluster.plan_worker_ids)
+                if pid in by_pid}
+        d = diff_plans(old_split, cluster.plan.split, qmodel=None,
+                       precision="float", worker_map=wmap)
+        section[f"mnv2_smoke@{n}"] = dict(
+            n_workers=n,
+            analytic=True,
+            full_setup_bytes=d.full_setup_bytes,
+            reshipped_bytes=d.reshipped_bytes,
+            unchanged_segments=d.unchanged,
+            moved_segments=d.moved,
+            resized_segments=d.resized)
+    return section
+
+
+def _measured_rows(quick: bool = False) -> dict:
+    """Live churn loop: kill -> serve -> rejoin over real workers."""
+    import asyncio
+    import numpy as np
+
+    from repro.api.planner import Objective
+    from repro.api.session import Session
+    from repro.core.allocation import WorkerParams
+    from repro.models import mobilenet_v2_smoke
+    from repro.runtime.elastic import ElasticCluster
+    from repro.runtime.replan import ElasticCoordinator
+
+    counts = (3,) if quick else (3, 4)
+    section = {}
+    for n in counts:
+        model = mobilenet_v2_smoke()
+        cluster = ElasticCluster(
+            model, [WorkerParams() for _ in range(n)],
+            objective=Objective(modes=("spatial",)),
+            heartbeat_timeout=1e9)
+        qm = Session(cluster.plan.split, seed=0).qmodel
+        rng = np.random.default_rng(0)
+        xs = [rng.standard_normal(model.input_shape).astype(np.float32)
+              for _ in range(2)]
+
+        async def drive():
+            out = {"phases": {}}
+            ec = ElasticCoordinator(cluster, qm, spawn="inprocess")
+            async with ec:
+                out["phases"]["steady"] = [await ec.infer(x) for x in xs]
+                victim = ec.physical_ids[0]
+                await ec.inject_failure(0)
+                out["phases"]["kill"] = [await ec.infer(x) for x in xs]
+                out["surviving_split"] = ec.split
+                await ec.rejoin(victim)
+                out["phases"]["rejoin"] = [await ec.infer(x) for x in xs]
+                out["reports"] = list(ec.reports)
+            out["leaked"] = len(
+                [t for t in asyncio.all_tasks()
+                 if t is not asyncio.current_task() and not t.done()])
+            return out
+
+        res = asyncio.run(drive())
+        oracle = Session(res["surviving_split"], qmodel=qm)
+        ys_ref = [oracle.run(x) for x in xs]
+        bitexact = all(
+            len(ys) == len(xs)
+            and all(np.array_equal(y, yr) for y, yr in zip(ys, ys_ref))
+            for ys in res["phases"].values())
+        kill, rejoin = res["reports"][0], res["reports"][-1]
+        hit_rate = min(r["hit_rate"] for r in res["reports"])
+        expected = sum(r["expected_cache_hits"] for r in res["reports"])
+        section[f"mnv2_smoke@{n}"] = dict(
+            n_workers=n,
+            spawn="inprocess",
+            bitexact_after_recovery=bool(bitexact),
+            full_setup_bytes=kill["full_setup_bytes"],
+            reshipped_bytes=kill["reshipped_bytes"],
+            rejoin_full_setup_bytes=rejoin["full_setup_bytes"],
+            rejoin_reshipped_bytes=rejoin["reshipped_bytes"],
+            cache_hit_rate=hit_rate,
+            expected_cache_hits=expected,
+            leaked_tasks=res["leaked"],
+            downtime_kill_s=round(kill["downtime_s"], 3),
+            downtime_rejoin_s=round(rejoin["downtime_s"], 3))
+    return section
+
+
+def elastic_section(quick: bool = False, analytic: bool = False) -> dict:
+    return _analytic_rows() if analytic else _measured_rows(quick)
+
+
+def bench_elastic(quick: bool = False) -> list[tuple]:
+    """run.py suite entry: persist the ``elastic`` BENCH section, return
+    CSV rows."""
+    from benchmarks.executor_bench import merge_sections
+
+    section = elastic_section(quick)
+    merge_sections(elastic=section)
+    rows = []
+    for key, e in section.items():
+        rows.append((f"elastic_{key}_downtime_kill_s", e["downtime_kill_s"],
+                     f"bitexact={e['bitexact_after_recovery']} "
+                     f"reshipped={e['reshipped_bytes']}/"
+                     f"{e['full_setup_bytes']}B "
+                     f"hit_rate={e['cache_hit_rate']}"))
+        rows.append((f"elastic_{key}_downtime_rejoin_s",
+                     e["downtime_rejoin_s"],
+                     f"reshipped={e['rejoin_reshipped_bytes']}/"
+                     f"{e['rejoin_full_setup_bytes']}B "
+                     f"leaked={e['leaked_tasks']}"))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    from benchmarks.executor_bench import merge_sections
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--analytic", action="store_true",
+                    help="plan-diff rows only; no live workers")
+    args = ap.parse_args(argv)
+    section = elastic_section(quick=args.quick, analytic=args.analytic)
+    payload = merge_sections(elastic=section)
+    print(json.dumps({"elastic": payload["elastic"]}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

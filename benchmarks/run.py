@@ -22,10 +22,11 @@ import time
 
 def build_suites(quick: bool):
     try:
-        from . import (executor_bench, kernel_bench, paper_benchmarks as pb,
-                       planner_bench, roofline_report, runtime_bench,
-                       serving_bench)
+        from . import (elastic_bench, executor_bench, kernel_bench,
+                       paper_benchmarks as pb, planner_bench,
+                       roofline_report, runtime_bench, serving_bench)
     except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+        import elastic_bench
         import executor_bench, kernel_bench, planner_bench  # noqa: E401
         import paper_benchmarks as pb
         import roofline_report
@@ -48,6 +49,8 @@ def build_suites(quick: bool):
          functools.partial(runtime_bench.bench_runtime, quick=quick)),
         ("Serving (multi-tenant continuous batching)",
          functools.partial(serving_bench.bench_serving, quick=quick)),
+        ("Elastic (churn recovery)",
+         functools.partial(elastic_bench.bench_elastic, quick=quick)),
         # last: renders the roofline/compile sections the executor bench
         # just persisted into roofline_report.md (uploaded by CI)
         ("Roofline (per-block report)", roofline_report.bench_roofline),

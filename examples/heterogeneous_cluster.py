@@ -1,24 +1,27 @@
 """Elastic heterogeneous cluster demo: rating-based allocation (paper §V)
 plus the beyond-paper elastic runtime — a worker dies mid-service, a second
-straggles, and the coordinator re-plans with Eq. 7 while keeping every
-surviving worker inside its memory budget.
+straggles, and the cluster re-plans with the full Planner search (mode x
+fusion x subset x transport, Eq. 7 overflow redistribution inside) while
+keeping every surviving worker inside its memory budget.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_cluster.py
 """
 import numpy as np
 
-from repro.core import SimConfig, WorkerParams, peak_ram_per_worker, simulate
+from repro.core import WorkerParams
 from repro.models import mobilenet_v2_smoke
 from repro.runtime.elastic import ElasticCluster
 
 
 def show(cluster, tag):
     plan = cluster.plan
-    peaks = peak_ram_per_worker(plan)
-    macs = [plan.worker_macs(w) / 1e3 for w in range(plan.n_workers)]
-    print(f"{tag}: workers={cluster.alive_indices} "
+    macs = [plan.split.worker_macs(slot) / 1e3
+            for slot in range(plan.n_workers)]
+    print(f"{tag}: alive={cluster.alive_indices} "
+          f"serving={list(cluster.plan_worker_ids)} "
+          f"mode={plan.mode}/{plan.transport} "
           f"share(kMACs)={np.round(macs).astype(int).tolist()} "
-          f"peakRAM(KB)={np.round(peaks/1024, 1).tolist()}")
+          f"peakRAM(KB)={np.round(plan.peak_ram / 1024, 1).tolist()}")
 
 
 def main():
@@ -27,10 +30,10 @@ def main():
                WorkerParams(f_mhz=600, flash_bytes=24 << 10),   # small flash
                WorkerParams(f_mhz=450, flash_bytes=64 << 10),
                WorkerParams(f_mhz=150, flash_bytes=64 << 10)]
-    cluster = ElasticCluster(model, workers, k1=0.133, kc=2.5,
-                             heartbeat_timeout=0.5)
+    cluster = ElasticCluster(model, workers, heartbeat_timeout=0.5)
     show(cluster, "initial plan   ")
-    print("  (worker 1's small flash forced Eq. 7 overflow redistribution)")
+    print("  (worker 1's small flash caps its share; the planner's Eq. 7 "
+          "redistribution keeps every shard inside flash)")
 
     # steady state: heartbeats + step times flow in
     for w in cluster.alive_indices:
@@ -42,20 +45,26 @@ def main():
         cluster.report_step_time(3, 4.0)
     if cluster.check():
         show(cluster, "post-straggler ")
+        print(f"  worker 3 demoted to {cluster.health[3].params.f_mhz:.0f} "
+              f"MHz (floored at {cluster.demotion_floor:.0%} of original)")
 
-    # worker 2 dies (no heartbeat)
+    # worker 2 dies (no heartbeat); the rest keep heartbeating
     cluster.mark_failed(2)
+    for w in cluster.alive_indices:
+        cluster.heartbeat(w)
     cluster.check()
     show(cluster, "post-failure   ")
 
-    alive = [cluster.health[i].params for i in cluster.alive_indices]
-    res = simulate(model, alive, cluster.plan.ratings, plan=cluster.plan)
-    print(f"re-planned inference latency: {res.total_time*1e3:.1f} ms")
-    piped = simulate(model, alive, cluster.plan.ratings, plan=cluster.plan,
-                     cfg=SimConfig(transport="pipelined"))
-    print(f"with pipelined transport:     {piped.total_time*1e3:.1f} ms "
-          f"(overlap saves {piped.overlap_saved_s*1e3:.1f} ms; mean link "
-          f"utilization {piped.timeline.link_utilization.mean():.0%})")
+    print(f"re-planned inference latency: "
+          f"{cluster.plan.latency_s * 1e3:.1f} ms "
+          f"(simulated, transport={cluster.plan.transport})")
+
+    # worker 2 comes back with a fresh process: original rating restored
+    cluster.rejoin(2)
+    for w in cluster.alive_indices:
+        cluster.heartbeat(w)
+    cluster.check()
+    show(cluster, "post-rejoin    ")
 
 
 if __name__ == "__main__":

@@ -247,6 +247,8 @@ class Session:
         if precision == "int8" and qmodel is None:
             qmodel = self._calibrate(calibration, calibration_samples, seed)
         self.qmodel = qmodel if precision == "int8" else None
+        self._use_pallas = use_pallas
+        self._interpret = interpret
         self.engine = CompiledSplitExecutor(self.split, self.qmodel,
                                             use_pallas=use_pallas,
                                             interpret=interpret)
@@ -387,15 +389,62 @@ class Session:
     def n_pending(self) -> int:
         return len(self._pending)
 
+    # -- elastic replan ------------------------------------------------------
+    def replan(self, plan: Plan | SplitPlan) -> None:
+        """Swap this session onto a new plan for the *same* model, keeping
+        the quantization, stats, buckets, and queued tickets.
+
+        The new engine reuses the cross-instance executable cache
+        (``CompiledSplitExecutor._fn_cache`` is keyed on plan geometry
+        fingerprints), so replanning back onto previously-seen geometry is
+        a warm start — no re-trace.  Pending tickets simply flush under
+        the new plan; output stays bit-exact because the qmodel is shared.
+        """
+        new_plan = plan if isinstance(plan, Plan) else None
+        new_split = plan.split if isinstance(plan, Plan) else plan
+        if not isinstance(new_split, SplitPlan):
+            raise TypeError("plan must be a repro.api.Plan or a core "
+                            "SplitPlan")
+        if new_split.model is not self.model and (
+                tuple(new_split.model.input_shape)
+                != tuple(self.model.input_shape)):
+            raise ValueError("replan target was built for a different model")
+        self.plan = new_plan
+        self.split = new_split
+        self.transport = (new_plan.transport if new_plan is not None
+                          else "serial")
+        self.model = new_split.model
+        self.engine = CompiledSplitExecutor(new_split, self.qmodel,
+                                            use_pallas=self._use_pallas,
+                                            interpret=self._interpret)
+
     # -- distributed serving -------------------------------------------------
-    def distributed(self, **kwargs) -> "object":
+    def distributed(self, *, elastic: bool = False, workers=None,
+                    objective=None, **kwargs) -> "object":
         """A :class:`repro.runtime.Coordinator` over this session's plan and
         quantization (same qmodel, so distributed output is bit-identical to
         this session).  Caller drives its async lifecycle::
 
             async with sess.distributed(spawn="process") as coord:
                 y = await coord.infer(x)
+
+        With ``elastic=True`` (requires ``workers``: the
+        :class:`~repro.core.allocation.WorkerParams` of the physical
+        fleet), returns an :class:`~repro.runtime.ElasticCoordinator` that
+        re-plans and serves through worker failure, demotion, and rejoin::
+
+            async with sess.distributed(elastic=True, workers=ws) as ec:
+                y = await ec.infer(x)      # survives churn
         """
+        if elastic:
+            if workers is None:
+                raise ValueError("distributed(elastic=True) needs workers=")
+            from ..runtime.elastic import ElasticCluster
+            from ..runtime.replan import ElasticCoordinator
+            cluster = ElasticCluster(self.model, list(workers),
+                                     objective=objective)
+            return ElasticCoordinator(cluster, self.qmodel,
+                                      precision=self.precision, **kwargs)
         from ..runtime.coordinator import Coordinator
         return Coordinator(self.split, self.qmodel,
                            precision=self.precision, **kwargs)

@@ -48,7 +48,8 @@ from ..core.quantize import QuantizedModel, quantize_activation_jnp
 from ..core.simulator import Timeline, TimelineEvent
 from ..core.splitting import SplitPlan
 from .protocol import ConnectionClosed, ProtocolError, read_frame, write_frame
-from .shards import build_coordinator_plan, build_worker_setup
+from .shards import (SEGMENT_CACHE_CAP, build_coordinator_plan,
+                     build_worker_setup, delta_setup, setup_array_bytes)
 
 SPAWN_MODES = ("process", "inprocess", "external")
 
@@ -68,6 +69,12 @@ class WorkerHandle:
         self.setup_s = 0.0
         self.proc = None                    # asyncio subprocess, if spawned
         self.log_file = None
+        # warm-store bookkeeping for elastic delta setups.  held_segments
+        # mirrors the worker's compiled-segment LRU (same order, same
+        # SEGMENT_CACHE_CAP), so "expected cache hit" never claims a
+        # fingerprint the worker has already evicted.
+        self.held_arrays: dict[str, int] = {}    # content fp -> nbytes
+        self.held_segments: dict[str, None] = {}  # fp -> None, LRU order
 
 
 class _RequestCtx:
@@ -127,6 +134,7 @@ class Coordinator:
         self.setup_s = 0.0
         self._server: asyncio.AbstractServer | None = None
         self._tasks: set[asyncio.Task] = set()
+        self._retired: list[WorkerHandle] = []
         self._seq = 0
         self._infer_lock = asyncio.Lock()
         self._fatal: asyncio.Future | None = None
@@ -186,27 +194,30 @@ class Coordinator:
         self._track(self._monitor())
         self._started = True
 
-    async def _spawn_processes(self) -> None:
+    async def _spawn_one(self, w: int) -> None:
         import repro
         src = os.path.dirname(os.path.dirname(os.path.abspath(
             repro.__file__)))
         env = dict(os.environ)
         env["PYTHONPATH"] = src + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        h = self.handles[w]
+        if self.log_dir:
+            os.makedirs(self.log_dir, exist_ok=True)
+            h.log_file = open(os.path.join(self.log_dir,
+                                           f"worker{w}.log"), "wb")
+            out = h.log_file
+        else:
+            out = asyncio.subprocess.DEVNULL
+        h.proc = await asyncio.create_subprocess_exec(
+            sys.executable, "-m", "repro.runtime.worker",
+            "--host", self.host, "--port", str(self.port),
+            "--id", str(w), "--heartbeat-s", str(self.heartbeat_s),
+            env=env, stdout=out, stderr=out)
+
+    async def _spawn_processes(self) -> None:
         for w in self.expected:
-            h = self.handles[w]
-            if self.log_dir:
-                os.makedirs(self.log_dir, exist_ok=True)
-                h.log_file = open(os.path.join(self.log_dir,
-                                               f"worker{w}.log"), "wb")
-                out = h.log_file
-            else:
-                out = asyncio.subprocess.DEVNULL
-            h.proc = await asyncio.create_subprocess_exec(
-                sys.executable, "-m", "repro.runtime.worker",
-                "--host", self.host, "--port", str(self.port),
-                "--id", str(w), "--heartbeat-s", str(self.heartbeat_s),
-                env=env, stdout=out, stderr=out)
+            await self._spawn_one(w)
 
     async def close(self) -> None:
         """Shut everything down; cancels every coordinator-created task."""
@@ -220,7 +231,7 @@ class Coordinator:
             t.cancel()
         if self._tasks:
             await asyncio.gather(*self._tasks, return_exceptions=True)
-        for h in self.handles.values():
+        for h in list(self.handles.values()) + self._retired:
             if h.writer is not None:
                 h.writer.close()
             if h.proc is not None:
@@ -231,6 +242,7 @@ class Coordinator:
                     await h.proc.wait()
             if h.log_file is not None:
                 h.log_file.close()
+        self._retired.clear()
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -259,7 +271,27 @@ class Coordinator:
         self._track(self._reader_loop(h))
         meta, arrays = build_worker_setup(self.split, self.qmodel,
                                           self.precision, w)
+        meta["worker"] = w
+        self._record_held(h, meta, arrays)
         h.send_q.put_nowait(("setup", {"plan": meta}, arrays))
+
+    @staticmethod
+    def _record_held(h: WorkerHandle, meta: dict, arrays: dict) -> None:
+        """Track which array contents / segment geometries a worker holds,
+        so a later replan ships only the delta."""
+        for spec in meta["segments"]:
+            for key, fp in spec.get("array_fps", {}).items():
+                h.held_arrays[fp] = int(arrays[key].nbytes)
+            fp = spec.get("fingerprint")
+            if fp is None:
+                continue
+            # replay the worker's LRU: hit -> most-recent, miss -> insert,
+            # evict oldest beyond the cap (build_segment_fns does the same
+            # in the same spec order)
+            h.held_segments.pop(fp, None)
+            h.held_segments[fp] = None
+            while len(h.held_segments) > SEGMENT_CACHE_CAP:
+                del h.held_segments[next(iter(h.held_segments))]
 
     async def _sender_loop(self, h: WorkerHandle) -> None:
         try:
@@ -291,7 +323,10 @@ class Coordinator:
                 elif t == "ready":
                     h.setup_s = float(frame.meta.get("setup_s", 0.0))
                     h.last_heartbeat = time.monotonic()
-                    if not h.ready_fut.done():
+                    fut = h.pending.get(("ready",))
+                    if fut is not None and not fut.done():
+                        fut.set_result(frame.meta)   # replan re-setup ack
+                    elif not h.ready_fut.done():
                         h.ready_fut.set_result(frame.meta)
                 else:
                     raise ProtocolError(f"unexpected frame {t!r}")
@@ -332,6 +367,126 @@ class Coordinator:
                         h, f"worker {h.worker} heartbeat silent for "
                            f"{now - h.last_heartbeat:.1f}s "
                            f"(timeout {self.heartbeat_timeout}s)")
+
+    # -- elastic replan ----------------------------------------------------
+
+    def _retire(self, h: WorkerHandle) -> None:
+        """Queue a handle for teardown: polite shutdown if still healthy,
+        process reaped in close().  Never blocks the replan."""
+        if h.failed is None and h.writer is not None:
+            h.send_q.put_nowait(("shutdown", {}, None))
+        self._retired.append(h)
+
+    async def replan_to(self, split: SplitPlan, *,
+                        worker_map: dict[int, int] | None = None) -> dict:
+        """Atomically cut the cluster over to a new SplitPlan.
+
+        Runs entirely under the infer lock: in-flight requests finish (or
+        fail) under the old plan, queued submissions resume under the new
+        one — no request ever observes a half-shipped topology.
+
+        ``worker_map`` maps each *new* plan worker index to the *old* index
+        whose live connection it inherits.  Inherited workers get a delta
+        setup (arrays they already hold are omitted; unchanged segment
+        geometry reuses their warm compiled cache); unmapped indices get
+        freshly spawned workers; old workers with no successor are retired.
+
+        Returns a transition report: ``downtime_s``, ``reshipped_bytes``
+        vs ``full_setup_bytes``, warm-cache ``cache_hits`` /
+        ``cache_misses`` vs ``expected_cache_hits`` and the resulting
+        ``hit_rate``.
+        """
+        if not self._started:
+            raise RuntimeError("Coordinator.start() has not completed")
+        worker_map = dict(worker_map or {})
+        loop = asyncio.get_running_loop()
+        async with self._infer_lock:
+            t0 = time.monotonic()
+            cplan = build_coordinator_plan(split, self.qmodel,
+                                           self.precision)
+            expected = sorted({w for g in cplan.groups for w in g.actives})
+            new_handles: dict[int, WorkerHandle] = {}
+            waiters: dict[int, asyncio.Future] = {}
+            inherited: list[int] = []
+            fresh: list[int] = []
+            full_setup_bytes = 0
+            reshipped_bytes = 0
+            expected_cache_hits = 0
+            for w in expected:
+                meta, arrays = build_worker_setup(split, self.qmodel,
+                                                  self.precision, w)
+                meta["worker"] = w
+                full_setup_bytes += setup_array_bytes(arrays)
+                old = worker_map.get(w)
+                h = self.handles.get(old) if old is not None else None
+                if (h is not None and h.failed is None
+                        and h.reader is not None):
+                    ship = delta_setup(meta, arrays, set(h.held_arrays))
+                    reshipped_bytes += setup_array_bytes(ship)
+                    expected_cache_hits += sum(
+                        1 for spec in meta["segments"]
+                        if spec.get("fingerprint") in h.held_segments)
+                    fut = loop.create_future()
+                    h.pending[("ready",)] = fut
+                    waiters[w] = fut
+                    self._record_held(h, meta, arrays)
+                    h.worker = w
+                    h.send_q.put_nowait(("setup", {"plan": meta}, ship))
+                    new_handles[w] = h
+                    inherited.append(w)
+                else:
+                    nh = WorkerHandle(w, loop)
+                    self._record_held(nh, meta, arrays)
+                    reshipped_bytes += setup_array_bytes(arrays)
+                    new_handles[w] = nh
+                    waiters[w] = nh.ready_fut
+                    fresh.append(w)
+            kept = {id(h) for h in new_handles.values()}
+            retired = [w for w, h in self.handles.items()
+                       if id(h) not in kept]
+            for w in retired:
+                self._retire(self.handles[w])
+            # atomic cutover: requests queued on the infer lock see this
+            self.split, self.cplan, self.expected = split, cplan, expected
+            self.handles = new_handles
+            if self.spawn == "process":
+                for w in fresh:
+                    await self._spawn_one(w)
+            elif self.spawn == "inprocess":
+                from .worker import run_worker
+                for w in fresh:
+                    self._track(run_worker(self.host, self.port, w,
+                                           heartbeat_s=self.heartbeat_s))
+            ready = asyncio.gather(*waiters.values())
+            try:
+                metas = await asyncio.wait_for(ready, self.setup_timeout)
+            except asyncio.TimeoutError:
+                missing = [w for w, f in waiters.items() if not f.done()]
+                raise RuntimeError(
+                    f"replan setup timed out after {self.setup_timeout}s "
+                    f"waiting for workers {missing}") from None
+            finally:
+                for w in inherited:
+                    new_handles[w].pending.pop(("ready",), None)
+            cache_hits = sum(int(m.get("cache_hits", 0)) for m in metas)
+            cache_misses = sum(int(m.get("cache_misses", 0)) for m in metas)
+            received_bytes = sum(int(m.get("received_bytes", 0))
+                                 for m in metas)
+            downtime_s = time.monotonic() - t0
+            return {
+                "downtime_s": downtime_s,
+                "full_setup_bytes": int(full_setup_bytes),
+                "reshipped_bytes": int(reshipped_bytes),
+                "received_bytes": int(received_bytes),
+                "cache_hits": cache_hits,
+                "cache_misses": cache_misses,
+                "expected_cache_hits": int(expected_cache_hits),
+                "hit_rate": (cache_hits / expected_cache_hits
+                             if expected_cache_hits else 1.0),
+                "inherited": inherited,
+                "spawned": fresh,
+                "retired": retired,
+            }
 
     # -- request-level messaging -------------------------------------------
 

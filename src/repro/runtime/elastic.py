@@ -5,10 +5,21 @@ Two deployment worlds share this module:
 
 * **MCU cluster** (the paper's): :class:`ElasticCluster` tracks per-worker
   health from heartbeats/observed step times, demotes stragglers by scaling
-  their capability rating (the same quantity Eq. 5 defines), drops dead
-  workers, and re-splits the model with the remaining ratings —
-  `redistribute_overflow` guarantees the new plan still fits each worker's
-  storage.
+  their capability rating (the same quantity Eq. 5 defines, floored at a
+  fraction of the original rating so repeated demotions cannot collapse a
+  worker to zero), drops dead workers, and re-plans over the survivors with
+  the full :class:`~repro.api.Planner` search — every axis the planner
+  knows (mode x fusion x subset x transport), not just neuron splitting,
+  with Eq. 7's overflow redistribution and the RAM/flash caps enforced
+  inside the search.
+
+  Worker *identity* is preserved across replans: the produced
+  :class:`~repro.api.Plan` indexes an alive-only subset cluster, and
+  :attr:`ElasticCluster.plan_worker_ids` maps each plan worker slot back to
+  the original worker id — so a coordinator can tell which physical worker
+  inherits which shard, and ship only the delta
+  (:meth:`~repro.runtime.Coordinator.replan_to`).
+
 * **TPU pod**: checkpoints restore onto a smaller mesh (ckpt/checkpoint.py
   restores with new shardings); `plan_recovery_mesh` picks the largest
   (data, model) mesh that still divides the surviving chip count, and the
@@ -21,8 +32,11 @@ import time
 
 import numpy as np
 
-from ..core.allocation import WorkerParams, ratings_for, redistribute_overflow
-from ..core.splitting import SplitPlan, split_model
+from ..core.allocation import WorkerParams
+
+
+class ClusterCollapsed(RuntimeError):
+    """Every worker is dead — no surviving workers to re-plan over."""
 
 
 @dataclasses.dataclass
@@ -34,22 +48,40 @@ class WorkerHealth:
 
 
 class ElasticCluster:
-    """Rating-based elastic coordinator for the networked-MCU world."""
+    """Rating-based elastic membership + re-planning for the MCU world.
 
-    def __init__(self, model, workers: list[WorkerParams], k1: float,
-                 kc: float, heartbeat_timeout: float = 5.0,
+    Holds the *policy* only (who is alive, how capable) — the transition
+    mechanics (delta shipping, warm recompiles, atomic cutover) live in
+    :class:`~repro.runtime.replan.ElasticCoordinator`.
+
+    ``plan`` is a full :class:`repro.api.Plan` over the alive subset;
+    ``plan_worker_ids[i]`` is the original worker id serving plan slot
+    ``i`` (the planner may choose a strict subset of the living workers).
+    """
+
+    def __init__(self, model, workers: list[WorkerParams], *,
+                 objective=None, sim_cfg=None,
+                 heartbeat_timeout: float = 5.0,
                  straggler_factor: float = 1.5,
+                 demotion_floor: float = 0.25,
                  clock=time.monotonic):
+        if not 0.0 < demotion_floor <= 1.0:
+            raise ValueError(f"demotion_floor must be in (0, 1], "
+                             f"got {demotion_floor}")
         self.model = model
-        self.k1, self.kc = k1, kc
+        self.objective = objective
+        self.sim_cfg = sim_cfg
         self.timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
+        self.demotion_floor = demotion_floor
         # injectable clock: timeout policy is testable without sleeping
         self._clock = clock
         self.health = [WorkerHealth(p, last_heartbeat=self._clock())
                        for p in workers]
+        self._original = tuple(workers)      # pre-demotion ratings basis
         self._planned_alive: tuple[int, ...] = tuple(range(len(workers)))
-        self.plan: SplitPlan = self._replan()
+        self.plan_worker_ids: tuple[int, ...] = ()
+        self.plan = self._replan()
 
     # -- signals ------------------------------------------------------------
     def heartbeat(self, worker: int, now: float | None = None):
@@ -66,6 +98,18 @@ class ElasticCluster:
     def mark_failed(self, worker: int):
         self.health[worker].alive = False
 
+    def rejoin(self, worker: int, params: WorkerParams | None = None,
+               now: float | None = None):
+        """A previously dead/demoted worker comes back (fresh process): it
+        re-enters at its original (or newly measured) capability with a
+        clean straggler history.  Call :meth:`check` to fold it into the
+        plan."""
+        h = self.health[worker]
+        h.alive = True
+        h.params = params if params is not None else self._original[worker]
+        h.last_heartbeat = self._clock() if now is None else now
+        h.ema_step_time = None
+
     # -- policy ---------------------------------------------------------------
     def check(self, now: float | None = None) -> bool:
         """Apply failure + straggler policy; returns True if the plan changed."""
@@ -79,28 +123,39 @@ class ElasticCluster:
                  if h.alive and h.ema_step_time]
         if times:
             med = float(np.median(times))
-            for h in self.health:
+            for i, h in enumerate(self.health):
                 if h.alive and h.ema_step_time and \
                         h.ema_step_time > self.straggler_factor * med:
                     # straggler: demote its effective clock so the rating —
-                    # and therefore its Alg. 1/2 share — shrinks.
+                    # and therefore its Alg. 1/2 share — shrinks.  Floored
+                    # at demotion_floor x the original clock so repeated
+                    # demotions cannot compound a worker to zero.
+                    floor = self.demotion_floor * self._original[i].f_mhz
                     h.params = dataclasses.replace(
-                        h.params, f_mhz=h.params.f_mhz * med / h.ema_step_time)
+                        h.params,
+                        f_mhz=max(floor,
+                                  h.params.f_mhz * med / h.ema_step_time))
                     h.ema_step_time = None
                     changed = True
         if changed:
             self.plan = self._replan()
         return changed
 
-    def _replan(self) -> SplitPlan:
+    def _replan(self):
+        from ..api.cluster import Cluster
+        from ..api.planner import Planner
         self._planned_alive = tuple(self.alive_indices)
-        alive = [h.params for h in self.health if h.alive]
-        if not alive:
-            raise RuntimeError("no surviving workers")
-        r = ratings_for(alive, self.k1, self.kc)
-        caps = np.array([p.flash_bytes for p in alive], dtype=np.float64)
-        r = redistribute_overflow(r, caps, self.model.total_weight_bytes(1))
-        return split_model(self.model, r)
+        alive_ids = list(self._planned_alive)
+        if not alive_ids:
+            raise ClusterCollapsed("no surviving workers")
+        sub = Cluster(tuple(self.health[i].params for i in alive_ids),
+                      name=f"alive[{len(alive_ids)}]")
+        plan = Planner(self.model, sub, self.sim_cfg).plan(self.objective)
+        # plan.worker_indices index the alive-only subset; map back to the
+        # original ids so worker identity survives the replan
+        self.plan_worker_ids = tuple(alive_ids[i]
+                                     for i in plan.worker_indices)
+        return plan
 
     @property
     def alive_indices(self) -> list[int]:

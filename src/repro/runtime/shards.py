@@ -32,7 +32,10 @@ executors use (``mapping.compile_shard_geometry`` /
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
+import json
 import time
 
 import numpy as np
@@ -52,6 +55,64 @@ def _check_precision(precision: str) -> bool:
         raise ValueError(f"unknown precision {precision!r} "
                          f"(want one of {PRECISIONS})")
     return precision == "int8"
+
+
+def _array_fp(a: np.ndarray) -> str:
+    """Content fingerprint of one wire array (dtype + shape + bytes)."""
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(tuple(a.shape)).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _array_role(key: str) -> str:
+    """Wire key with the group index stripped (``w3_1`` -> ``w_1``,
+    ``b7`` -> ``b``): array identity is content + role, never group
+    numbering, so a segment that lands at a different ``gi`` after a replan
+    still fingerprints identically."""
+    prefix, rest = key[0], key[1:]
+    if "_" in rest:
+        return prefix + "_" + rest.split("_", 1)[1]
+    return prefix
+
+
+def _fingerprint_spec(spec: dict, arrays: dict[str, np.ndarray],
+                      keys: list[str]) -> None:
+    """Annotate one segment spec in place with content fingerprints.
+
+    ``array_fps`` maps each wire array key to its content fingerprint (the
+    unit of re-ship avoidance: a worker that already holds the bytes is not
+    sent them again); ``fingerprint`` hashes the spec minus its group index
+    plus the array contents — the unit of warm recompilation: an identical
+    fingerprint means the jitted segment function can be reused verbatim.
+    """
+    spec["array_fps"] = {k: _array_fp(arrays[k]) for k in keys}
+    clean = {k: v for k, v in spec.items()
+             if k not in ("gi", "array_fps", "fingerprint")}
+    h = hashlib.sha256(json.dumps(clean, sort_keys=True).encode())
+    for k in sorted(keys, key=_array_role):
+        h.update(_array_role(k).encode())
+        h.update(spec["array_fps"][k].encode())
+    spec["fingerprint"] = h.hexdigest()[:16]
+
+
+def setup_array_bytes(arrays: dict[str, np.ndarray]) -> int:
+    """Total payload bytes of a setup frame's arrays."""
+    return int(sum(a.nbytes for a in arrays.values()))
+
+
+def delta_setup(meta: dict, arrays: dict[str, np.ndarray],
+                held_array_fps: set[str]) -> dict[str, np.ndarray]:
+    """The arrays a worker that already holds ``held_array_fps`` actually
+    needs — content the worker has (by fingerprint) is dropped, and the
+    worker resolves the omitted keys from its local store via the specs'
+    ``array_fps``.  The meta is shipped unchanged (specs are cheap JSON)."""
+    fps: dict[str, str] = {}
+    for spec in meta["segments"]:
+        fps.update(spec.get("array_fps", {}))
+    return {k: v for k, v in arrays.items()
+            if fps.get(k) not in held_array_fps}
 
 
 def _layer_consts(layer, ql, int8: bool):
@@ -97,6 +158,7 @@ def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
             first_layer = model.layers[idxs[0]]
             in_rows = (g0.in_hi - g0.in_lo) if g0 is not None else 0
             stages: list[dict] = []
+            seg_keys: list[str] = []
             for li, i in enumerate(idxs):
                 layer = model.layers[i]
                 g = geoms[li][worker]
@@ -112,19 +174,23 @@ def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
                 w, b, s = _layer_consts(layer, ql, int8)
                 arrays[f"w{gi}_{li}"] = w
                 arrays[f"b{gi}_{li}"] = b
+                seg_keys += [f"w{gi}_{li}", f"b{gi}_{li}"]
                 stage = {"layer": i, "stride": list(layer.stride),
                          "pw": layer.padding[1],
                          "pad_top": g.pad_top, "pad_bot": g.pad_bot,
                          "activation": layer.activation}
                 if int8:
                     arrays[f"s{gi}_{li}"] = s
+                    seg_keys.append(f"s{gi}_{li}")
                     stage["out_scale"] = float(ql.out_scale)
                 stages.append(stage)
-            segments.append({"gi": gi, "kind": "spatial",
-                             "layer_first": idxs[0],
-                             "in_shape": [first_layer.in_shape[0], in_rows,
-                                          first_layer.in_shape[2]],
-                             "stages": stages})
+            spec = {"gi": gi, "kind": "spatial",
+                    "layer_first": idxs[0],
+                    "in_shape": [first_layer.in_shape[0], in_rows,
+                                 first_layer.in_shape[2]],
+                    "stages": stages}
+            _fingerprint_spec(spec, arrays, seg_keys)
+            segments.append(spec)
             continue
         # flat group: singleton layer (conv/dwconv/linear shard, or
         # coordinator-local avgpool)
@@ -141,11 +207,15 @@ def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
             arrays[f"w{gi}"] = w[:, sl:e]
             arrays[f"b{gi}"] = b[sl:e]
             spec = {"gi": gi, "kind": "linear", "layer_first": i,
+                    "cols": [int(sl), int(e)],
                     "in_len": int(np.prod(layer.in_shape)),
                     "activation": layer.activation}
+            seg_keys = [f"w{gi}", f"b{gi}"]
             if int8:
                 arrays[f"s{gi}"] = s[sl:e]
+                seg_keys.append(f"s{gi}")
                 spec["out_scale"] = float(ql.out_scale)
+            _fingerprint_spec(spec, arrays, seg_keys)
             segments.append(spec)
             continue
         geom = compile_shard_geometry(layer, sp0)[worker]
@@ -162,6 +232,7 @@ def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
                 "bbox_start": int(geom.bbox_start),
                 "n_positions": int(geom.n_positions),
                 "activation": layer.activation}
+        seg_keys = [f"w{gi}", f"b{gi}"]
         if int8:
             # per-position epilogue scale over the shard's flat range — the
             # eager oracle requantizes the concatenated accumulator with
@@ -170,7 +241,9 @@ def build_worker_setup(split: SplitPlan, qmodel: QuantizedModel | None,
             hw = layer.out_shape[1] * layer.out_shape[2]
             idx = np.arange(shard.start, shard.stop)
             arrays[f"s{gi}"] = s[idx // hw]
+            seg_keys.append(f"s{gi}")
             spec["out_scale"] = float(ql.out_scale)
+        _fingerprint_spec(spec, arrays, seg_keys)
         segments.append(spec)
     meta = {"precision": precision, "segments": segments}
     if int8:
@@ -195,22 +268,48 @@ class CompiledSegment:
         np.asarray(self.fn(np.zeros(self.input_shape, dtype)))
 
 
+# Upper bound on warm compiled segments a worker keeps across replans.
+# Sized for several topology epochs of the full MobileNetV2 split (~30
+# segments per worker per epoch): the coordinator mirrors this LRU in
+# ``WorkerHandle.held_segments``, so the bound is also what the hit-rate
+# accounting promises — an undersized cap shows up as a gated hit-rate
+# miss, not a silent recompile.
+SEGMENT_CACHE_CAP = 256
+
+
 def build_segment_fns(meta: dict, arrays: dict[str, np.ndarray],
-                      ) -> dict[int, CompiledSegment]:
+                      cache: "collections.OrderedDict | None" = None,
+                      stats: dict | None = None) -> dict[int, CompiledSegment]:
     """Lower a setup payload into jitted segment functions (worker side).
 
     Each function's body is the same accumulation + epilogue the
     single-process executors trace, restricted to this worker's geometry.
+
+    ``cache`` (an ``OrderedDict`` the caller keeps across setups, LRU up to
+    ``SEGMENT_CACHE_CAP``) enables warm recompilation across replans: a spec
+    whose content ``fingerprint`` matches a cached entry reuses the already
+    jitted (and warmed) function instead of re-tracing — geometry that did
+    not change never recompiles.  ``stats`` (a dict, filled in place) gets
+    ``cache_hits`` / ``cache_misses`` counters for the coordinator's
+    hit-rate accounting.
     """
     import jax
     import jax.numpy as jnp
 
     int8 = _check_precision(meta["precision"])
     out: dict[int, CompiledSegment] = {}
+    hits = misses = 0
     for spec in meta["segments"]:
         if spec["kind"] == "skip":
             continue
         gi = spec["gi"]
+        fp = spec.get("fingerprint")
+        if cache is not None and fp is not None and fp in cache:
+            cache.move_to_end(fp)
+            out[gi] = dataclasses.replace(cache[fp], gi=gi)
+            hits += 1
+            continue
+        misses += 1
         if spec["kind"] == "spatial":
             stages = spec["stages"]
 
@@ -290,6 +389,13 @@ def build_segment_fns(meta: dict, arrays: dict[str, np.ndarray],
         out[gi] = CompiledSegment(gi=gi, layer_first=spec["layer_first"],
                                   input_shape=tuple(spec["in_shape"]),
                                   fn=jax.jit(body))
+        if cache is not None and fp is not None:
+            cache[fp] = out[gi]
+            while len(cache) > SEGMENT_CACHE_CAP:
+                cache.popitem(last=False)
+    if stats is not None:
+        stats["cache_hits"] = hits
+        stats["cache_misses"] = misses
     return out
 
 

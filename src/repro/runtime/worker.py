@@ -8,6 +8,8 @@ compute requests.  Lifecycle::
             -> compile + warm every segment fn -> ready{setup_s}
             -> serve: infer_input{seq,gi}+x  ->  result{seq,gi}+y
                       ping -> pong · collect{seq} -> events · shutdown -> exit
+            -> (setup frame mid-serve: delta re-setup for a replan)
+            -> ready{...} again, with warm-cache stats
 
 Concurrency shape (all on one event loop):
 
@@ -20,6 +22,17 @@ Concurrency shape (all on one event loop):
   and upload timing is measured around the actual ``write + drain``.
 * a **heartbeat** task pings the coordinator every ``heartbeat_s`` so
   liveness is observable independently of request traffic.
+
+Elastic re-setup: the worker keeps two warm stores across setups — an
+**array store** (content fingerprint -> ndarray) so a replan only ships
+arrays the worker does not already hold (the setup frame's specs name the
+fingerprints; missing entries are resolved from the store), and a
+**compiled-segment cache** (segment fingerprint -> jitted fn) so unchanged
+shard geometry never re-traces.  A mid-serve ``setup`` frame rebuilds the
+segment table in the compute pool (heartbeats keep flowing) and answers
+with a fresh ``ready`` frame carrying ``cache_hits``/``cache_misses`` /
+``received_bytes`` so the coordinator can assert warm-recompile and
+delta-shipping invariants.
 
 Event bookkeeping: download windows come from ``read_frame``'s receive
 timestamps, compute windows bracket the jitted call (``block_until_ready``
@@ -36,6 +49,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import collections
 import sys
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -43,7 +57,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from .protocol import ConnectionClosed, read_frame, write_frame
-from .shards import build_segment_fns, warmup_segments
+from .shards import _array_fp, build_segment_fns, warmup_segments
 
 _SHUTDOWN = object()
 
@@ -60,12 +74,59 @@ class _WorkerLoop:
         self.out_q: asyncio.Queue = asyncio.Queue()
         self.pool = ThreadPoolExecutor(max_workers=1)
         self.tasks: set[asyncio.Task] = set()
+        # warm stores, persistent across setups (elastic replans)
+        self.array_store: dict[str, np.ndarray] = {}
+        self.seg_cache: collections.OrderedDict = collections.OrderedDict()
 
     def _event(self, kind: str, gi: int, layer: int, t0: float, t1: float,
                nbytes: int = 0) -> None:
         self.events.append({"worker": self.worker_id, "kind": kind,
                             "segment": gi, "layer": layer,
                             "start_s": t0, "end_s": t1, "nbytes": nbytes})
+
+    # -- setup -------------------------------------------------------------
+    def _resolve_arrays(self, meta: dict,
+                        shipped: dict[str, np.ndarray]) -> dict:
+        """Merge shipped arrays with the warm store.
+
+        Arrays present in the frame are stored under their content
+        fingerprint; keys the frame omitted must resolve from the store via
+        the spec's ``array_fps`` — a miss is a coordinator protocol error.
+        """
+        fps: dict[str, str] = {}
+        for spec in meta["segments"]:
+            fps.update(spec.get("array_fps", {}))
+        arrays: dict[str, np.ndarray] = {}
+        for key, fp in fps.items():
+            if key in shipped:
+                arrays[key] = shipped[key]
+                self.array_store[fp] = shipped[key]
+            elif fp in self.array_store:
+                arrays[key] = self.array_store[fp]
+            else:
+                raise RuntimeError(
+                    f"worker {self.worker_id}: setup omitted array {key!r} "
+                    f"(fp {fp}) but it is not in the local store")
+        # legacy payloads without fingerprints ship everything
+        for key, a in shipped.items():
+            arrays.setdefault(key, a)
+            self.array_store.setdefault(_array_fp(a), a)
+        return arrays
+
+    def _apply_setup(self, meta: dict, shipped: dict[str, np.ndarray],
+                     received_bytes: int) -> dict:
+        """Build + warm the segment table; returns the ready-frame meta."""
+        self.worker_id = int(meta.get("worker", self.worker_id))
+        arrays = self._resolve_arrays(meta, shipped)
+        stats: dict = {}
+        self.segments = build_segment_fns(meta, arrays,
+                                          cache=self.seg_cache, stats=stats)
+        setup_s = warmup_segments(self.segments, meta["precision"])
+        return {"worker": self.worker_id, "setup_s": setup_s,
+                "segments": sorted(self.segments),
+                "cache_hits": stats.get("cache_hits", 0),
+                "cache_misses": stats.get("cache_misses", 0),
+                "received_bytes": int(received_bytes)}
 
     # -- writer ------------------------------------------------------------
     async def _writer_loop(self) -> None:
@@ -115,6 +176,14 @@ class _WorkerLoop:
                                 "worker": self.worker_id},
                                {"y": y}, (gi, seg.layer_first)))
 
+    async def _resetup_and_ack(self, frame) -> None:
+        """Mid-serve re-setup: rebuild segments off-loop, then ack ready."""
+        loop = asyncio.get_running_loop()
+        ready_meta = await loop.run_in_executor(
+            self.pool, self._apply_setup, frame.meta["plan"], frame.arrays,
+            frame.nbytes)
+        self.out_q.put_nowait(("frame", "ready", ready_meta, None, None))
+
     # -- main --------------------------------------------------------------
     async def run(self) -> None:
         await write_frame(self.writer, "hello", {"worker": self.worker_id})
@@ -122,18 +191,13 @@ class _WorkerLoop:
         if setup.type != "setup":
             raise RuntimeError(f"worker {self.worker_id}: expected setup "
                                f"frame, got {setup.type!r}")
-        plan_meta = setup.meta["plan"]
-        self.segments = build_segment_fns(plan_meta, setup.arrays)
-        setup_s = warmup_segments(self.segments, plan_meta["precision"])
+        ready_meta = self._apply_setup(setup.meta["plan"], setup.arrays,
+                                       setup.nbytes)
         for coro in (self._writer_loop(), self._heartbeat_loop()):
             t = asyncio.create_task(coro)
             self.tasks.add(t)
             t.add_done_callback(self.tasks.discard)
-        self.out_q.put_nowait(("frame", "ready",
-                               {"worker": self.worker_id,
-                                "setup_s": setup_s,
-                                "segments": sorted(self.segments)},
-                               None, None))
+        self.out_q.put_nowait(("frame", "ready", ready_meta, None, None))
         try:
             while True:
                 frame = await read_frame(self.reader)
@@ -145,6 +209,13 @@ class _WorkerLoop:
                                 frame.nbytes)
                     t = asyncio.create_task(self._compute_and_send(
                         seq, gi, frame.arrays["x"]))
+                    self.tasks.add(t)
+                    t.add_done_callback(self.tasks.discard)
+                elif frame.type == "setup":
+                    # elastic replan: adopt the new plan without dropping
+                    # the connection; build runs in the compute pool so
+                    # heartbeats keep flowing during compilation
+                    t = asyncio.create_task(self._resetup_and_ack(frame))
                     self.tasks.add(t)
                     t.add_done_callback(self.tasks.discard)
                 elif frame.type == "collect":

@@ -54,9 +54,11 @@ class Overloaded(RuntimeError):
     """Typed load-shed response: the tenant cannot take this request now.
 
     Carries enough structure for a client to back off intelligently:
-    which gate fired (``reason``: ``"queue_cap"``, ``"slo"`` — or
-    ``"shutdown"`` for requests rejected by a non-draining stop), the queue
-    state it saw, and the predicted delay vs the tenant's target.
+    which gate fired (``reason``: ``"queue_cap"``, ``"slo"`` —
+    ``"shutdown"`` for requests rejected by a non-draining stop, or
+    ``"rebalancing"`` when the elastic runtime sheds at its retry-queue
+    cap during a topology transition), the queue state it saw, and the
+    predicted delay vs the tenant's target.
     """
 
     def __init__(self, tenant: str, reason: str, *, queue_depth: int,

@@ -123,8 +123,23 @@ class Server:
         self.monitor.register_session(name, session)
         return session
 
-    def tenants(self) -> tuple[str, ...]:
-        return tuple(self._tenants)
+    def replan_tenant(self, name: str, plan: Plan | SplitPlan) -> None:
+        """Swap a live tenant onto a new plan for the same model (elastic
+        topology change under load).
+
+        Runs under the scheduler lock, so the cutover is atomic with
+        respect to batch formation: requests already queued dispatch under
+        the new plan, and every unchanged shard geometry hits the shared
+        cross-instance executable cache (``Session.replan`` re-traces only
+        new bucket geometries).  A plan built for a different model is
+        rejected before anything is touched.
+        """
+        with self._lock:
+            tenant = self._tenant(name)
+            tenant.session.replan(plan)
+        if self._thread is None:
+            # not started yet: warm on the caller's thread like add_tenant
+            tenant.session.warmup()
 
     def session(self, tenant: str) -> Session:
         return self._tenant(tenant).session

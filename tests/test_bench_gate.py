@@ -450,6 +450,87 @@ class TestServingGate:
                                       "--fresh", str(f)]) == 0
 
 
+def _elastic_payload(bitexact=True, reshipped=12880, full=71184,
+                     hit_rate=1.0, expected=16, leaked=0):
+    p = _payload()
+    p["elastic"] = {"mnv2_smoke@3": dict(
+        n_workers=3, spawn="inprocess",
+        bitexact_after_recovery=bitexact,
+        full_setup_bytes=full, reshipped_bytes=reshipped,
+        rejoin_full_setup_bytes=100336, rejoin_reshipped_bytes=33016,
+        cache_hit_rate=hit_rate, expected_cache_hits=expected,
+        leaked_tasks=leaked,
+        downtime_kill_s=3.7, downtime_rejoin_s=2.2)}
+    return p
+
+
+class TestElasticGate:
+    def test_healthy_elastic_row_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json", _elastic_payload())
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_bitexact_false_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json", _elastic_payload(bitexact=False))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_reship_not_below_full_fails(self, tmp_path):
+        """Delta shipping degenerating to a cold re-setup is the replan
+        layer losing its point — gated on the fresh row alone."""
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _elastic_payload(reshipped=71184))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_cache_miss_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json", _elastic_payload(hit_rate=0.9))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_vacuous_hit_rate_not_gated(self, tmp_path):
+        """No unchanged geometry (expected 0) means there is nothing to
+        hit — the rate is not gated on such rows."""
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _elastic_payload(hit_rate=0.0, expected=0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 0
+
+    def test_leaked_tasks_fail(self, tmp_path):
+        b = _write(tmp_path, "base.json", _elastic_payload())
+        f = _write(tmp_path, "fresh.json", _elastic_payload(leaked=2))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f)]) == 1
+
+    def test_analytic_row_gates_reship_only(self, tmp_path):
+        """--analytic rows (plan diff, no live workers) carry only the
+        reship invariant; absent fields are not gated."""
+        p = _payload()
+        p["elastic"] = {"mnv2_smoke@3": dict(
+            n_workers=3, analytic=True,
+            full_setup_bytes=188136, reshipped_bytes=51240,
+            unchanged_segments=4)}
+        b = _write(tmp_path, "base.json", p)
+        f = _write(tmp_path, "fresh.json", p)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "elastic"]) == 0
+
+    def test_committed_elastic_section_holds(self):
+        """The committed baseline's own elastic rows must satisfy every
+        machine-independent invariant the gate enforces."""
+        doc = json.loads((_ROOT / "BENCH_executor.json").read_text())
+        failures, compared = check_regression.compare(
+            doc, doc, 0.2, sections=("elastic",))
+        assert compared > 0
+        assert failures == []
+
+
 class TestMergeSections:
     def test_merge_sections_is_per_key(self, tmp_path, monkeypatch):
         """kernel_bench/executor_bench section writes replace only the keys

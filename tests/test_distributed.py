@@ -5,6 +5,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# each test forks a fresh interpreter with 8 forced host devices: keep the
+# module on one xdist worker (serial group) to bound peak process count
+pytestmark = pytest.mark.xdist_group("runtime")
 
 _ENV = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
         "PYTHONPATH": "src"}

@@ -4,13 +4,19 @@ The clock callable makes the heartbeat-timeout logic testable without
 sleeping (ISSUE 7 bugfix): time is advanced explicitly, including the
 previously-broken ``now=0.0`` case that the old ``now or time.monotonic()``
 expression silently replaced with wall-clock time.
+
+ISSUE 9 additions: the cluster re-plans with the full ``Planner`` (worker
+identity preserved through ``plan_worker_ids``, every search axis live
+instead of the old compacted neuron-only ``split_model`` path), raises
+typed ``ClusterCollapsed``, floors straggler demotion at a fraction of the
+original rating, and supports ``rejoin``.
 """
-import numpy as np
 import pytest
 
 from conftest import small_cnn
+from repro.api.plan import Plan
 from repro.core.allocation import WorkerParams
-from repro.runtime.elastic import ElasticCluster
+from repro.runtime.elastic import ClusterCollapsed, ElasticCluster
 
 
 class FakeClock:
@@ -24,8 +30,7 @@ class FakeClock:
 def cluster(n=3, timeout=5.0, clock=None, **kw):
     clock = clock or FakeClock()
     c = ElasticCluster(small_cnn(), [WorkerParams() for _ in range(n)],
-                       k1=1.0, kc=1.0, heartbeat_timeout=timeout,
-                       clock=clock, **kw)
+                       heartbeat_timeout=timeout, clock=clock, **kw)
     return c, clock
 
 
@@ -58,7 +63,8 @@ class TestDropPath:
         assert c.check() is True
         assert c.alive_indices == [0, 2]
         assert c.plan is not old_plan
-        assert c.plan.n_workers == 2
+        assert 1 not in c.plan_worker_ids
+        assert set(c.plan_worker_ids) <= {0, 2}
 
     def test_fresh_heartbeats_keep_everyone(self):
         c, clk = cluster(n=3, timeout=5.0)
@@ -75,13 +81,57 @@ class TestDropPath:
         c.heartbeat(0, now=99.0)
         assert c.check(now=100.0) is True
         assert c.alive_indices == [0]
-        assert c.plan.n_workers == 1
+        assert c.plan_worker_ids == (0,)
 
-    def test_all_dead_raises(self):
+    def test_all_dead_raises_typed(self):
         c, clk = cluster(n=2, timeout=5.0)
         clk.t = 50.0
-        with pytest.raises(RuntimeError, match="no surviving workers"):
+        with pytest.raises(ClusterCollapsed, match="no surviving workers"):
             c.check()
+
+    def test_cluster_collapsed_is_runtime_error(self):
+        # callers catching the pre-ISSUE-9 bare RuntimeError keep working
+        assert issubclass(ClusterCollapsed, RuntimeError)
+
+
+class TestPlannerBacked:
+    """Regression: the old `_replan` used raw neuron-only `split_model`
+    over a *compacted* alive-only index space — worker identity was lost
+    and the mode/fusion/subset/transport axes were ignored."""
+
+    def test_plan_is_full_api_plan(self):
+        c, clk = cluster(n=3)
+        assert isinstance(c.plan, Plan)
+        # every planner axis is present on the decision, not hardwired
+        assert c.plan.mode in ("neuron", "kernel", "spatial", "mixed")
+        assert c.plan.transport in ("serial", "pipelined")
+
+    def test_worker_identity_preserved(self):
+        c, clk = cluster(n=4)
+        # identity mapping to original ids, aligned with plan slots
+        assert len(c.plan_worker_ids) == c.plan.n_workers
+        assert set(c.plan_worker_ids) <= {0, 1, 2, 3}
+        c.mark_failed(0)                # kill the *first* id: any compacted
+        assert c.check(now=0.0)         # index space would shift survivors
+        assert 0 not in c.plan_worker_ids
+        assert set(c.plan_worker_ids) <= {1, 2, 3}
+        # plan slots still resolve to the surviving physical workers
+        for slot, pid in enumerate(c.plan_worker_ids):
+            assert c.health[pid].alive
+            assert c.plan.split.worker_weight_bytes(slot) >= 0
+
+    def test_flash_caps_respected_after_churn(self):
+        m = small_cnn()
+        workers = [WorkerParams(flash_bytes=64 << 10),
+                   WorkerParams(flash_bytes=8 << 10),    # tiny flash
+                   WorkerParams(flash_bytes=64 << 10)]
+        c = ElasticCluster(m, workers, heartbeat_timeout=5.0,
+                           clock=FakeClock())
+        c.mark_failed(0)
+        c.check(now=0.0)
+        for slot, pid in enumerate(c.plan_worker_ids):
+            assert (c.plan.split.worker_weight_bytes(slot)
+                    <= workers[pid].flash_bytes)
 
 
 class TestDemotionPath:
@@ -95,9 +145,30 @@ class TestDemotionPath:
         assert c.check() is True
         assert c.health[2].params.f_mhz < f0 / 2
         assert c.health[2].ema_step_time is None   # reset after demotion
-        # demoted worker gets a smaller share in the new plan
-        shares = [c.plan.worker_weight_bytes(w) for w in range(3)]
-        assert shares[2] < shares[0]
+        # demoted worker gets a smaller share in the new plan (or none)
+        shares = {pid: c.plan.split.worker_weight_bytes(slot)
+                  for slot, pid in enumerate(c.plan_worker_ids)}
+        assert shares.get(2, 0) < shares[0]
+
+    def test_demotion_floor(self):
+        # regression: repeated demotions compounded f_mhz toward zero
+        c, clk = cluster(n=3, timeout=1e9, straggler_factor=1.5,
+                         demotion_floor=0.25)
+        f0 = c.health[2].params.f_mhz
+        for _ in range(6):              # repeated straggle/demote rounds
+            for _ in range(4):
+                c.report_step_time(0, 1.0)
+                c.report_step_time(1, 1.0)
+                c.report_step_time(2, 100.0)
+            c.check()
+        assert c.health[2].params.f_mhz >= 0.25 * f0
+        assert c.health[2].params.f_mhz == pytest.approx(0.25 * f0)
+
+    def test_demotion_floor_validated(self):
+        with pytest.raises(ValueError, match="demotion_floor"):
+            cluster(n=2, demotion_floor=0.0)
+        with pytest.raises(ValueError, match="demotion_floor"):
+            cluster(n=2, demotion_floor=1.5)
 
     def test_balanced_workers_not_demoted(self):
         c, clk = cluster(n=3, timeout=1e9, straggler_factor=1.5)
@@ -112,3 +183,36 @@ class TestDemotionPath:
         c.mark_failed(1)
         assert c.check(now=0.1) is True
         assert c.alive_indices == [0, 2]
+
+
+class TestRejoin:
+    def test_rejoin_restores_original_rating(self):
+        c, clk = cluster(n=3, timeout=1e9)
+        f0 = c.health[2].params.f_mhz
+        for _ in range(4):
+            c.report_step_time(0, 1.0)
+            c.report_step_time(1, 1.0)
+            c.report_step_time(2, 10.0)
+        c.check()
+        assert c.health[2].params.f_mhz < f0
+        c.rejoin(2)                      # fresh process: clean slate
+        assert c.health[2].params.f_mhz == f0
+        assert c.health[2].ema_step_time is None
+
+    def test_rejoin_after_death_refolds_into_plan(self):
+        c, clk = cluster(n=3)
+        c.mark_failed(1)
+        assert c.check(now=0.0)
+        assert 1 not in c.plan_worker_ids
+        c.rejoin(1, now=0.0)
+        assert c.check(now=0.0)
+        assert 1 in c.alive_indices
+        assert 1 in c.plan_worker_ids
+
+    def test_rejoin_with_new_measured_params(self):
+        c, clk = cluster(n=2)
+        c.mark_failed(1)
+        c.check(now=0.0)
+        slow = WorkerParams(f_mhz=100.0)
+        c.rejoin(1, params=slow, now=0.0)
+        assert c.health[1].params.f_mhz == 100.0

@@ -13,6 +13,9 @@ from repro.runtime.protocol import (MAX_FRAME_BYTES, ConnectionClosed,
                                     ProtocolError, decode_body, encode_frame,
                                     read_frame)
 
+# event-loop + socket-pair tests: one xdist worker (serial group)
+pytestmark = pytest.mark.xdist_group("runtime")
+
 TIMEOUT = 30
 
 

@@ -1,0 +1,357 @@
+"""ISSUE 9 tentpole tests: plan diffing, delta shipping, warm recompiles,
+and the serve-through-churn transition protocol.
+
+Layers under test:
+
+* ``shards`` fingerprints — deterministic content identity per array and
+  per segment spec, the substrate both the diff layer and the worker-side
+  warm caches key on;
+* ``diff_plans``/``PlanDiff`` — exact unchanged/moved/resized/new
+  classification, reshipped-bytes < full-setup-bytes minimality;
+* ``build_segment_fns`` warm cache — unchanged geometry never re-traces;
+* ``Session.replan`` — swapping plans reuses the cross-instance executable
+  cache and stays bit-exact;
+* ``ElasticCoordinator`` — end-to-end: worker killed mid-stream, cluster
+  re-plans, output bit-exact vs a single-process Session on the surviving
+  topology, only the delta re-shipped, warm-cache hit-rate 1.0, typed
+  ``Overloaded(reason="rebalancing")`` at the queue cap;
+* hypothesis churn property (``HYPOTHESIS_PROFILE=ci``) — random
+  kill/degrade sequences over random heterogeneous clusters keep the plan
+  feasible and the diff minimal.
+"""
+import asyncio
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import small_cnn
+from repro.api.planner import Objective
+from repro.api.session import Session
+from repro.core.allocation import WorkerParams
+from repro.core.executor import CompiledSplitExecutor
+from repro.core.splitting import split_model
+from repro.runtime.elastic import ElasticCluster
+from repro.runtime.replan import ElasticCoordinator, diff_plans
+from repro.runtime.shards import (build_segment_fns, build_worker_setup,
+                                  delta_setup, setup_array_bytes)
+from repro.serve.admission import Overloaded
+
+pytestmark = pytest.mark.xdist_group("runtime")
+
+
+@pytest.fixture(scope="module")
+def model():
+    return small_cnn()
+
+
+@pytest.fixture(scope="module")
+def qmodel(model):
+    # one shared quantization: bit-exactness comparisons are meaningful
+    return Session(split_model(model, np.ones(2)), seed=0).qmodel
+
+
+class TestFingerprints:
+    def test_deterministic(self, model, qmodel):
+        s = split_model(model, np.ones(3), mode="spatial", fused=True)
+        m1, a1 = build_worker_setup(s, qmodel, "int8", 0)
+        m2, a2 = build_worker_setup(s, qmodel, "int8", 0)
+        fps1 = [sp.get("fingerprint") for sp in m1["segments"]]
+        fps2 = [sp.get("fingerprint") for sp in m2["segments"]]
+        assert fps1 == fps2
+        assert any(fp is not None for fp in fps1)
+
+    def test_geometry_change_changes_fingerprint(self, model, qmodel):
+        s_a = split_model(model, np.array([1.0, 1.0]))
+        s_b = split_model(model, np.array([3.0, 1.0]))   # shifted columns
+        m_a, _ = build_worker_setup(s_a, qmodel, "int8", 0)
+        m_b, _ = build_worker_setup(s_b, qmodel, "int8", 0)
+        fps_a = {sp["gi"]: sp["fingerprint"] for sp in m_a["segments"]
+                 if "fingerprint" in sp}
+        fps_b = {sp["gi"]: sp["fingerprint"] for sp in m_b["segments"]
+                 if "fingerprint" in sp}
+        assert any(fps_a[gi] != fps_b.get(gi) for gi in fps_a)
+
+    def test_delta_setup_empty_when_all_held(self, model, qmodel):
+        s = split_model(model, np.ones(2))
+        meta, arrays = build_worker_setup(s, qmodel, "int8", 0)
+        held = {fp for sp in meta["segments"]
+                for fp in sp.get("array_fps", {}).values()}
+        assert delta_setup(meta, arrays, held) == {}
+        assert len(delta_setup(meta, arrays, set())) == len(arrays)
+        assert setup_array_bytes(arrays) > 0
+
+
+class TestPlanDiff:
+    def test_identity_diff_all_unchanged(self, model, qmodel):
+        s = split_model(model, np.ones(3), mode="spatial", fused=True)
+        d = diff_plans(s, s, qmodel, "int8")
+        assert d.moved == d.resized == d.new == d.removed == 0
+        assert d.unchanged > 0
+        assert d.reshipped_bytes == 0
+        for e in d.entries:
+            assert e.status == "unchanged" and e.reship_bytes == 0
+
+    def test_shrink_reships_less_than_full(self, model, qmodel):
+        s3 = split_model(model, np.ones(3), mode="spatial", fused=True)
+        s2 = split_model(model, np.ones(2), mode="spatial", fused=True)
+        d = diff_plans(s3, s2, qmodel, "int8")
+        assert d.reshipped_bytes < d.full_setup_bytes
+        # spatial survivors replicate full layer weights: band resize
+        # re-ships specs, not weights, so only geometry-changed shards
+        # re-materialize
+        for e in d.entries:
+            if e.status == "unchanged":
+                assert e.reship_bytes == 0
+
+    def test_unmapped_workers_ship_everything(self, model, qmodel):
+        s = split_model(model, np.ones(2))
+        d = diff_plans(s, s, qmodel, "int8", worker_map={})
+        assert d.reshipped_bytes == d.full_setup_bytes
+
+    def test_summary_mentions_counts(self, model, qmodel):
+        s = split_model(model, np.ones(2))
+        text = diff_plans(s, s, qmodel, "int8").summary()
+        assert "unchanged" in text and "reship" in text
+
+
+class TestWarmSegmentCache:
+    def test_unchanged_geometry_never_retraces(self, model, qmodel):
+        s = split_model(model, np.ones(2), mode="spatial", fused=True)
+        meta, arrays = build_worker_setup(s, qmodel, "int8", 0)
+        cache: collections.OrderedDict = collections.OrderedDict()
+        stats: dict = {}
+        segs1 = build_segment_fns(meta, arrays, cache=cache, stats=stats)
+        assert stats["cache_hits"] == 0
+        assert stats["cache_misses"] == len(segs1)
+        segs2 = build_segment_fns(meta, arrays, cache=cache, stats=stats)
+        assert stats["cache_misses"] == 0
+        assert stats["cache_hits"] == len(segs2)
+        # reused entries carry the (possibly remapped) group index
+        for gi, seg in segs2.items():
+            assert seg.gi == gi
+            assert seg.fn is segs1[gi].fn      # the jitted fn itself
+
+    def test_no_cache_kwarg_stays_compatible(self, model, qmodel):
+        s = split_model(model, np.ones(2))
+        meta, arrays = build_worker_setup(s, qmodel, "int8", 0)
+        segs = build_segment_fns(meta, arrays)
+        assert len(segs) > 0
+
+
+class TestSessionReplan:
+    def test_replan_bitexact_and_warm(self, model, qmodel):
+        s2 = split_model(model, np.ones(2), mode="spatial", fused=True)
+        s3 = split_model(model, np.ones(3), mode="spatial", fused=True)
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal(model.input_shape).astype(np.float32)
+        sess = Session(s2, qmodel=qmodel)
+        y2 = sess.run(x)
+        sess.replan(s3)
+        assert sess.split is s3
+        y3 = sess.run(x)
+        assert np.array_equal(y2, y3)   # same qmodel: split is invisible
+        # replanning back onto seen geometry hits the cross-instance
+        # executable cache — no re-trace
+        before = CompiledSplitExecutor.cache_stats()
+        sess.replan(s2)
+        y2b = sess.run(x)
+        after = CompiledSplitExecutor.cache_stats()
+        assert np.array_equal(y2, y2b)
+        assert after["hits"] > before["hits"]
+        assert after["misses"] == before["misses"]
+
+    def test_replan_rejects_other_model(self, model):
+        from repro.core.reinterpret import trace_sequential
+        sess = Session(split_model(model, np.ones(2)), seed=0)
+        other = trace_sequential(
+            [dict(kind="conv", out_channels=4, kernel=(3, 3), stride=(1, 1),
+                  padding=(1, 1)),
+             dict(kind="avgpool"),
+             dict(kind="linear", features=10)],
+            (3, 24, 24), rng=np.random.default_rng(3))
+        with pytest.raises(ValueError, match="different model"):
+            sess.replan(split_model(other, np.ones(2)))
+
+    def test_server_replan_tenant_live(self, model, qmodel):
+        from repro.serve import Server
+        s2 = split_model(model, np.ones(2), mode="spatial", fused=True)
+        s3 = split_model(model, np.ones(3), mode="spatial", fused=True)
+        rng = np.random.default_rng(4)
+        xs = [rng.standard_normal(model.input_shape).astype(np.float32)
+              for _ in range(4)]
+        ref = Session(s2, qmodel=qmodel)
+        srv = Server()
+        srv.add_tenant("t", Session(s2, qmodel=qmodel))
+        with srv:
+            for x in xs[:2]:
+                assert np.array_equal(srv.submit("t", x).result(timeout=60.0),
+                                      ref.run(x))
+            # live topology swap: queued + later requests serve under the
+            # new plan, output stays bit-exact (same qmodel)
+            srv.replan_tenant("t", s3)
+            assert srv.session("t").split is s3
+            for x in xs[2:]:
+                assert np.array_equal(srv.submit("t", x).result(timeout=60.0),
+                                      ref.run(x))
+
+    def test_server_replan_unknown_tenant(self, model):
+        from repro.serve import Server
+        srv = Server()
+        srv.add_tenant("t", split_model(model, np.ones(2)), seed=0)
+        with pytest.raises(KeyError, match="unknown tenant"):
+            srv.replan_tenant("nope", split_model(model, np.ones(3)))
+
+
+class TestSessionDistributedElastic:
+    def test_facade_builds_elastic_coordinator(self, model, qmodel):
+        sess = Session(split_model(model, np.ones(2)), qmodel=qmodel)
+        ec = sess.distributed(elastic=True,
+                              workers=[WorkerParams() for _ in range(2)],
+                              objective=Objective(modes=("spatial",)),
+                              spawn="inprocess")
+        assert isinstance(ec, ElasticCoordinator)
+        # shares the session's quantization: churn cannot shift the scales
+        assert ec.qmodel is sess.qmodel
+        assert ec.plan.mode == "spatial"
+
+    def test_facade_requires_workers(self, model, qmodel):
+        sess = Session(split_model(model, np.ones(2)), qmodel=qmodel)
+        with pytest.raises(ValueError, match="workers"):
+            sess.distributed(elastic=True)
+
+
+class TestElasticCoordinatorTyped:
+    def test_queue_cap_sheds_typed(self, model, qmodel):
+        cluster = ElasticCluster(model, [WorkerParams() for _ in range(2)],
+                                 objective=Objective(modes=("spatial",)),
+                                 heartbeat_timeout=1e9, clock=lambda: 0.0)
+        ec = ElasticCoordinator(cluster, qmodel, spawn="inprocess",
+                                queue_cap=0)
+        with pytest.raises(Overloaded) as ei:
+            asyncio.run(ec.infer(np.zeros(model.input_shape, np.float32)))
+        assert ei.value.reason == "rebalancing"
+        assert ei.value.queue_depth == 0
+
+
+class TestChurnEndToEnd:
+    def test_kill_then_rejoin_bitexact(self, model, qmodel):
+        """Mid-stream worker kill: recovery is bit-exact vs the
+        single-process Session on the surviving topology, only moved
+        shards re-ship, and every unchanged geometry hits the warm
+        compiled cache (rate 1.0, non-vacuous on rejoin)."""
+        workers = [WorkerParams() for _ in range(3)]
+        cluster = ElasticCluster(model, workers,
+                                 objective=Objective(modes=("spatial",)),
+                                 heartbeat_timeout=1e9)
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal(model.input_shape).astype(np.float32)
+
+        async def run():
+            out = {}
+            async with ElasticCoordinator(cluster, qmodel,
+                                          spawn="inprocess") as ec:
+                out["y0"] = await ec.infer(x)
+                out["split0"] = ec.split
+                victim = ec.physical_ids[0]
+                await ec.inject_failure(0)
+                out["y1"] = await ec.infer(x)     # replan + retry inside
+                out["split1"] = ec.split
+                out["kill_report"] = ec.reports[-1]
+                out["victim_gone"] = victim not in cluster.plan_worker_ids
+                out["rejoin_report"] = await ec.rejoin(victim)
+                out["y2"] = await ec.infer(x)
+                out["split2"] = ec.split
+            return out
+
+        out = asyncio.run(run())
+        for tag in ("0", "1", "2"):
+            oracle = Session(out[f"split{tag}"], qmodel=qmodel)
+            assert np.array_equal(out[f"y{tag}"], oracle.run(x)), \
+                f"phase {tag} not bit-exact vs single-process Session"
+        assert out["victim_gone"]
+        kill, rejoin = out["kill_report"], out["rejoin_report"]
+        for rep in (kill, rejoin):
+            assert rep["reshipped_bytes"] < rep["full_setup_bytes"]
+            assert rep["hit_rate"] == 1.0
+            assert rep["cache_hits"] == rep["expected_cache_hits"]
+        # rejoin returns survivors to their original geometry: the warm
+        # cache must hit non-vacuously
+        assert rejoin["cache_hits"] > 0
+        assert rejoin["spawned"], "rejoined worker needs a fresh process"
+
+
+# -- hypothesis churn property ---------------------------------------------
+
+_MODEL = None
+
+
+def _shared_model():
+    global _MODEL
+    if _MODEL is None:
+        _MODEL = small_cnn()
+    return _MODEL
+
+
+@st.composite
+def churn_scenarios(draw):
+    n = draw(st.integers(min_value=2, max_value=5))
+    f = [draw(st.sampled_from([150.0, 300.0, 600.0])) for _ in range(n)]
+    flash = [draw(st.sampled_from([16 << 10, 64 << 10, 1 << 20]))
+             for _ in range(n)]
+    events = draw(st.lists(
+        st.tuples(st.sampled_from(["kill", "degrade"]),
+                  st.integers(min_value=0, max_value=n - 1)),
+        min_size=1, max_size=3))
+    return n, f, flash, events
+
+
+@given(churn_scenarios())
+@settings(max_examples=20, deadline=None)
+def test_churn_property_feasible_and_minimal(scenario):
+    """Random kill/degrade over random heterogeneous clusters: the
+    post-churn plan respects every survivor's RAM/flash caps, worker
+    identity maps into the alive set, and the plan diff re-materializes
+    only geometry-changed shards (unchanged => zero reship bytes)."""
+    n, f, flash, events = scenario
+    m = _shared_model()
+    workers = [WorkerParams(f_mhz=fi, flash_bytes=fl)
+               for fi, fl in zip(f, flash)]
+    try:
+        c = ElasticCluster(m, workers, heartbeat_timeout=1e9,
+                           clock=lambda: 0.0)
+    except RuntimeError:
+        return                          # cluster infeasible from the start
+    old_split = c.plan.split
+    old_ids = c.plan_worker_ids
+    alive = set(range(n))
+    for kind, w in events:
+        if kind == "kill" and len(alive) > 1 and w in alive:
+            c.mark_failed(w)
+            alive.discard(w)
+        elif kind == "degrade" and w in alive:
+            for ww in sorted(alive):
+                c.report_step_time(ww, 10.0 if ww == w else 1.0)
+    try:
+        c.check(now=0.0)
+    except RuntimeError:
+        return                          # survivors can't fit the model
+    # feasibility: every serving worker within its own caps
+    for slot, pid in enumerate(c.plan_worker_ids):
+        assert pid in alive
+        assert (c.plan.split.worker_weight_bytes(slot)
+                <= workers[pid].flash_bytes)
+        assert c.plan.peak_ram[slot] <= workers[pid].ram_bytes
+    # diff minimality: unchanged shards ship zero bytes
+    by_pid = {pid: slot for slot, pid in enumerate(old_ids)}
+    wmap = {slot: by_pid[pid]
+            for slot, pid in enumerate(c.plan_worker_ids)
+            if pid in by_pid}
+    d = diff_plans(old_split, c.plan.split, qmodel=None,
+                   precision="float", worker_map=wmap)
+    for e in d.entries:
+        if e.status == "unchanged":
+            assert e.reship_bytes == 0
+    assert d.reshipped_bytes <= d.full_setup_bytes

@@ -19,7 +19,11 @@ from repro.core.simulator import dependency_edges
 from repro.core.splitting import split_model, split_model_mixed
 from repro.runtime import protocol
 from repro.runtime.coordinator import Coordinator
-from repro.runtime.validate import run_distributed, validate_distributed
+from repro.runtime.validate import run_distributed
+
+# subprocess workers + localhost sockets: keep the module on one xdist
+# worker (serial group) so parallel cells don't oversubscribe the runner
+pytestmark = pytest.mark.xdist_group("runtime")
 
 TIMEOUT = 240
 

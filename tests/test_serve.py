@@ -19,6 +19,10 @@ from repro.serve import (SLO, AdmissionController, EdfBatcher, Overloaded,
                          saturation_throughput)
 from repro.serve.scheduler import make_request
 
+# threaded server + wall-clock SLO assertions: keep the module on one xdist
+# worker (serial group) so parallel cells don't skew its timing
+pytestmark = pytest.mark.xdist_group("runtime")
+
 
 @pytest.fixture(scope="module")
 def model():
