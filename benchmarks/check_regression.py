@@ -61,6 +61,19 @@ a >20% regression:
   ``downtime_kill_s`` / ``downtime_rejoin_s`` are runner wall-clock and
   only reported.  ``--analytic`` rows (plan-diff only, no live workers)
   carry just the reship invariant — the pinned-min cell gates those.
+* ``search`` (plan-search rows per {config}@{workers}) — the analytic
+  scores (``ladder_score``, ``beam_score``, ``dp_transport_pipelined_s``)
+  drift-gate at the 20% line; four machine-independent invariants hold on
+  the FRESH rows alone: ``beam_score <= ladder_score`` (the beam evaluates
+  every ladder prefix, so its plan may never be worse),
+  ``warm_misses < cold_replan_misses`` (a warm-cache replan must *evaluate*
+  strictly fewer candidates than a cold search of the same survivor
+  topology), ``warm_hit_rate > 0`` (the replan actually reused cached
+  evaluations), and ``dp_transport_pipelined_s <= dp_serial_pipelined_s``
+  with a strict win (``transport_dp_win``) required on at least one
+  mnv2_112 row whenever mnv2_112 rows are fresh — the transport-aware
+  mixing DP must beat the serial surrogate where heterogeneity bites.
+  The ``*_wall_s`` fields are runner wall-clock and only reported.
 * ``kernels`` (per-kernel ref-vs-Pallas micro-bench) — ``speedup`` is a
   ratio of two paths timed in the same process, so it is machine-insensitive
   even though the absolute wall times are not: the 20% line is held on the
@@ -73,8 +86,8 @@ a >20% regression:
 
 ``--sections`` restricts which sections are compared — the pinned-min jax
 CI cell regenerates only the analytic + ratio sections
-(``peaks,planner,transport,mixed,kernels``) and gates those, catching
-cost-model drift the latest-jax bench job can mask.
+(``peaks,planner,transport,mixed,search,kernels``) and gates those,
+catching cost-model drift the latest-jax bench job can mask.
 
 Rows/modes present in only one file are reported but don't fail the gate
 (benchmarks may gain coverage); missing files or empty overlap DO fail — a
@@ -100,7 +113,7 @@ def _row_key(row: dict) -> tuple:
 
 
 SECTIONS = ("rows", "peaks", "planner", "transport", "mixed", "kernels",
-            "runtime", "serving", "elastic")
+            "runtime", "serving", "elastic", "search")
 
 
 def compare(baseline: dict, fresh: dict, threshold: float,
@@ -227,6 +240,85 @@ def compare(baseline: dict, fresh: dict, threshold: float,
                 f"mixed invariant broken {key}: chosen score "
                 f"{f['mixed_s']} exceeds best uniform "
                 f"{f['best_uniform_s']}")
+    base_sr = baseline.get("search", {}) if "search" in sections else {}
+    fresh_sr = fresh.get("search", {}) if "search" in sections else {}
+    for key in sorted(base_sr.keys() & fresh_sr.keys()):
+        b, f = base_sr[key], fresh_sr[key]
+        # the scores are analytic: growth past the threshold means the
+        # search now finds a worse plan, not machine noise
+        for metric in ("ladder_score", "beam_score",
+                       "dp_transport_pipelined_s"):
+            if metric not in b or metric not in f:
+                continue
+            compared += 1
+            if f[metric] > b[metric] * (1.0 + threshold):
+                failures.append(
+                    f"search regression {key}/{metric}: {f[metric]} > "
+                    f"{1.0 + threshold:.0%} of baseline {b[metric]}")
+            else:
+                print(f"ok search {key}/{metric}: {f[metric]} "
+                      f"(baseline {b[metric]})")
+    transport_dp_wins = []
+    fresh_mnv2 = [k for k in fresh_sr if k.startswith("mnv2_112@")]
+    for key in sorted(fresh_sr.keys()):
+        f = fresh_sr[key]
+        # all four invariants are machine-independent — gated on the fresh
+        # rows alone
+        if ("beam_score" in f and "ladder_score" in f):
+            compared += 1
+            if f["beam_score"] > f["ladder_score"] * (1.0 + 1e-9):
+                failures.append(
+                    f"search invariant broken {key}: beam plan score "
+                    f"{f['beam_score']} exceeds ladder plan score "
+                    f"{f['ladder_score']} — the beam evaluates every "
+                    f"ladder prefix, so it may never be worse")
+            else:
+                print(f"ok search {key}/beam<=ladder: {f['beam_score']} "
+                      f"<= {f['ladder_score']}")
+        if ("warm_misses" in f and "cold_replan_misses" in f):
+            compared += 1
+            if f["warm_misses"] >= f["cold_replan_misses"]:
+                failures.append(
+                    f"search invariant broken {key}: warm replan evaluated "
+                    f"{f['warm_misses']} candidates, not strictly fewer "
+                    f"than the cold search's {f['cold_replan_misses']}")
+            else:
+                print(f"ok search {key}/warm<cold: {f['warm_misses']} < "
+                      f"{f['cold_replan_misses']} evaluations")
+        if "warm_hit_rate" in f:
+            compared += 1
+            if f["warm_hit_rate"] <= 0.0:
+                failures.append(
+                    f"search invariant broken {key}: warm replan hit rate "
+                    f"{f['warm_hit_rate']} — the cache reused nothing")
+            else:
+                print(f"ok search {key}/warm_hit_rate: "
+                      f"{f['warm_hit_rate']}")
+        if ("dp_serial_pipelined_s" in f and "dp_transport_pipelined_s" in f):
+            compared += 1
+            if (f["dp_transport_pipelined_s"]
+                    > f["dp_serial_pipelined_s"] * (1.0 + 1e-9)):
+                failures.append(
+                    f"search invariant broken {key}: transport-aware DP "
+                    f"pipelined latency {f['dp_transport_pipelined_s']} s "
+                    f"exceeds the serial-surrogate DP's "
+                    f"{f['dp_serial_pipelined_s']} s — the re-rank makes "
+                    f"this impossible unless the variant set shrank")
+            else:
+                print(f"ok search {key}/dp_transport<=dp_serial: "
+                      f"{f['dp_transport_pipelined_s']} <= "
+                      f"{f['dp_serial_pipelined_s']}")
+            if key in fresh_mnv2 and f.get("transport_dp_win"):
+                transport_dp_wins.append(key)
+    if fresh_mnv2:
+        compared += 1
+        if not transport_dp_wins:
+            failures.append(
+                "search invariant broken: no fresh mnv2_112 row shows the "
+                "transport-aware mixing DP strictly beating the serial "
+                "surrogate on pipelined latency (transport_dp_win)")
+        else:
+            print(f"ok search transport_dp_win on {transport_dp_wins}")
     base_kn = baseline.get("kernels", {}) if "kernels" in sections else {}
     fresh_kn = fresh.get("kernels", {}) if "kernels" in sections else {}
     kn_ratios = []

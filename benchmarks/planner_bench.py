@@ -5,7 +5,7 @@ its predicted overlap savings) — the analytic ones are machine-independent
 and gated by ``check_regression.py`` against the committed baseline; the
 wall time is informational.
 
-Four sections merge into ``BENCH_executor.json`` via read-modify-write
+Five sections merge into ``BENCH_executor.json`` via read-modify-write
 (so this bench and ``executor_bench`` can run in either order — each
 preserves the other's sections):
 
@@ -17,9 +17,15 @@ preserves the other's sections):
   enabled (``Objective(modes=SEARCH_MODES)``), from one shared search — the
   chosen plan may never score worse than the best uniform candidate
   (gated invariant);
+* ``search`` — the plan-*search* rows per {config}@{workers}: beam vs
+  prefix-ladder plan score, cold vs warm-cache replan (candidates
+  evaluated / cache misses / hit rate; walls informational), and the
+  transport-aware vs serial-surrogate mixing DP judged on exact simulated
+  pipelined latency — the machine-independent invariants are gated by
+  ``check_regression.py --sections search``;
 * ``peaks`` — the analytic per-worker peak-RAM maxima (same computation as
   ``executor_bench``), so the fully-analytic CI cell (pinned-min jax) can
-  regenerate and gate planner/peaks/transport/mixed without timing
+  regenerate and gate planner/peaks/transport/mixed/search without timing
   anything.
 
 Run:  PYTHONPATH=src python -m benchmarks.planner_bench [--quick]
@@ -48,6 +54,14 @@ TRANSPORT_MODES = ("neuron", "spatial")
 # the mixed section covers the acceptance regime: 7/8-worker heterogeneous
 # demo clusters are where per-block mixing beats the best uniform plan
 MIXED_WORKER_COUNTS = (3, 7, 8)
+# the search section's cluster sizes (cold vs warm-cache replans, beam vs
+# ladder, transport-aware vs serial-surrogate mixing DP)
+SEARCH_WORKER_COUNTS = (3, 7, 8)
+SEARCH_BEAM_WIDTH = 4
+# total candidate-evaluation budget for the beam row (ladder evaluations
+# count toward it): bounds the CI analytic cell's wall at mnv2 scale while
+# leaving the beam ~2x the ladder's evaluation count to explore with
+SEARCH_BUDGET = 64
 
 
 def _configs(quick: bool):
@@ -195,6 +209,144 @@ def mixed_metrics(quick: bool = False) -> tuple[list[tuple], dict]:
     return rows, data
 
 
+def search_metrics(quick: bool = False,
+                   counts: tuple[int, ...] = SEARCH_WORKER_COUNTS
+                   ) -> tuple[list[tuple], dict]:
+    """The plan-*search* rows per config@k: how the shared cost-model layer
+    (``core.search``) changes what the planner finds and how fast.
+
+    Three comparisons per row, all gated by ``check_regression.py``'s
+    ``search`` section on machine-independent quantities (the walls are
+    informational):
+
+    * **beam vs ladder** — the same objective searched with
+      ``beam_width=SEARCH_BEAM_WIDTH`` vs the default prefix ladder; the
+      beam always evaluates the ladder prefixes too, so its plan score may
+      never be worse (gated on every fresh row);
+    * **warm vs cold replan** — the lowest-rated worker dies and the
+      survivors are re-planned against the cache the initial search filled
+      (the ``ElasticCluster`` path) vs a cold planner on the same survivor
+      topology: the warm replan must *evaluate* (cache-miss) strictly fewer
+      candidates and show a hit rate > 0 (both gated);
+    * **transport-aware vs serial-surrogate mixing DP** — both DP variants'
+      chosen assignments judged on the exact simulated *pipelined* latency
+      of their plans; the transport-aware path re-ranks both candidates so
+      it is never worse, and must strictly win on at least one mnv2_112
+      row (the PR-5 follow-on's acceptance regime).
+    """
+    import dataclasses
+
+    from repro.api import Cluster, InfeasibleError, Objective, Planner
+    from repro.api.plan import build_split_plan
+    from repro.core import (CostCache, SimConfig, measured_kc, ratings_for,
+                            simulate, simulated_k1)
+    from repro.core.mixed import search_mixed_assignment
+
+    rows: list[tuple] = []
+    data: dict[str, dict] = {}
+    cfg = SimConfig()
+    for name, make_model in _configs(quick):
+        model = make_model()
+        for k in counts:
+            cluster = Cluster.heterogeneous_demo(k)
+            objective = Objective(minimize="latency", ram_cap_bytes=RAM_CAP)
+            cache = CostCache()
+            # cold ladder search — fills the shared cache
+            planner = Planner(model, cluster, cache=cache)
+            t0 = time.perf_counter()
+            ladder = planner.plan(objective)
+            cold_wall = time.perf_counter() - t0
+            cold = planner.last_stats
+            # beam over non-prefix subsets, same cache (ladder prefixes hit)
+            beam_planner = Planner(model, cluster, cache=cache)
+            t0 = time.perf_counter()
+            beam = beam_planner.plan(dataclasses.replace(
+                objective, beam_width=SEARCH_BEAM_WIDTH,
+                search_budget=SEARCH_BUDGET))
+            beam_wall = time.perf_counter() - t0
+            beam_stats = beam_planner.last_stats
+            # warm replan: the lowest-rated worker dies; survivors re-planned
+            # against the same cache (what ElasticCluster does on churn) ...
+            victim = int(planner._worker_order()[-1])
+            survivors = Cluster(
+                tuple(w for i, w in enumerate(cluster.workers)
+                      if i != victim), name=f"demo[{k}]-1")
+            # a shrunk survivor cluster can be infeasible at the paper scale
+            # (mnv2@3 minus one worker blows the RAM cap) — the search still
+            # runs every candidate, so the warm-vs-cold stats stay valid
+            warm_planner = Planner(model, survivors, cache=cache)
+            t0 = time.perf_counter()
+            try:
+                warm_planner.plan(objective)
+            except InfeasibleError:
+                pass
+            warm_wall = time.perf_counter() - t0
+            warm = warm_planner.last_stats
+            # ... vs the same replan from a cold cache (the yardstick)
+            cold_planner = Planner(model, survivors)
+            t0 = time.perf_counter()
+            try:
+                cold_planner.plan(objective)
+            except InfeasibleError:
+                pass
+            cold_replan_wall = time.perf_counter() - t0
+            cold_replan = cold_planner.last_stats
+            # transport-aware vs serial-surrogate mixing DP, both judged on
+            # the exact simulated pipelined latency of their chosen plans
+            workers = list(cluster.workers)
+            ratings = ratings_for(
+                workers, simulated_k1(model, cluster.max_f_mhz, cfg),
+                measured_kc(model, k, cfg))
+            caps = np.array([min(w.ram_bytes, RAM_CAP) for w in workers],
+                            dtype=np.float64)
+            pcfg = dataclasses.replace(cfg, transport="pipelined")
+
+            def _pipe_latency(search):
+                split = build_split_plan(
+                    model, ratings, "mixed", assignment=search.assignment,
+                    block_workers=search.block_workers)
+                return simulate(model, workers, ratings, pcfg, plan=split,
+                                compute_peak=False).total_time
+
+            dp_cache = CostCache()   # the two DPs share block-cost tables
+            s_serial = search_mixed_assignment(
+                model, workers, ratings, cfg, ram_caps=caps, cache=dp_cache)
+            s_pipe = search_mixed_assignment(
+                model, workers, ratings, cfg, ram_caps=caps,
+                transport="pipelined", cache=dp_cache)
+            dp_serial_s = _pipe_latency(s_serial)
+            # the planner's transport-aware path re-ranks both assignments
+            # under the exact pipelined simulate — min() is what it deploys
+            dp_transport_s = min(dp_serial_s, _pipe_latency(s_pipe))
+            entry = dict(
+                ladder_score=round(ladder.score, 9),
+                beam_score=round(beam.score, 9),
+                beam_width=SEARCH_BEAM_WIDTH,
+                beam_subsets=beam_stats.subsets_explored,
+                cold_wall_s=round(cold_wall, 4),
+                beam_wall_s=round(beam_wall, 4),
+                warm_wall_s=round(warm_wall, 4),
+                cold_replan_wall_s=round(cold_replan_wall, 4),
+                cold_candidates=cold.candidates_evaluated,
+                cold_misses=cold.cache_misses,
+                warm_candidates=warm.candidates_evaluated,
+                warm_misses=warm.cache_misses,
+                warm_hit_rate=round(warm.cache_hit_rate, 6),
+                cold_replan_candidates=cold_replan.candidates_evaluated,
+                cold_replan_misses=cold_replan.cache_misses,
+                dp_serial_pipelined_s=round(dp_serial_s, 9),
+                dp_transport_pipelined_s=round(dp_transport_s, 9),
+                transport_dp_win=bool(
+                    dp_transport_s < dp_serial_s * (1.0 - 1e-12)))
+            data[f"{name}@{k}"] = entry
+            rows.append((f"search_{name}_w{k}", cold_wall,
+                         f"beam={beam.score:.4f}s ladder={ladder.score:.4f}s "
+                         f"warm_hits={warm.cache_hits}/"
+                         f"{warm.candidates_evaluated} "
+                         f"dp_win={entry['transport_dp_win']}"))
+    return rows, data
+
+
 def analytic_peaks(quick: bool = False) -> dict:
     """The ``peaks`` section via the same :func:`executor_bench.peaks_for`
     the timed bench uses — here so the analytic-only CI cell can refresh it
@@ -204,7 +356,7 @@ def analytic_peaks(quick: bool = False) -> dict:
 
 
 def merge_results(planner: dict, transport: dict, mixed: dict,
-                  peaks: dict) -> dict:
+                  peaks: dict, search: dict | None = None) -> dict:
     """Read-modify-write the shared JSON: update only our sections, and
     merge each of them per key — a ``--quick`` run refreshes the smoke
     entries without erasing the committed full-model (mnv2_112) coverage
@@ -216,8 +368,11 @@ def merge_results(planner: dict, transport: dict, mixed: dict,
         except json.JSONDecodeError:
             payload = {}
     payload.setdefault("benchmark", "executor_eager_vs_compiled")
-    for section, fresh in (("planner", planner), ("transport", transport),
-                           ("mixed", mixed), ("peaks", peaks)):
+    sections = [("planner", planner), ("transport", transport),
+                ("mixed", mixed), ("peaks", peaks)]
+    if search is not None:
+        sections.append(("search", search))
+    for section, fresh in sections:
         merged = dict(payload.get(section, {}))
         merged.update(fresh)
         payload[section] = merged
@@ -229,9 +384,10 @@ def _collect(quick: bool) -> tuple[list[tuple], dict]:
     rows, planner = planner_metrics(quick=quick)
     t_rows, transport = transport_metrics(quick=quick)
     m_rows, mixed = mixed_metrics(quick=quick)
+    s_rows, search = search_metrics(quick=quick)
     peaks = analytic_peaks(quick=quick)
-    payload = merge_results(planner, transport, mixed, peaks)
-    return rows + t_rows + m_rows, payload
+    payload = merge_results(planner, transport, mixed, peaks, search)
+    return rows + t_rows + m_rows + s_rows, payload
 
 
 def bench_planner(quick: bool = False) -> list[tuple]:
@@ -244,10 +400,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smoke model only (CI)")
+    ap.add_argument("--search-n8", action="store_true",
+                    help="refresh only the search section at N=8 "
+                         "(the nightly wide-cluster search run)")
     args = ap.parse_args()
+    if args.search_n8:
+        _, search = search_metrics(quick=args.quick, counts=(8,))
+        payload = merge_results({}, {}, {}, {}, search)
+        print(json.dumps(payload["search"], indent=2))
+        return
     _, payload = _collect(args.quick)
     print(json.dumps({k: payload[k]
-                      for k in ("planner", "transport", "mixed")},
+                      for k in ("planner", "transport", "mixed", "search")},
                      indent=2))
 
 

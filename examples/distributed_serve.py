@@ -27,6 +27,7 @@ import argparse
 import asyncio
 import json
 import sys
+import time
 
 import numpy as np
 
@@ -96,6 +97,16 @@ def run_churn(args, model, name) -> int:
             await ec.rejoin(victim)
             res["phases"]["rejoin"] = [await ec.infer(x) for x in xs]
             res["reports"] = list(ec.reports)
+            # cold-search yardstick for the warm-replan invariant: a fresh
+            # Planner (empty CostCache) on the same post-rejoin topology
+            from repro.api.cluster import Cluster as ApiCluster
+            from repro.api.planner import Planner
+            sub = ApiCluster(
+                tuple(cluster.health[i].params
+                      for i in cluster.alive_indices), name="cold")
+            t0 = time.perf_counter()
+            Planner(model, sub, cluster.sim_cfg).plan(cluster.objective)
+            res["cold_search_wall_s"] = time.perf_counter() - t0
         leaked = [t for t in asyncio.all_tasks()
                   if t is not asyncio.current_task() and not t.done()]
         res["leaked_tasks"] = len(leaked)
@@ -141,6 +152,22 @@ def run_churn(args, model, name) -> int:
                             f"budget {args.recovery_budget} s")
     if rejoin_rep["cache_hits"] == 0:
         failures.append("rejoin produced zero warm-cache hits (vacuous)")
+    # warm-replan search invariants: the cluster's persistent CostCache must
+    # make every churn replan warm (hit rate > 0) and the rejoin replan
+    # strictly faster than a cold search of the same topology
+    for tag, rep in [("kill", kill_rep), ("rejoin", rejoin_rep)]:
+        print(f"  {tag}: search {rep['replan_candidates_evaluated']} "
+              f"candidates, hit rate {rep['replan_cache_hit_rate']:.2f}, "
+              f"wall {rep['replan_search_wall_s'] * 1e3:.0f} ms "
+              f"(cold {res['cold_search_wall_s'] * 1e3:.0f} ms)")
+        if rep["replan_cache_hit_rate"] <= 0.0:
+            failures.append(f"{tag} replan searched cold "
+                            f"(cache hit rate "
+                            f"{rep['replan_cache_hit_rate']})")
+    if rejoin_rep["replan_search_wall_s"] >= res["cold_search_wall_s"]:
+        failures.append(
+            f"warm rejoin search wall {rejoin_rep['replan_search_wall_s']:.3f}"
+            f" s >= cold search wall {res['cold_search_wall_s']:.3f} s")
     if not res["victim_excluded"]:
         failures.append("killed worker still in plan_worker_ids")
     if res["leaked_tasks"]:
@@ -153,6 +180,7 @@ def run_churn(args, model, name) -> int:
                "precision": args.precision,
                "phases": {k: len(v) for k, v in res["phases"].items()},
                "victim": res["victim"],
+               "cold_search_wall_s": res["cold_search_wall_s"],
                "reports": res["reports"],
                "leaked_tasks": res["leaked_tasks"],
                "failures": failures}

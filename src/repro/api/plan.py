@@ -27,7 +27,7 @@ FUSIONS = ("block", "layer")
 
 def build_split_plan(model: ReinterpretedModel, ratings, mode: str,
                      fusion: str = "block",
-                     assignment=None) -> SplitPlan:
+                     assignment=None, block_workers=None) -> SplitPlan:
     """Build the concrete :class:`SplitPlan` for one (mode, fusion) candidate.
 
     ``fusion`` selects the execution granularity of spatial plans:
@@ -40,14 +40,17 @@ def build_split_plan(model: ReinterpretedModel, ratings, mode: str,
 
     ``mode="mixed"`` builds a heterogeneous plan from ``assignment`` (the
     per-fused-block mode vector, required; always block-fused granularity) —
-    core :func:`split_model_mixed`.
+    core :func:`split_model_mixed`.  ``block_workers`` optionally narrows
+    each block to a worker subset (per-block index iterables, ``None``
+    entries keep all workers); uniform modes ignore it.
     """
     if fusion not in FUSIONS:
         raise ValueError(f"unknown fusion {fusion!r} (want one of {FUSIONS})")
     if mode == "mixed":
         if assignment is None:
             raise ValueError("mode='mixed' needs a per-block assignment")
-        return split_model_mixed(model, ratings, assignment)
+        return split_model_mixed(model, ratings, assignment,
+                                 block_workers=block_workers)
     return split_model(model, ratings, mode=mode, fused=(fusion == "block"))
 
 
@@ -93,6 +96,14 @@ class Plan:
     # mixed plans only: per-fused-block mode vector (group_blocks
     # granularity) the DP search chose; None for uniform plans
     assignment: tuple[str, ...] | None = None
+    # mixed plans with Objective(mixed_subsets=...): per-block worker
+    # subsets the DP chose (indices into worker_indices' subset, None
+    # entries = all workers); None when every block uses the full subset
+    block_workers: tuple | None = None
+    # search telemetry from the Planner (core.search.SearchStats.to_dict():
+    # candidates evaluated, cache hit rate, search wall); None when the
+    # plan was deserialized from a pre-v2-search payload
+    search_stats: dict | None = None
     candidates: tuple = ()
 
     # -- derived views -------------------------------------------------------
@@ -148,6 +159,18 @@ class Plan:
         ]
         if self.assignment is not None:
             lines.insert(1, "  per-block modes: " + self._rle(self.assignment))
+        if self.block_workers is not None and any(
+                s is not None for s in self.block_workers):
+            lines.append("  per-block workers: " + " ".join(
+                "all" if s is None else str(list(s))
+                for s in self.block_workers))
+        if self.search_stats:
+            s = self.search_stats
+            lines.append(
+                f"  search: {s.get('candidates_evaluated', 0)} candidates "
+                f"({s.get('subsets_explored', 0)} subsets, "
+                f"cache hit rate {s.get('cache_hit_rate', 0.0):.0%}) "
+                f"in {s.get('search_wall_s', 0.0) * 1e3:.0f} ms")
         if self.candidates:
             lines.append("  search ({} candidates):".format(len(self.candidates)))
             for c in self.candidates:
@@ -170,13 +193,16 @@ class Plan:
         return (cand.mode == self.mode and cand.fusion == self.fusion
                 and cand.transport == self.transport
                 and tuple(cand.worker_indices) == tuple(self.worker_indices)
-                and getattr(cand, "assignment", None) == self.assignment)
+                and getattr(cand, "assignment", None) == self.assignment
+                and getattr(cand, "block_workers", None) == self.block_workers)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
         # schema v2 adds "assignment" (per-fused-block mode vector of mixed
         # plans; null for uniform).  v1 payloads predate mode mixing and
         # load as uniform-mode plans (from_dict tolerates the missing key).
+        # "block_workers" and "search_stats" are additive v2 keys (null when
+        # absent): per-block worker subsets and the search telemetry.
         return {
             "version": 2,
             "kind": "repro.api.Plan",
@@ -188,6 +214,11 @@ class Plan:
             "transport": self.transport,
             "assignment": (list(self.assignment)
                            if self.assignment is not None else None),
+            "block_workers": (
+                [list(s) if s is not None else None
+                 for s in self.block_workers]
+                if self.block_workers is not None else None),
+            "search_stats": self.search_stats,
             "worker_indices": list(self.worker_indices),
             "ratings": [float(r) for r in np.asarray(self.ratings)],
             "metrics": {
@@ -233,8 +264,14 @@ class Plan:
         if data["mode"] == "mixed" and assignment is None:
             raise ValueError("mixed plan payload lacks its per-block "
                              "assignment")
+        block_workers = data.get("block_workers")
+        if block_workers is not None:
+            block_workers = tuple(
+                tuple(int(w) for w in s) if s is not None else None
+                for s in block_workers)
         split = build_split_plan(model, ratings, data["mode"], data["fusion"],
-                                 assignment=assignment)
+                                 assignment=assignment,
+                                 block_workers=block_workers)
         peak = peak_ram_per_worker(split)
         stored_peak = np.asarray(data["peak_ram"], dtype=np.int64)
         if not np.array_equal(peak, stored_peak):
@@ -257,6 +294,8 @@ class Plan:
             overlap_saved_s=float(m.get("overlap_saved_s", 0.0)),
             assignment=(tuple(assignment) if assignment is not None
                         else None),
+            block_workers=block_workers,
+            search_stats=data.get("search_stats"),
             candidates=tuple(PlanCandidate.from_dict(c)
                              for c in data.get("candidates", ())))
 

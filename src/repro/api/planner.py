@@ -12,34 +12,51 @@ The search space is mode ∈ {neuron, kernel, spatial} (plus the opt-in
 "mixed" axis: a per-fused-block mode assignment found by dynamic
 programming over block boundaries, :mod:`repro.core.mixed`) × fusion
 granularity (fused blocks vs per-layer bands, spatial only) × worker
-subsets (top-k by capability rating, k = 1..max_workers) × transport ∈
-{serial, pipelined} (the Eq. 5-6 coordinator-serialized model vs the
-event-driven per-link async transport).  Every candidate is costed with the
-existing analytic models (:func:`repro.core.simulator.simulate` for
-latency/communication, :func:`repro.core.memory.peak_ram_per_worker` for the
-per-worker peak) and checked against the RAM/flash budgets; neuron/kernel
-candidates run the Eq. 7 storage-overflow redistribution first, exactly as
-the paper's allocation does.  The best feasible candidate becomes a
-:class:`repro.api.Plan`; if nothing fits, :class:`InfeasibleError` reports
-the *binding* constraint (the one the closest candidate missed by the
-smallest margin) instead of returning a silently bad plan.
+subsets × transport ∈ {serial, pipelined} (the Eq. 5-6
+coordinator-serialized model vs the event-driven per-link async transport).
+
+Worker subsets come from the capability-rating prefix ladder (top-k by
+Eq. 5 rating, k = 1..max_workers) — and, when ``Objective(beam_width=...)``
+is set, from a beam search that also explores *non-prefix* subsets (drop a
+high-rated worker on a slow link): each round keeps the ``beam_width``
+best-scoring subsets and grows them by one worker, under an optional
+``search_budget`` cap on candidate evaluations.  ``beam_width=None`` (the
+default) reproduces the ladder exactly, and because the ladder prefixes are
+always evaluated too, the beam plan's score is never worse than the
+ladder's (CI-gated).
+
+Every candidate is costed through the shared memoized cost-model layer
+(:mod:`repro.core.search`): split geometry, the
+:func:`repro.core.simulator.simulate` decomposition and the per-worker peak
+(:func:`repro.core.memory.peak_ram_per_worker`) are computed once per
+(worker-parameters, mode, fusion, caps) fingerprint and reused across
+candidates, across objectives, and — when callers share a
+:class:`~repro.core.search.CostCache`, as ``ElasticCluster`` does — across
+successive replans.  Neuron/kernel candidates run the Eq. 7
+storage-overflow redistribution first, exactly as the paper's allocation
+does.  The best feasible candidate becomes a :class:`repro.api.Plan`
+(carrying the search telemetry: candidates evaluated, cache hit rate,
+search wall); if nothing fits, :class:`InfeasibleError` reports the
+*binding* constraint (the one the closest candidate missed by the smallest
+margin) instead of returning a silently bad plan.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import numpy as np
 
-from ..core.allocation import ratings_for, redistribute_overflow
-from ..core.memory import peak_ram_per_worker
-from ..core.mixed import search_mixed_assignment
+from ..core.allocation import ratings_for
 from ..core.reinterpret import ReinterpretedModel
-from ..core.simulator import (TRANSPORTS, SimConfig, measured_kc, simulate,
+from ..core.search import (CostCache, SearchStats, config_fingerprint,
+                           evaluate_candidate)
+from ..core.simulator import (TRANSPORTS, SimConfig, measured_kc,
                               simulated_k1)
 from ..core.splitting import MODES
 from .cluster import Cluster
-from .plan import Plan, build_split_plan
+from .plan import Plan
 
 # the planner's mode axis: the three uniform modes plus "mixed" — a
 # per-fused-block assignment searched by dynamic programming over block
@@ -54,6 +71,8 @@ class InfeasibleError(RuntimeError):
     ``binding_constraint`` names the constraint the *closest* candidate
     violated (``"ram_cap"`` / ``"flash_cap"``); ``details`` carries that
     candidate's numbers (mode, workers, requirement vs cap, overshoot).
+    For the ``"mixed"`` axis, ``details["mixed"]`` additionally carries the
+    DP's best cap-ignoring assignment and which block's cap bound it.
     """
 
     def __init__(self, message: str, binding_constraint: str, details: dict):
@@ -77,6 +96,17 @@ class Objective:
     restricts the transport policies searched (the tuple order doubles as
     the tie-break preference, so the default prefers serial when pipelining
     buys nothing).
+
+    Search-shape knobs: ``beam_width`` enables beam search over non-prefix
+    worker subsets on top of the rating ladder (``None`` = ladder only,
+    today's search exactly); ``search_budget`` caps the number of *full*
+    cost-model evaluations (cache misses) the search may spend — the ladder
+    always completes, and cached candidates are free, so a warm
+    :class:`~repro.core.search.CostCache` buys the same budget deeper
+    exploration;
+    ``mixed_subsets`` lets the mixing DP search up to that many rating-
+    prefix worker subsets *per block* in addition to the full set (``None``
+    = fixed worker set, the original DP).
     """
 
     minimize: str = "latency"
@@ -85,6 +115,9 @@ class Objective:
     max_workers: int | None = None
     modes: tuple[str, ...] = MODES
     transports: tuple[str, ...] = TRANSPORTS
+    beam_width: int | None = None
+    search_budget: int | None = None
+    mixed_subsets: int | None = None
 
     def __post_init__(self) -> None:
         if self.minimize not in ("latency", "comm_bytes", "peak_ram"):
@@ -113,6 +146,10 @@ class Objective:
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be > 0")
+        for name in ("beam_width", "search_budget", "mixed_subsets"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1")
 
     def score(self, latency_s: float, comm_bytes: int,
               max_peak_ram: int) -> float:
@@ -128,18 +165,25 @@ class Objective:
                 "flash_cap_bytes": self.flash_cap_bytes,
                 "max_workers": self.max_workers,
                 "modes": list(self.modes),
-                "transports": list(self.transports)}
+                "transports": list(self.transports),
+                "beam_width": self.beam_width,
+                "search_budget": self.search_budget,
+                "mixed_subsets": self.mixed_subsets}
 
     @classmethod
     def from_dict(cls, data: dict) -> "Objective":
         # plans serialized before the transport axis carry no "transports"
-        # key: they were searched under the serial model only
+        # key: they were searched under the serial model only; the search-
+        # shape knobs default to the ladder when absent
         return cls(minimize=data.get("minimize", "latency"),
                    ram_cap_bytes=data.get("ram_cap_bytes"),
                    flash_cap_bytes=data.get("flash_cap_bytes"),
                    max_workers=data.get("max_workers"),
                    modes=tuple(data.get("modes", MODES)),
-                   transports=tuple(data.get("transports", ("serial",))))
+                   transports=tuple(data.get("transports", ("serial",))),
+                   beam_width=data.get("beam_width"),
+                   search_budget=data.get("search_budget"),
+                   mixed_subsets=data.get("mixed_subsets"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +209,11 @@ class PlanCandidate:
     score: float = float("nan")
     # mode == "mixed" only: the per-fused-block mode vector the DP chose
     assignment: tuple[str, ...] | None = None
+    # mode == "mixed" with subset search: per-block worker subsets (indices
+    # into worker_indices' subset, None entries = all)
+    block_workers: tuple | None = None
+    # mode == "mixed" infeasible only: binding block / best-assignment info
+    detail: dict | None = None
 
     _NAN_FIELDS = ("latency_s", "comp_s", "comm_s", "score")
 
@@ -173,6 +222,9 @@ class PlanCandidate:
         d["worker_indices"] = list(self.worker_indices)
         d["assignment"] = (list(self.assignment)
                            if self.assignment is not None else None)
+        d["block_workers"] = (
+            [list(s) if s is not None else None for s in self.block_workers]
+            if self.block_workers is not None else None)
         # infeasible candidates carry NaN sentinels; map them to null so the
         # payload stays strict RFC-8259 JSON (json.dumps would emit `NaN`)
         for name in self._NAN_FIELDS:
@@ -186,6 +238,10 @@ class PlanCandidate:
         data["worker_indices"] = tuple(int(i) for i in data["worker_indices"])
         if data.get("assignment") is not None:
             data["assignment"] = tuple(data["assignment"])
+        if data.get("block_workers") is not None:
+            data["block_workers"] = tuple(
+                tuple(int(w) for w in s) if s is not None else None
+                for s in data["block_workers"])
         for name in cls._NAN_FIELDS:
             if data.get(name) is None:
                 data[name] = float("nan")
@@ -211,19 +267,32 @@ class Planner:
     cluster's fastest clock (the paper's reference measurement); Kc is
     re-derived per subset size, since the communication coefficient depends
     on how many workers share each layer.
+
+    ``cache`` is the memo for the shared cost-model layer
+    (:mod:`repro.core.search`); the default is a fresh private
+    :class:`~repro.core.search.CostCache`.  Pass a shared instance to warm-
+    start successive searches — ``ElasticCluster`` keeps one across replans
+    so losing a worker re-derives only the geometry the old plan didn't
+    already cost.
     """
 
     def __init__(self, model: ReinterpretedModel, cluster: Cluster,
-                 sim_cfg: SimConfig | None = None):
+                 sim_cfg: SimConfig | None = None, *,
+                 cache: CostCache | None = None):
         self.model = model
         self.cluster = cluster if isinstance(cluster, Cluster) else Cluster(tuple(cluster))
         self.sim_cfg = sim_cfg or SimConfig()
+        self.cache = cache if cache is not None else CostCache()
         self._k1 = simulated_k1(model, self.cluster.max_f_mhz, self.sim_cfg)
         self._kc: dict[int, float] = {}
+        self.last_stats: SearchStats | None = None
 
     def _kc_for(self, n: int) -> float:
         if n not in self._kc:
-            self._kc[n] = measured_kc(self.model, n, self.sim_cfg)
+            key = ("kc", (id(self.model), len(self.model.layers)), n,
+                   config_fingerprint(self.sim_cfg))
+            self._kc[n] = self.cache.get_or(
+                key, lambda: measured_kc(self.model, n, self.sim_cfg))
         return self._kc[n]
 
     def _worker_order(self) -> np.ndarray:
@@ -234,140 +303,172 @@ class Planner:
         return np.lexsort((np.arange(len(r)), -r))
 
     # -- the search ----------------------------------------------------------
-    def _evaluate(self, objective: Objective) -> list[_Scored | PlanCandidate]:
-        """Score every (subset size x mode x fusion) candidate.  Returns
-        ``_Scored`` for feasible ones, bare ``PlanCandidate`` otherwise."""
-        order = self._worker_order()
+    def _evaluate(self, objective: Objective
+                  ) -> tuple[list[_Scored | PlanCandidate], SearchStats]:
+        """Score every candidate the search shape reaches: the rating-prefix
+        ladder always, plus beam-discovered subsets when
+        ``objective.beam_width`` is set.  Returns ``_Scored`` for feasible
+        candidates, bare ``PlanCandidate`` otherwise, with the search
+        telemetry."""
+        t0 = time.perf_counter()
+        stats = SearchStats(beam_width=objective.beam_width)
+        order = [int(i) for i in self._worker_order()]
         n_max = self.cluster.n_workers
         if objective.max_workers is not None:
             n_max = min(n_max, objective.max_workers)
-        model_bytes = float(self.model.total_weight_bytes(1))
         results: list[_Scored | PlanCandidate] = []
-        for k in range(1, n_max + 1):
-            idx = tuple(sorted(int(i) for i in order[:k]))
-            workers = [self.cluster[i] for i in idx]
-            base_ratings = ratings_for(workers, self._k1, self._kc_for(k))
-            ram_caps = np.array(
-                [min(w.ram_bytes, objective.ram_cap_bytes or w.ram_bytes)
-                 for w in workers], dtype=np.float64)
-            flash_caps = np.array(
-                [min(w.flash_bytes, objective.flash_cap_bytes or w.flash_bytes)
-                 for w in workers], dtype=np.float64)
-            for mode in objective.modes:
-                for fusion in (("block", "layer") if mode == "spatial"
-                               else ("block",)):
-                    results.extend(self._score_one(
-                        objective, idx, workers, base_ratings, ram_caps,
-                        flash_caps, model_bytes, mode, fusion))
-        return results
+        best_by_subset: dict[tuple[int, ...], float] = {}
+        evaluated: set[tuple[int, ...]] = set()
 
-    def _score_one(self, objective, idx, workers, base_ratings, ram_caps,
-                   flash_caps, model_bytes, mode, fusion):
-        """Score one (subset, mode, fusion) point: a single infeasible
-        candidate (feasibility is transport-independent), or one scored
-        candidate per transport searched — the split/peak/weights artifacts
-        are built once and only the timing model re-runs per transport."""
-        ratings = base_ratings
-        assignment = None
-        if mode in ("neuron", "kernel"):
-            # Eq. 7: shift rating mass away from storage-overflowed workers
-            # (weights are split in these modes, so shares track ratings)
-            if flash_caps.sum() < model_bytes:
-                return [PlanCandidate(
-                    mode=mode, fusion=fusion, worker_indices=idx,
-                    feasible=False, transport="*",
-                    reason=(f"flash_cap: total capacity "
-                            f"{flash_caps.sum():.0f} B < model "
-                            f"{model_bytes:.0f} B"))]
-        try:
-            if mode in ("neuron", "kernel"):
-                ratings = redistribute_overflow(base_ratings, flash_caps,
-                                                model_bytes)
-            if mode == "mixed":
-                # DP over block boundaries (core.mixed): exact for the
-                # serial cost model, with the per-worker RAM caps pruning
-                # the per-block state space.  Like spatial, mixed plans may
-                # replicate weights, so Eq. 7 does not apply.
-                search = search_mixed_assignment(
-                    self.model, workers, ratings, self.sim_cfg,
-                    minimize=objective.minimize, ram_caps=ram_caps)
-                assignment = search.assignment
-            split = build_split_plan(self.model, ratings, mode, fusion,
-                                     assignment=assignment)
-            peak = peak_ram_per_worker(split)
-        except (ValueError, RuntimeError) as e:
-            # a mode that cannot even build a split for these workers is an
-            # explicit infeasible candidate, not a search-aborting crash
-            return [PlanCandidate(
-                mode=mode, fusion=fusion, worker_indices=idx, feasible=False,
-                transport="*", reason=f"split_error: {type(e).__name__}: {e}")]
-        weights = np.array([split.worker_weight_bytes(w)
-                            for w in range(split.n_workers)], dtype=np.int64)
-        over_ram = peak > ram_caps
-        over_flash = weights > flash_caps
-        if over_ram.any() or over_flash.any():
-            terms = []
-            if over_ram.any():
-                w = int(np.argmax(peak / ram_caps))
-                terms.append(f"ram_cap: worker {idx[w]} peak {int(peak[w])} B "
-                             f"> cap {int(ram_caps[w])} B")
-            if over_flash.any():
-                w = int(np.argmax(weights / flash_caps))
-                terms.append(f"flash_cap: worker {idx[w]} weights "
-                             f"{int(weights[w])} B > cap {int(flash_caps[w])} B")
-            return [PlanCandidate(mode=mode, fusion=fusion, worker_indices=idx,
-                                  feasible=False, reason="; ".join(terms),
-                                  transport="*", assignment=assignment,
-                                  max_peak_ram=int(peak.max()),
-                                  max_weight_bytes=int(weights.max()))]
-        # one simulate covers both transports: a pipelined SimResult carries
-        # the serial (Eq. 5-6) decomposition exactly (its layer_* arrays are
-        # the serial model — see SimResult), so the serial candidate's
-        # metrics are derived without a second full analytic pass
-        metrics: dict[str, tuple[float, float, float, float]] = {}
-        if "pipelined" in objective.transports:
-            cfg = dataclasses.replace(self.sim_cfg, transport="pipelined")
-            res = simulate(self.model, workers, ratings, cfg, plan=split)
-            metrics["pipelined"] = (res.total_time, res.comp_time,
-                                    res.comm_time, res.overlap_saved_s)
-            serial_total = res.serial_total_time
-            serial_comp = float(res.layer_comp.sum())
-            metrics["serial"] = (serial_total, serial_comp,
-                                 serial_total - serial_comp, 0.0)
-        else:
-            cfg = dataclasses.replace(self.sim_cfg, transport="serial")
-            res = simulate(self.model, workers, ratings, cfg, plan=split)
-            metrics["serial"] = (res.total_time, res.comp_time,
-                                 res.comm_time, 0.0)
-        out = []
-        for transport in objective.transports:
-            latency_s, comp_s, comm_s, saved_s = metrics[transport]
-            cand = PlanCandidate(
-                mode=mode, fusion=fusion, worker_indices=idx, feasible=True,
-                transport=transport, assignment=assignment,
-                latency_s=latency_s, comp_s=comp_s,
-                comm_s=comm_s, comm_bytes=res.total_bytes,
-                max_peak_ram=int(peak.max()),
-                max_weight_bytes=int(weights.max()),
-                overlap_saved_s=saved_s,
-                score=objective.score(latency_s, res.total_bytes,
-                                      int(peak.max())))
-            out.append(_Scored(cand=cand, ratings=ratings, split=split,
-                               peak=peak, weights=weights))
+        def eval_subset(idx: tuple[int, ...]) -> None:
+            evaluated.add(idx)
+            scored = self._score_subset(objective, idx, stats)
+            results.extend(scored)
+            best = math.inf
+            for r in scored:
+                if isinstance(r, _Scored):
+                    best = min(best, r.cand.score)
+            best_by_subset[idx] = best
+
+        # the ladder: top-k rating prefixes, k = 1..n_max — always complete
+        # (beam_width=None reproduces this search exactly, and the beam
+        # plan below can therefore never score worse than the ladder plan)
+        for k in range(1, n_max + 1):
+            eval_subset(tuple(sorted(order[:k])))
+
+        if objective.beam_width is not None and n_max > 1:
+            self._beam(objective, order, n_max, stats, eval_subset,
+                       best_by_subset, evaluated)
+
+        stats.subsets_explored = len(evaluated)
+        stats.search_wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return results, stats
+
+    def _beam(self, objective, order, n_max, stats, eval_subset,
+              best_by_subset, evaluated) -> None:
+        """Beam search over worker subsets: keep the ``beam_width`` best
+        subsets of each size, grow each by one worker, re-score.  Ladder
+        prefixes participate for free (already evaluated — cache hits cost
+        nothing), so the beam explores *around* the ladder rather than
+        instead of it.  ``search_budget`` caps the *cache misses* (full
+        cost-model runs) the beam phase may spend, spread pro-rata across
+        subset sizes so large subsets — where heterogeneous clusters
+        actually win — get their share instead of the budget burning out on
+        exhaustive small-size growth.  Cached subsets are free, so a warm
+        cache widens what the same budget reaches."""
+        width = objective.beam_width
+        budget = objective.search_budget
+        beam_start = stats.cache_misses
+
+        def spent() -> int:
+            return stats.cache_misses - beam_start
+
+        frontier: list[tuple[int, ...]] = [(w,) for w in order]
+        for size in range(1, n_max + 1):
+            # the ladder prefix of this size rides in the frontier for free
+            # (already evaluated): expansions branch off the prefixes too,
+            # so "prefix k plus a non-prefix worker" — the drop-a-high-
+            # rated-worker-on-a-slow-link shape — is one round away instead
+            # of `size` rounds of bottom-up growth
+            prefix = tuple(sorted(order[:size]))
+            if prefix not in frontier:
+                frontier.append(prefix)
+            size_share = (None if budget is None else
+                          spent() + max(0, (budget - spent())
+                                        // (n_max - size + 1)))
+            scored: list[tuple[float, tuple[int, ...]]] = []
+            for sub in frontier:
+                if sub not in evaluated:
+                    if size_share is not None and spent() >= size_share:
+                        continue   # over this size's share; free subsets
+                    eval_subset(sub)   # may still score below
+                scored.append((best_by_subset.get(sub, math.inf), sub))
+            if size == n_max or not scored:
+                return
+            scored.sort(key=lambda t: (t[0], t[1]))
+            seen_next: set[tuple[int, ...]] = set()
+            frontier = []
+            for _, sub in scored[:width]:
+                for w in order:
+                    if w in sub:
+                        continue
+                    ns = tuple(sorted(sub + (w,)))
+                    if ns not in seen_next:
+                        seen_next.add(ns)
+                        frontier.append(ns)
+
+    def _score_subset(self, objective: Objective, idx: tuple[int, ...],
+                      stats: SearchStats) -> list[_Scored | PlanCandidate]:
+        """Score every (mode, fusion) point of one worker subset through the
+        memoized cost-model layer, translating the cached evaluation into
+        objective-scored candidates (the cache entry is objective-agnostic:
+        both transports' metrics are always present, and uniform-mode
+        entries are independent of ``minimize``)."""
+        workers = [self.cluster[i] for i in idx]
+        k = len(idx)
+        base_ratings = ratings_for(workers, self._k1, self._kc_for(k))
+        ram_caps = np.array(
+            [min(w.ram_bytes, objective.ram_cap_bytes or w.ram_bytes)
+             for w in workers], dtype=np.float64)
+        flash_caps = np.array(
+            [min(w.flash_bytes, objective.flash_cap_bytes or w.flash_bytes)
+             for w in workers], dtype=np.float64)
+        model_bytes = float(self.model.total_weight_bytes(1))
+        out: list[_Scored | PlanCandidate] = []
+        for mode in objective.modes:
+            for fusion in (("block", "layer") if mode == "spatial"
+                           else ("block",)):
+                ev = evaluate_candidate(
+                    self.model, workers, base_ratings, mode, fusion,
+                    ram_caps=ram_caps, flash_caps=flash_caps,
+                    model_bytes=model_bytes, cfg=self.sim_cfg,
+                    minimize=objective.minimize,
+                    mixed_subsets=objective.mixed_subsets,
+                    mixed_transport_dp=("pipelined" in objective.transports),
+                    cache=self.cache, stats=stats)
+                if not ev.feasible:
+                    out.append(PlanCandidate(
+                        mode=mode, fusion=fusion, worker_indices=idx,
+                        feasible=False, transport="*", reason=ev.reason,
+                        assignment=ev.assignment,
+                        max_peak_ram=ev.max_peak_ram,
+                        max_weight_bytes=ev.max_weight_bytes,
+                        detail=ev.detail))
+                    continue
+                for var in ev.variants:
+                    for transport in objective.transports:
+                        latency_s, comp_s, comm_s, saved_s = \
+                            var.metrics[transport]
+                        cand = PlanCandidate(
+                            mode=mode, fusion=fusion, worker_indices=idx,
+                            feasible=True, transport=transport,
+                            assignment=var.assignment,
+                            block_workers=var.block_workers,
+                            latency_s=latency_s, comp_s=comp_s,
+                            comm_s=comm_s, comm_bytes=var.total_bytes,
+                            max_peak_ram=int(var.peak.max()),
+                            max_weight_bytes=int(var.weights.max()),
+                            overlap_saved_s=saved_s,
+                            score=objective.score(latency_s, var.total_bytes,
+                                                  int(var.peak.max())))
+                        out.append(_Scored(
+                            cand=cand, ratings=var.ratings, split=var.split,
+                            peak=var.peak, weights=var.weights))
         return out
 
     def candidates(self, objective: Objective | None = None) -> list[PlanCandidate]:
         """The full scored candidate table (feasible and infeasible) the
         search considers — what :meth:`plan` picks its winner from."""
         objective = objective or Objective()
-        return [r.cand if isinstance(r, _Scored) else r
-                for r in self._evaluate(objective)]
+        results, _ = self._evaluate(objective)
+        return [r.cand if isinstance(r, _Scored) else r for r in results]
 
     def plan(self, objective: Objective | None = None) -> Plan:
         """Search and return the best feasible :class:`Plan`; raise
         :class:`InfeasibleError` naming the binding constraint if none fits."""
         objective = objective or Objective()
-        results = self._evaluate(objective)
+        results, stats = self._evaluate(objective)
         feasible = [r for r in results if isinstance(r, _Scored)]
         if not feasible:
             raise self._infeasible(objective, results)
@@ -390,7 +491,8 @@ class Planner:
             comm_bytes=c.comm_bytes, peak_ram=best.peak,
             weight_bytes=best.weights, score=c.score,
             transport=c.transport, overlap_saved_s=c.overlap_saved_s,
-            assignment=c.assignment,
+            assignment=c.assignment, block_workers=c.block_workers,
+            search_stats=stats.to_dict(),
             candidates=tuple(r.cand if isinstance(r, _Scored) else r
                              for r in results))
 
@@ -434,6 +536,14 @@ class Planner:
                    "max_weight_bytes": best_cand.max_weight_bytes,
                    "ram_cap_bytes": objective.ram_cap_bytes,
                    "flash_cap_bytes": objective.flash_cap_bytes}
+        if best_cand.mode == "mixed":
+            # the DP's binding-block report: which block's cap bound the
+            # search, and the best cap-ignoring assignment it would have
+            # chosen — real numbers instead of uniform-mode proxies
+            details["assignment"] = (list(best_cand.assignment)
+                                     if best_cand.assignment else None)
+            if best_cand.detail is not None:
+                details["mixed"] = dict(best_cand.detail)
         return InfeasibleError(
             f"no feasible split for the objective; binding constraint "
             f"{best_kind} — closest candidate {best_cand.mode} over "

@@ -113,6 +113,12 @@ class SessionStats:
     latency_p99_s: float = float("nan")
     per_bucket_p50_s: dict[int, float] = dataclasses.field(default_factory=dict)
     per_bucket_p99_s: dict[int, float] = dataclasses.field(default_factory=dict)
+    # plan-search telemetry carried over from the Plan this session serves
+    # (core.search.SearchStats; zeros/NaN when serving a bare SplitPlan or
+    # a plan deserialized from a pre-search-stats payload)
+    search_candidates_evaluated: int = 0
+    search_cache_hit_rate: float = float("nan")
+    search_wall_s: float = float("nan")
 
 
 class Ticket:
@@ -458,6 +464,8 @@ class Session:
         return self._rolling.percentile(q, key=bucket)
 
     def stats(self) -> SessionStats:
+        search_stats = (getattr(self.plan, "search_stats", None)
+                        if self.plan is not None else None)
         return SessionStats(
             requests=self._requests, batches=self._batches,
             padded=self._padded, wall_s=self._wall_s,
@@ -474,4 +482,10 @@ class Session:
             per_bucket_p50_s={b: self._rolling.percentile(50, key=b)
                               for b in self._rolling.keys()},
             per_bucket_p99_s={b: self._rolling.percentile(99, key=b)
-                              for b in self._rolling.keys()})
+                              for b in self._rolling.keys()},
+            search_candidates_evaluated=(search_stats or {}).get(
+                "candidates_evaluated", 0),
+            search_cache_hit_rate=(search_stats or {}).get(
+                "cache_hit_rate", float("nan")),
+            search_wall_s=(search_stats or {}).get(
+                "search_wall_s", float("nan")))

@@ -20,10 +20,12 @@ from .mapping import (assignm_bruteforce, comm_volume, compile_shard_geometry,
                       routem_bruteforce, worker_input_regions)
 from .memory import (layerwise_peak, peak_ram_per_worker, plan_memory,
                      single_device_peak, split_memory)
-from .mixed import MixedSearch, search_mixed_assignment
+from .mixed import MixedInfeasible, MixedSearch, search_mixed_assignment
 from .quantize import (QuantizedModel, calibrate_scales, epilogue_params,
                        quantize_model, requantize)
 from .reinterpret import LayerSpec, ReinterpretedModel, layer_macs, trace_sequential
+from .search import (CandidateEval, CostCache, EvalVariant, SearchStats,
+                     evaluate_candidate)
 from .simulator import (TRANSPORTS, ModeReport, SimConfig, SimResult,
                         Timeline, TimelineEvent, compare_modes, measured_kc,
                         simulate, simulated_k1)
@@ -71,8 +73,15 @@ __all__ = [
     "single_device_peak",
     "split_memory",
     # per-block mode-mixing search (DP over block boundaries)
+    "MixedInfeasible",
     "MixedSearch",
     "search_mixed_assignment",
+    # shared cost-model/search layer (memoized candidate evaluation)
+    "CandidateEval",
+    "CostCache",
+    "EvalVariant",
+    "SearchStats",
+    "evaluate_candidate",
     # quantization (§V.D)
     "QuantizedModel",
     "calibrate_scales",

@@ -141,7 +141,11 @@ class SimResult:
     layer_bytes: np.ndarray     # (L,) total bytes moved at this boundary
     per_worker_comp: np.ndarray  # (L, N) compute seconds
     per_worker_comm: np.ndarray  # (L, N)
-    peak_ram: np.ndarray        # (L, N) bytes
+    # (L, N) bytes; None when the caller passed compute_peak=False (the
+    # planner gates RAM via memory.peak_ram_per_worker on the same split,
+    # so the layerwise sweep here would be duplicate work on the search
+    # hot path)
+    peak_ram: np.ndarray | None
     # transport="pipelined" extras.  The layer_* arrays above always hold the
     # serial (Eq. 5-6) decomposition, so the serial-equivalent latency stays
     # derivable from any result; ``timeline`` carries the event schedule.
@@ -194,7 +198,8 @@ def _comp_seconds(macs: np.ndarray, f_mhz: np.ndarray, cfg: SimConfig) -> np.nda
 def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
              ratings: np.ndarray | None = None,
              cfg: SimConfig | None = None,
-             plan: SplitPlan | None = None) -> SimResult:
+             plan: SplitPlan | None = None,
+             compute_peak: bool = True) -> SimResult:
     """Run one end-to-end inference through the timing model.
 
     ``ratings`` defaults to uniform; ``plan`` may be passed to reuse a split
@@ -204,6 +209,9 @@ def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
     ``cfg.transport`` picks the communication model: ``"serial"`` (Eq. 5-6,
     the default) or ``"pipelined"`` (per-link FIFO queues with overlapped
     download/compute/upload; the result carries a :class:`Timeline`).
+    ``compute_peak=False`` skips the layerwise peak-RAM sweep (the result's
+    ``peak_ram`` is None) — for callers like the plan search that gate RAM
+    separately on the same split.
     """
     cfg = cfg or SimConfig()
     n = len(workers)
@@ -273,7 +281,8 @@ def simulate(model: ReinterpretedModel, workers: list[WorkerParams],
     return SimResult(layer_comp=layer_comp, layer_comm=layer_comm,
                      layer_bytes=nbytes, per_worker_comp=comp,
                      per_worker_comm=comm,
-                     peak_ram=layerwise_peak(plan, itemsize=cfg.itemsize),
+                     peak_ram=(layerwise_peak(plan, itemsize=cfg.itemsize)
+                               if compute_peak else None),
                      transport=cfg.transport, timeline=timeline)
 
 

@@ -81,6 +81,13 @@ class ElasticCluster:
         self._original = tuple(workers)      # pre-demotion ratings basis
         self._planned_alive: tuple[int, ...] = tuple(range(len(workers)))
         self.plan_worker_ids: tuple[int, ...] = ()
+        # one CostCache for the cluster's lifetime: replan keys fingerprint
+        # worker *parameters*, so a churn event that drops one worker re-plans
+        # over survivor subsets the initial search already costed — the warm
+        # path the churn drill asserts on (hit rate > 0, lower search wall)
+        from ..core.search import CostCache
+        self.search_cache = CostCache()
+        self.last_search_stats: dict | None = None
         self.plan = self._replan()
 
     # -- signals ------------------------------------------------------------
@@ -150,7 +157,10 @@ class ElasticCluster:
             raise ClusterCollapsed("no surviving workers")
         sub = Cluster(tuple(self.health[i].params for i in alive_ids),
                       name=f"alive[{len(alive_ids)}]")
-        plan = Planner(self.model, sub, self.sim_cfg).plan(self.objective)
+        planner = Planner(self.model, sub, self.sim_cfg,
+                          cache=self.search_cache)
+        plan = planner.plan(self.objective)
+        self.last_search_stats = plan.search_stats
         # plan.worker_indices index the alive-only subset; map back to the
         # original ids so worker identity survives the replan
         self.plan_worker_ids = tuple(alive_ids[i]

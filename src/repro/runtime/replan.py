@@ -301,6 +301,14 @@ class ElasticCoordinator:
                                             worker_map=worker_map)
         self._physical = dict(enumerate(new_ids))
         report["plan_worker_ids"] = list(new_ids)
+        # decompose churn downtime: how much of it was plan *search* (and
+        # how warm the cluster's persistent CostCache made that search)
+        search = self.cluster.last_search_stats or {}
+        report["replan_search_wall_s"] = search.get("search_wall_s", 0.0)
+        report["replan_candidates_evaluated"] = search.get(
+            "candidates_evaluated", 0)
+        report["replan_cache_hits"] = search.get("cache_hits", 0)
+        report["replan_cache_hit_rate"] = search.get("cache_hit_rate", 0.0)
         self.reports.append(report)
         return report
 

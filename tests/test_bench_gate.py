@@ -550,3 +550,135 @@ class TestMergeSections:
             assert out["kernels"]["decode_attn_2k"] == {"speedup": 3.0}
             assert out["roofline"] == {"smoke": {"_peak_gflops": 100.0}}
             assert out["rows"] == [{"config": "x"}]
+
+
+def _search_payload(key="smoke@8", ladder=0.0445, beam=0.0426,
+                    warm_misses=4, cold_misses=28, hit_rate=0.86,
+                    dp_serial=0.31, dp_transport=0.29, win=None):
+    p = _payload()
+    p["search"] = {key: dict(
+        ladder_score=ladder, beam_score=beam, beam_width=4,
+        beam_subsets=16, cold_wall_s=0.4, beam_wall_s=0.2,
+        warm_wall_s=0.01, cold_replan_wall_s=0.3,
+        cold_candidates=32, cold_misses=32,
+        warm_candidates=28, warm_misses=warm_misses,
+        warm_hit_rate=hit_rate,
+        cold_replan_candidates=28, cold_replan_misses=cold_misses,
+        dp_serial_pipelined_s=dp_serial,
+        dp_transport_pipelined_s=dp_transport,
+        transport_dp_win=(dp_transport < dp_serial if win is None else win))}
+    return p
+
+
+class TestSearchGate:
+    def test_healthy_search_row_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json", _search_payload())
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 0
+
+    def test_ladder_score_regression_fails(self, tmp_path):
+        """The ladder score is analytic: >20% growth means the search now
+        returns a worse plan, not machine noise."""
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(ladder=0.06, beam=0.0426))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+
+    def test_beam_above_ladder_fails_even_without_baseline_row(
+            self, tmp_path):
+        """Structural invariant on every fresh row: the beam evaluates each
+        ladder prefix too, so its plan may never score worse."""
+        b = _write(tmp_path, "base.json", _payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(ladder=0.04, beam=0.05))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+
+    def test_warm_not_fewer_than_cold_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(warm_misses=28, cold_misses=28))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+
+    def test_zero_warm_hit_rate_fails(self, tmp_path):
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json", _search_payload(hit_rate=0.0))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+
+    def test_transport_dp_above_serial_fails(self, tmp_path):
+        """The planner re-ranks both DP variants under the exact simulated
+        metric, so the transport-aware result can never be worse."""
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(dp_serial=0.29, dp_transport=0.31))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+
+    def test_mnv2_rows_require_a_transport_dp_win(self, tmp_path):
+        """Acceptance gate: at least one fresh paper-scale row must show
+        the transport-aware DP strictly beating the serial surrogate."""
+        b = _write(tmp_path, "base.json", _payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(key="mnv2_112@7", dp_serial=0.31,
+                                   dp_transport=0.31, win=False))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 1
+        f2 = _write(tmp_path, "fresh2.json",
+                    _search_payload(key="mnv2_112@7", dp_serial=0.31,
+                                    dp_transport=0.29))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f2),
+                                      "--sections", "search"]) == 0
+
+    def test_smoke_rows_do_not_require_a_win(self, tmp_path):
+        """The win requirement applies to paper-scale rows only — the smoke
+        model's blocks are too small for pipelined seams to matter."""
+        b = _write(tmp_path, "base.json", _payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(dp_serial=0.31, dp_transport=0.31,
+                                   win=False))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 0
+
+    def test_wall_clock_fields_informational_only(self, tmp_path):
+        """Search walls are runner wall-clock — a slower runner must not
+        fail the gate while the analytic invariants hold."""
+        base = _search_payload()
+        fresh = _search_payload()
+        for field in ("cold_wall_s", "beam_wall_s", "warm_wall_s",
+                      "cold_replan_wall_s"):
+            fresh["search"]["smoke@8"][field] = 50.0
+        b = _write(tmp_path, "base.json", base)
+        f = _write(tmp_path, "fresh.json", fresh)
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "search"]) == 0
+
+    def test_sections_flag_excludes_search(self, tmp_path):
+        b = _write(tmp_path, "base.json", _search_payload())
+        f = _write(tmp_path, "fresh.json",
+                   _search_payload(ladder=0.04, beam=0.05))
+        assert check_regression.main(["--baseline", str(b),
+                                      "--fresh", str(f),
+                                      "--sections", "rows,peaks"]) == 0
+
+    def test_committed_search_section_holds(self):
+        """The committed baseline's own search rows must satisfy every
+        machine-independent invariant the gate enforces."""
+        doc = json.loads((_ROOT / "BENCH_executor.json").read_text())
+        failures, compared = check_regression.compare(
+            doc, doc, 0.2, sections=("search",))
+        assert compared > 0
+        assert failures == []

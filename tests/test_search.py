@@ -1,0 +1,452 @@
+"""The shared cost-model/search layer (``repro.core.search``) and the
+planner refactor on top of it.
+
+Covers the :class:`CostCache` memo (LRU, counters, parameter-keyed reuse
+across planners and survivor-subset replans), the beam search over worker
+subsets (score never worse than the prefix ladder — property-tested on
+random heterogeneous clusters; ``beam_width=None`` byte-identical to the
+committed ladder plans), the search-budget cap, the transport-aware +
+subset-aware mixing DP extensions, the mixed-axis ``InfeasibleError``
+binding-block details, and the search-stats plumbing through ``Plan``,
+``SessionStats`` and the elastic replan path.
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import small_cnn
+from repro.api import Cluster, InfeasibleError, Objective, Plan, Planner
+from repro.api.planner import SEARCH_MODES
+from repro.core import CostCache, SearchStats, SimConfig, WorkerParams, simulate
+from repro.core.mixed import MixedInfeasible, search_mixed_assignment
+from repro.core.search import (config_fingerprint, prefix_subset_grid,
+                               subset_fingerprint, worker_fingerprint)
+from repro.models import mobilenet_v2_paper, mobilenet_v2_smoke
+
+BENCH = json.loads(
+    (pathlib.Path(__file__).parent.parent / "BENCH_executor.json")
+    .read_text())
+RAM_CAP = 512 * 1024
+
+
+def _objective(**kw):
+    return Objective(minimize="latency", ram_cap_bytes=RAM_CAP, **kw)
+
+
+# ---------------------------------------------------------------------------
+# CostCache / SearchStats / fingerprints
+# ---------------------------------------------------------------------------
+
+class TestCostCache:
+    def test_hit_miss_counters(self):
+        c = CostCache()
+        assert c.get("k") is None
+        c.put("k", 1)
+        assert c.get("k") == 1
+        assert (c.hits, c.misses) == (1, 1)
+
+    def test_get_or_builds_once(self):
+        c = CostCache()
+        calls = []
+        assert c.get_or("k", lambda: calls.append(1) or 42) == 42
+        assert c.get_or("k", lambda: calls.append(1) or 42) == 42
+        assert len(calls) == 1
+
+    def test_lru_eviction(self):
+        c = CostCache(max_entries=2)
+        c.put("a", 1), c.put("b", 2)
+        c.get("a")                      # refresh "a": "b" is now LRU
+        c.put("c", 3)
+        assert c.get("b") is None and c.get("a") == 1 and c.get("c") == 3
+        assert len(c) == 2
+
+    def test_clear_keeps_counters(self):
+        c = CostCache()
+        c.put("a", 1), c.get("a")
+        c.clear()
+        assert len(c) == 0 and c.hits == 1
+
+    def test_validates_capacity(self):
+        with pytest.raises(ValueError):
+            CostCache(max_entries=0)
+
+    def test_fingerprints_are_parameter_keyed(self):
+        a, b = WorkerParams(), WorkerParams()
+        assert a is not b
+        assert worker_fingerprint(a) == worker_fingerprint(b)
+        assert subset_fingerprint([a]) == subset_fingerprint([b])
+        # transport must NOT split cache keys — one evaluation serves both
+        cfg = SimConfig()
+        assert (config_fingerprint(cfg) ==
+                config_fingerprint(dataclasses.replace(
+                    cfg, transport="pipelined")))
+
+
+class TestSearchStats:
+    def test_hit_rate(self):
+        s = SearchStats(candidates_evaluated=4, cache_hits=1, cache_misses=3)
+        assert s.cache_hit_rate == 0.25
+        assert SearchStats().cache_hit_rate == 0.0
+
+    def test_to_dict_round(self):
+        d = SearchStats(candidates_evaluated=3, cache_hits=1, cache_misses=2,
+                        search_wall_s=0.1234567).to_dict()
+        assert d["cache_hit_rate"] == round(1 / 3, 6)
+        assert d["search_wall_s"] == 0.123457
+
+
+class TestPrefixSubsetGrid:
+    def test_disabled(self):
+        assert prefix_subset_grid(8, None) == (None,)
+        assert prefix_subset_grid(1, 3) == (None,)
+
+    def test_geometric_sizes(self):
+        assert prefix_subset_grid(8, 3) == (None, 1, 2, 4)
+        assert prefix_subset_grid(3, 5) == (None, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Objective knobs
+# ---------------------------------------------------------------------------
+
+class TestObjectiveKnobs:
+    def test_validation(self):
+        for kw in (dict(beam_width=0), dict(search_budget=0),
+                   dict(mixed_subsets=-1)):
+            with pytest.raises(ValueError):
+                Objective(**kw)
+
+    def test_round_trip(self):
+        obj = Objective(beam_width=3, search_budget=50, mixed_subsets=2)
+        again = Objective.from_dict(obj.to_dict())
+        assert again == obj
+
+    def test_from_dict_tolerates_missing_knobs(self):
+        obj = Objective.from_dict({"minimize": "latency"})
+        assert obj.beam_width is None and obj.search_budget is None
+        assert obj.mixed_subsets is None
+
+
+# ---------------------------------------------------------------------------
+# ladder exactness: beam_width=None reproduces the committed plans
+# ---------------------------------------------------------------------------
+
+class TestLadderExactness:
+    """``beam_width=None`` + uniform modes must be byte-identical to the
+    committed plan-search outcomes (BENCH planner section)."""
+
+    def _check(self, model, config, k):
+        want = BENCH["planner"][f"{config}@{k}"]
+        planner = Planner(model, Cluster.heterogeneous_demo(k))
+        if not want["feasible"]:
+            with pytest.raises(InfeasibleError) as ei:
+                planner.plan(_objective())
+            assert ei.value.binding_constraint == want["binding"]
+            return
+        plan = planner.plan(_objective())
+        got = dict(plan_latency_s=round(plan.latency_s, 9),
+                   max_peak_ram=int(plan.max_peak_ram),
+                   mode=plan.mode, fusion=plan.fusion,
+                   transport=plan.transport,
+                   overlap_saved_s=round(plan.overlap_saved_s, 9),
+                   n_workers=plan.n_workers)
+        assert got == {k_: want[k_] for k_ in got}
+
+    @pytest.mark.parametrize("k", [1, 3, 8])
+    def test_smoke_configs(self, k):
+        self._check(mobilenet_v2_smoke(), "smoke", k)
+
+    @pytest.mark.parametrize("k", [1, 3])
+    def test_mnv2_112_configs(self, k):
+        self._check(mobilenet_v2_paper(), "mnv2_112", k)
+
+
+# ---------------------------------------------------------------------------
+# beam search
+# ---------------------------------------------------------------------------
+
+class TestBeamSearch:
+    def test_full_width_beats_ladder_on_demo(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(8)
+        ladder = Planner(model, cluster).plan(_objective())
+        beam = Planner(model, cluster).plan(_objective(beam_width=4))
+        assert beam.score <= ladder.score
+        # the demo cluster is heterogeneous enough that the beam finds a
+        # strictly better non-prefix subset — keep this strict so the beam
+        # phase cannot silently degenerate into the ladder
+        assert beam.score < ladder.score
+        assert beam.search_stats["subsets_explored"] > 8
+
+    def test_budget_caps_beam_misses_not_ladder(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(8)
+        planner = Planner(model, cluster)
+        ladder_misses = 32          # 8 prefixes x 4 (mode, fusion) points
+        planner.plan(_objective(beam_width=4, search_budget=8))
+        stats = planner.last_stats
+        assert stats.cache_misses <= ladder_misses + 8
+        # the ladder itself always completes (8 subsets), budget or not
+        assert stats.subsets_explored >= 8
+
+    def test_warm_cache_widens_budgeted_beam(self):
+        """Budget counts cache *misses*: a warm cache lets the same budget
+        explore at least as many subsets as a cold one."""
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(8)
+        cold = Planner(model, cluster)
+        cold.plan(_objective(beam_width=4, search_budget=16))
+        warm = Planner(model, cluster, cache=cold.cache)
+        warm.plan(_objective(beam_width=4, search_budget=16))
+        assert (warm.last_stats.subsets_explored
+                >= cold.last_stats.subsets_explored)
+        assert warm.last_stats.cache_hits > 0
+
+
+@st.composite
+def random_clusters(draw):
+    n = draw(st.integers(2, 6))
+    workers = tuple(
+        WorkerParams(f_mhz=draw(st.floats(50.0, 400.0)),
+                     d_s_per_kb=draw(st.floats(0.0, 0.02)),
+                     b_kb_s=draw(st.floats(10.0, 200.0)))
+        for _ in range(n))
+    return Cluster(workers, name=f"rand[{n}]")
+
+
+@given(random_clusters())
+@settings(max_examples=15, deadline=None)
+def test_property_beam_never_worse_than_ladder(cluster):
+    """Beam at full width on random heterogeneous clusters: the beam
+    evaluates every ladder prefix too, so its plan score is <= the
+    ladder's for the same objective (HYPOTHESIS_PROFILE=ci in CI)."""
+    model = small_cnn()
+    obj = Objective(minimize="latency")
+    cache = CostCache()     # shared: the property is about scores, and the
+    ladder = Planner(model, cluster, cache=cache).plan(obj)
+    beam = Planner(model, cluster, cache=cache).plan(
+        dataclasses.replace(obj, beam_width=cluster.n_workers))
+    assert beam.score <= ladder.score + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# memoized replans
+# ---------------------------------------------------------------------------
+
+class TestMemoizedReplans:
+    def test_same_topology_is_all_hits(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(4)
+        first = Planner(model, cluster)
+        plan_a = first.plan(_objective())
+        again = Planner(model, cluster, cache=first.cache)
+        plan_b = again.plan(_objective())
+        assert again.last_stats.cache_hit_rate == 1.0
+        assert again.last_stats.cache_misses == 0
+        assert plan_b.latency_s == plan_a.latency_s
+        assert again.last_stats.search_wall_s < first.last_stats.search_wall_s
+
+    def test_survivor_subset_replan_hits(self):
+        """Losing one worker re-derives only what the old search did not
+        already cost: keys fingerprint worker parameters, not indices."""
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(8)
+        cold = Planner(model, cluster)
+        cold.plan(_objective())
+        survivors = Cluster(cluster.workers[:-1], name="survivors")
+        warm = Planner(model, survivors, cache=cold.cache)
+        warm.plan(_objective())
+        assert warm.last_stats.cache_hits > 0
+        assert (warm.last_stats.cache_misses
+                < warm.last_stats.candidates_evaluated)
+
+    def test_cache_is_objective_agnostic_for_uniform_modes(self):
+        """A comm_bytes search reuses a latency search's evaluations —
+        scoring is recomputed from the cached per-transport metrics."""
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(3)
+        a = Planner(model, cluster)
+        a.plan(_objective())
+        b = Planner(model, cluster, cache=a.cache)
+        b.plan(Objective(minimize="comm_bytes", ram_cap_bytes=RAM_CAP))
+        assert b.last_stats.cache_hit_rate == 1.0
+
+    def test_elastic_cluster_replans_warm(self):
+        """The ElasticCluster owns one cache across replans: a kill/rejoin
+        cycle re-plans with hit rate > 0 and a lower search wall than its
+        own cold initial search."""
+        from repro.runtime.elastic import ElasticCluster
+        model = mobilenet_v2_smoke()
+        ec = ElasticCluster(
+            model, [WorkerParams() for _ in range(4)],
+            objective=Objective(modes=("spatial",)),
+            heartbeat_timeout=1e9, clock=lambda: 0.0)
+        cold = dict(ec.last_search_stats)
+        assert cold["cache_hit_rate"] == 0.0
+        ec.mark_failed(0)
+        assert ec.check() is True
+        warm = ec.last_search_stats
+        assert warm["cache_hit_rate"] > 0.0
+        assert warm["search_wall_s"] < cold["search_wall_s"]
+        ec.rejoin(0)
+        assert ec.check() is True
+        # rejoin restores the original topology: every candidate cached
+        assert ec.last_search_stats["cache_hit_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# transport-aware + subset-aware mixing DP
+# ---------------------------------------------------------------------------
+
+class TestMixingDP:
+    def _setup(self, n=6):
+        model = small_cnn()
+        workers = [WorkerParams(f_mhz=100.0 * (1 + w % 3),
+                                d_s_per_kb=0.004 * (w % 4),
+                                b_kb_s=40.0 + 30.0 * (w % 2))
+                   for w in range(n)]
+        ratings = np.linspace(1.0, 2.0, n)
+        return model, workers, ratings
+
+    def test_transport_dp_never_worse_on_pipelined(self):
+        """Simulated pipelined latency of the transport-aware DP's plan is
+        <= the serial-surrogate DP's (the planner re-ranks both)."""
+        from repro.api.plan import build_split_plan
+        model, workers, ratings = self._setup()
+        cfg = SimConfig()
+        pcfg = dataclasses.replace(cfg, transport="pipelined")
+
+        def pipe_latency(search):
+            split = build_split_plan(model, ratings, "mixed",
+                                     assignment=search.assignment,
+                                     block_workers=search.block_workers)
+            return simulate(model, workers, ratings, pcfg,
+                            plan=split).total_time
+
+        s_serial = search_mixed_assignment(model, workers, ratings, cfg)
+        s_pipe = search_mixed_assignment(model, workers, ratings, cfg,
+                                         transport="pipelined")
+        assert (min(pipe_latency(s_serial), pipe_latency(s_pipe))
+                <= pipe_latency(s_serial))
+
+    def test_transport_validated(self):
+        model, workers, ratings = self._setup(2)
+        with pytest.raises(ValueError, match="transport"):
+            search_mixed_assignment(model, workers, ratings,
+                                    transport="warp")
+
+    def test_subset_dp_never_worse_serial(self):
+        """Per-block subsets strictly widen the DP state space, so the
+        serial-exact optimum can only improve."""
+        model, workers, ratings = self._setup()
+        full = search_mixed_assignment(model, workers, ratings)
+        sub = search_mixed_assignment(model, workers, ratings,
+                                      subset_choices=(None, 1, 2, 4))
+        assert sub.predicted_latency_s <= full.predicted_latency_s + 1e-15
+
+    def test_subset_dp_splits_validate(self):
+        """A subset-DP assignment builds a split whose peak matches the
+        full-width worker layout (empty shards for excluded workers)."""
+        from repro.api.plan import build_split_plan
+        from repro.core import peak_ram_per_worker
+        model, workers, ratings = self._setup()
+        res = search_mixed_assignment(model, workers, ratings,
+                                      subset_choices=(None, 1, 2))
+        split = build_split_plan(model, ratings, "mixed",
+                                 assignment=res.assignment,
+                                 block_workers=res.block_workers)
+        assert split.n_workers == len(workers)
+        assert peak_ram_per_worker(split).shape == (len(workers),)
+
+    def test_planner_mixed_subsets_knob(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(4)
+        base = Planner(model, cluster).plan(
+            _objective(modes=SEARCH_MODES))
+        sub = Planner(model, cluster).plan(
+            _objective(modes=SEARCH_MODES, mixed_subsets=2))
+        assert sub.score <= base.score + 1e-15
+        if sub.mode == "mixed" and sub.block_workers is not None:
+            assert len(sub.block_workers) == len(sub.assignment)
+
+    def test_plan_json_round_trips_block_workers(self):
+        model = mobilenet_v2_smoke()
+        cluster = Cluster.heterogeneous_demo(4)
+        plan = Planner(model, cluster).plan(
+            _objective(modes=("mixed",), mixed_subsets=2))
+        again = Plan.from_json(plan.to_json(), model)
+        assert again.block_workers == plan.block_workers
+        assert again.search_stats == plan.search_stats
+        assert again.objective.mixed_subsets == 2
+
+
+# ---------------------------------------------------------------------------
+# mixed-axis infeasibility reporting
+# ---------------------------------------------------------------------------
+
+class TestMixedInfeasible:
+    def _tiny_caps_error(self):
+        model, workers = small_cnn(), [WorkerParams(), WorkerParams()]
+        with pytest.raises(MixedInfeasible) as ei:
+            search_mixed_assignment(
+                model, workers, np.ones(2),
+                ram_caps=np.array([64.0, 64.0]))
+        return ei.value
+
+    def test_exception_carries_binding_block(self):
+        e = self._tiny_caps_error()
+        assert e.block >= 0 and e.peak_bytes > e.cap_bytes
+        assert e.best_assignment is not None
+        assert len(e.block_indices) >= 1
+
+    def test_planner_details_carry_dp_report(self):
+        """InfeasibleError for the mixed axis reports the DP's best
+        cap-ignoring assignment and the binding block, not uniform-mode
+        proxies."""
+        model = mobilenet_v2_smoke()
+        cluster = Cluster(
+            (WorkerParams(ram_bytes=2048), WorkerParams(ram_bytes=2048)))
+        planner = Planner(model, cluster)
+        with pytest.raises(InfeasibleError) as ei:
+            planner.plan(Objective(modes=("mixed",), ram_cap_bytes=2048))
+        err = ei.value
+        assert err.binding_constraint == "ram_cap"
+        mixed = err.details["mixed"]
+        assert mixed["best_infeasible_assignment"] is not None
+        assert mixed["peak_bytes"] > mixed["cap_bytes"]
+        assert mixed["block"] >= 0 and mixed["block_layers"]
+
+
+# ---------------------------------------------------------------------------
+# telemetry plumbing
+# ---------------------------------------------------------------------------
+
+class TestTelemetry:
+    def test_plan_report_has_search_line(self):
+        model = mobilenet_v2_smoke()
+        plan = Planner(model, Cluster.heterogeneous_demo(3)).plan(_objective())
+        assert plan.search_stats["candidates_evaluated"] > 0
+        assert "search:" in plan.report()
+        assert "cache hit rate" in plan.report()
+
+    def test_session_stats_carry_search_fields(self):
+        model = mobilenet_v2_smoke()
+        plan = Planner(model, Cluster.heterogeneous_demo(3)).plan(_objective())
+        stats = plan.compile(precision="float").stats()
+        assert (stats.search_candidates_evaluated
+                == plan.search_stats["candidates_evaluated"])
+        assert stats.search_wall_s == plan.search_stats["search_wall_s"]
+
+    def test_bare_splitplan_session_defaults(self):
+        from repro.api.session import Session
+        from repro.core import split_model
+        model = mobilenet_v2_smoke()
+        stats = Session(split_model(model, [1.0]),
+                        precision="float").stats()
+        assert stats.search_candidates_evaluated == 0
+        assert np.isnan(stats.search_wall_s)
